@@ -1,0 +1,35 @@
+"""Shared benchmark utilities."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def time_call(fn: Callable, *args, repeats: int = 3, warmup: int = 1,
+              **kw) -> float:
+    """Median wall-time of fn(*args) in seconds (block_until_ready aware)."""
+    import jax
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out) if hasattr(out, "block_until_ready") \
+            or isinstance(out, (tuple, list, dict)) else None
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        try:
+            jax.block_until_ready(out)
+        except Exception:
+            pass
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> tuple:
+    return (name, us_per_call, derived)
+
+
+def print_rows(rows) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")

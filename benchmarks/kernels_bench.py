@@ -1,0 +1,50 @@
+"""Pallas-kernel micro-benchmarks (interpret mode on CPU = correctness
+path; wall times are indicative only — real perf numbers come from the
+roofline terms of the dry-run HLO, see §Roofline)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.fixed_point import to_fixed
+from repro.core.lut import build_sigmoid_lut
+from repro.kernels.flash_attention.ops import mha
+from repro.kernels.kmeans_assign.ops import assign_and_accumulate
+from repro.kernels.lut_activation.ops import lut_sigmoid
+from repro.kernels.quant_matmul.ops import quant_matmul
+from repro.kernels.quant_matmul.ref import quant_matmul_ref
+from .common import row, time_call
+
+
+def run():
+    rows = []
+    rng = np.random.RandomState(0)
+
+    a = jnp.asarray(rng.randint(-128, 128, (256, 512)), jnp.int8)
+    b = jnp.asarray(rng.randint(-128, 128, (512, 256)), jnp.int8)
+    sa = jnp.float32(0.01)
+    sb = jnp.float32(0.02)
+    t_k = time_call(quant_matmul, a, b, sa, sb, use_pallas=True)
+    t_r = time_call(quant_matmul, a, b, sa, sb, use_pallas=False)
+    rows.append(row("kern_quant_matmul_interp_us", t_k * 1e6,
+                    f"xla_ref_us={t_r * 1e6:.0f}"))
+
+    lut = build_sigmoid_lut()
+    xq = to_fixed(jnp.asarray(rng.uniform(-20, 20, 32768), jnp.float32), 10)
+    t_v = time_call(lut_sigmoid, xq, lut, placement="vmem")
+    t_h = time_call(lut_sigmoid, xq, lut, placement="hbm")
+    rows.append(row("kern_lut_sigmoid_vmem_interp_us", t_v * 1e6,
+                    f"hbm_us={t_h * 1e6:.0f}"))
+
+    x = jnp.asarray(rng.randint(-2047, 2048, (4096, 16)), jnp.int16)
+    c = jnp.asarray(rng.randint(-2047, 2048, (16, 16)), jnp.int16)
+    t = time_call(assign_and_accumulate, x, c, use_pallas=True)
+    rows.append(row("kern_kmeans_assign_interp_us", t * 1e6, ""))
+
+    q = jnp.asarray(rng.normal(0, 1, (1, 4, 256, 64)), jnp.float32)
+    t_f = time_call(mha, q, q, q, causal=True, use_pallas=True,
+                    bq=128, bk=128)
+    t_x = time_call(mha, q, q, q, causal=True, use_pallas=False)
+    rows.append(row("kern_flash_attn_interp_us", t_f * 1e6,
+                    f"xla_ref_us={t_x * 1e6:.0f}"))
+    return rows

@@ -1,0 +1,66 @@
+"""Beyond-paper: the paper's techniques inside the LM stack.
+
+Measures reduced-config LM train-step wall time and loss parity for:
+  baseline            bf16/f32 dense
+  +quantize_dense     int8 weights (LIN-HYB analogue)
+  +lut_activations    LUT SiLU (LOG-LUT analogue)
+(the CPU wall-clock is indicative; the dry-run roofline carries the
+TPU-relevant numbers — this bench verifies functional parity + cost of
+the quantization path end to end).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.data.tokens import MarkovCorpus
+from repro.models.api import Model
+from repro.optim.adam import AdamW
+from repro.train.loop import make_train_step
+from .common import row
+
+
+def _train(cfg, steps=8, batch=8, seq=64):
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt = AdamW(lr=1e-3)
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(model, opt))
+    corpus = MarkovCorpus(cfg.vocab_size, seed=0)
+    batch_d = jax.tree_util.tree_map(jnp.asarray, corpus.batch(batch, seq))
+    # warmup/compile
+    params, opt_state, m = step(params, opt_state, batch_d)
+    t0 = time.perf_counter()
+    losses = []
+    for _ in range(steps):
+        batch_d = jax.tree_util.tree_map(jnp.asarray,
+                                         corpus.batch(batch, seq))
+        params, opt_state, m = step(params, opt_state, batch_d)
+        losses.append(float(m["loss"]))
+    dt = (time.perf_counter() - t0) / steps
+    return dt, losses
+
+
+def run():
+    rows = []
+    base = get_config("granite-3-8b").reduced()
+    variants = {
+        "baseline": base,
+        "quant_dense": dataclasses.replace(base, quantize_dense=True),
+        "lut_act": dataclasses.replace(base, lut_activations=True),
+        "quant+lut": dataclasses.replace(base, quantize_dense=True,
+                                         lut_activations=True),
+    }
+    ref_loss = None
+    for name, cfg in variants.items():
+        dt, losses = _train(cfg)
+        if ref_loss is None:
+            ref_loss = losses[-1]
+        rows.append(row(f"lm_ablation_{name}_step_us", dt * 1e6,
+                        f"final_loss={losses[-1]:.3f};"
+                        f"delta_vs_base={losses[-1] - ref_loss:+.3f}"))
+    return rows

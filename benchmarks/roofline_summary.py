@@ -1,0 +1,48 @@
+"""Roofline summary rows from the dry-run results (deliverable (g) in the
+benchmark artifact).  Reads experiments/dryrun_results.json; regenerate
+with `python -m repro.launch.dryrun` + `python -m repro.launch.roofline`.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from .common import row
+
+
+def run():
+    path = "experiments/dryrun_results.json"
+    if not os.path.exists(path):
+        return [row("roofline_summary_missing", -1,
+                    "run python -m repro.launch.dryrun first")]
+    with open(path) as f:
+        results = json.load(f)
+    from repro.launch.roofline import terms
+
+    rows = []
+    n_ok = n_skip = 0
+    best = (None, 0.0)
+    for key in sorted(results):
+        parts = key.split("|")
+        if len(parts) != 3:
+            continue  # --mesh-shape experiment entries
+        arch, shape, mesh = parts
+        e = results[key]
+        if e["status"] == "skipped":
+            n_skip += 1
+            continue
+        if e["status"] != "ok":
+            rows.append(row(f"dryrun_{key}", -1, "ERROR"))
+            continue
+        n_ok += 1
+        t = terms(e, e.get("n_devices", 256), arch, shape)
+        step_us = t["step_time_s"] * 1e6
+        rows.append(row(
+            f"roofline_{arch}_{shape}_{mesh}_step_us", step_us,
+            f"bound={t['bound']};frac={t['roofline_fraction']:.3f};"
+            f"model_over_hlo={t['useful_ratio']:.3f}"))
+        if mesh == "1pod" and t["roofline_fraction"] > best[1]:
+            best = (key, t["roofline_fraction"])
+    rows.append(row("dryrun_cells_ok", n_ok, f"skipped={n_skip};errors=0"))
+    rows.append(row("best_roofline_fraction", best[1], str(best[0])))
+    return rows

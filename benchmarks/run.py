@@ -1,0 +1,49 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (plus section markers).
+  PYTHONPATH=src python -m benchmarks.run [--only fig06]
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import time
+
+MODULES = [
+    "benchmarks.fig06_07_quality",      # paper Fig. 6/7 (quality)
+    "benchmarks.fig08_10_kernel_time",  # paper Fig. 8/9/10 (1-core perf)
+    "benchmarks.fig11_12_scaling",      # paper Fig. 11/12 (weak/strong)
+    "benchmarks.fig13_17_compare",      # paper Fig. 13-17, Tab. 5-7
+    "benchmarks.kernels_bench",         # Pallas kernels (interpret)
+    "benchmarks.lm_ablation",           # beyond-paper LM ablations
+    "benchmarks.serve_bench",           # serving throughput
+    "benchmarks.roofline_summary",      # dry-run roofline terms (§Perf)
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="substring filter")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    t_all = time.time()
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        t0 = time.time()
+        mod = importlib.import_module(mod_name)
+        try:
+            rows = mod.run()
+        except Exception as e:  # noqa: BLE001 — keep the harness going
+            print(f"{mod_name},-1,ERROR:{type(e).__name__}:{e}")
+            continue
+        for name, us, derived in rows:
+            print(f"{name},{us:.4f},{derived}")
+        print(f"# {mod_name} done in {time.time() - t0:.1f}s",
+              file=sys.stderr)
+    print(f"# total {time.time() - t_all:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

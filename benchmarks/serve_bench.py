@@ -1,0 +1,29 @@
+"""Serving throughput (slot engine, reduced LM, CPU-indicative)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_config
+from repro.models.api import Model
+from repro.serve.engine import Request, ServeEngine
+from .common import row
+
+
+def run():
+    cfg = get_config("granite-3-8b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, n_slots=4, max_seq=64)
+    rng = np.random.RandomState(0)
+    reqs = [Request(prompt=rng.randint(0, cfg.vocab_size, 8)
+                    .astype(np.int32), max_new_tokens=12)
+            for _ in range(6)]
+    t0 = time.perf_counter()
+    done = engine.run(reqs)
+    dt = time.perf_counter() - t0
+    total = sum(len(r.output) for r in done)
+    return [row("serve_engine_tok_per_s", total / dt,
+                f"requests={len(done)};slots=4;cpu_indicative")]

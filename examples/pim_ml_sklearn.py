@@ -1,0 +1,39 @@
+"""The paper's scikit-learn estimator interface (§4) in action.
+
+  PYTHONPATH=src python examples/pim_ml_sklearn.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.core.estimators import (PimDecisionTreeClassifier, PimKMeans,
+                                   PimLinearRegression,
+                                   PimLogisticRegression)
+from repro.data.synthetic import (make_blobs, make_classification,
+                                  make_linear_dataset)
+
+
+def main():
+    X, y, _ = make_linear_dataset(4096, 16, task="regression", seed=0)
+    reg = PimLinearRegression(version="bui", n_iters=400).fit(X, y)
+    print(f"PimLinearRegression(bui)        R^2 = {reg.score(X, y):.4f}")
+
+    Xc, yc, _ = make_linear_dataset(4096, 16, seed=1)
+    clf = PimLogisticRegression(version="bui_lut", n_iters=400).fit(Xc, yc)
+    print(f"PimLogisticRegression(bui_lut)  acc = {clf.score(Xc, yc):.4f}")
+    print(f"  predict_proba[:2] = {np.round(clf.predict_proba(Xc[:2]), 3)}")
+
+    Xt, yt = make_classification(20_000, 16, seed=2, class_sep=1.5)
+    tree = PimDecisionTreeClassifier(max_depth=8).fit(Xt, yt)
+    print(f"PimDecisionTreeClassifier       acc = {tree.score(Xt, yt):.4f}")
+
+    Xb, _, _ = make_blobs(10_000, 8, centers=8, seed=3)
+    km = PimKMeans(n_clusters=8, n_init=2).fit(Xb)
+    print(f"PimKMeans                       inertia = {km.inertia_:.3e}, "
+          f"centers {km.cluster_centers_.shape}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,301 @@
+"""Decision tree training on the PIM system (paper §3.3).
+
+Extremely randomized trees [Geurts'06] for classification: at each step, one
+uniform-random threshold per feature is drawn inside the leaf's [min, max]
+and the best (feature, threshold) pair by Gini impurity makes the split.
+
+Host/PIM split exactly as the paper describes:
+  - the HOST owns the tree, the active frontier, and the splitting
+    decisions; it issues three commands to the PIM cores:
+      * min-max        (per leaf x feature, to draw candidate thresholds)
+      * split-evaluate (partial per-class below-threshold counts -> Gini)
+      * split-commit   (points move to their child leaf)
+  - the PIM CORES own immutable shards of the training points plus a
+    per-point ``leaf_id`` array.
+
+Layout adaptation (paper Fig. 5): the DPU implementation physically reorders
+feature values so each leaf's points are contiguous, turning split-evaluate
+into streaming MRAM->WRAM DMA.  The JAX semantic model keeps a leaf_id
+array and uses segment reductions, which is functionally identical; the
+*physical* streaming layout is realized in the Pallas kernel
+(kernels/gini_split) whose grid streams feature blocks HBM->VMEM, and its
+benefit is captured by the DPU cost model.  Commit updates are O(n) gathers
+(the JAX analogue of the paper's "partial reorder").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .pim import PimSystem
+
+
+@dataclasses.dataclass
+class TreeConfig:
+    max_depth: int = 10
+    n_classes: int = 2
+    min_samples_split: int = 2
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Tree:
+    """Array-encoded binary tree (host-side)."""
+
+    feature: np.ndarray    # int32 [max_nodes], -1 = leaf
+    threshold: np.ndarray  # float32 [max_nodes]
+    left: np.ndarray       # int32 [max_nodes]
+    right: np.ndarray      # int32 [max_nodes]
+    leaf_class: np.ndarray  # int32 [max_nodes]
+    depth: np.ndarray      # int32 [max_nodes]
+    n_nodes: int
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        """Vectorized host-side inference."""
+        X = np.asarray(X, np.float32)
+        node = np.zeros(X.shape[0], np.int32)
+        for _ in range(int(self.depth.max()) + 1):
+            f = self.feature[node]
+            is_split = f >= 0
+            if not is_split.any():
+                break
+            fx = X[np.arange(X.shape[0]), np.maximum(f, 0)]
+            go_left = fx <= self.threshold[node]
+            nxt = np.where(go_left, self.left[node], self.right[node])
+            node = np.where(is_split, nxt, node)
+        return self.leaf_class[node]
+
+
+# ---------------------------------------------------------------------------
+# PIM-core kernels (pure functions of the core-resident shard).
+# ---------------------------------------------------------------------------
+
+def make_minmax_kernel(max_nodes: int):
+    """Per-core per-leaf min/max of every feature (min-max command).
+
+    Returns ("neg_min", "max") encoded so that the cross-core *sum* reduce
+    of PimSystem cannot be used — min/max need max-reduce.  We encode via
+    one-hot segment ops and let the host combine with np.minimum/np.maximum
+    (ReduceVia.HOST semantics; on fabric this is a psum of masked +-inf).
+    """
+    BIG = np.float32(3.4e38)
+
+    def _kernel(Xc, leaf_id, valid, _dummy):
+        # segment min/max over leaves: (n_pc, F) -> (max_nodes, F)
+        lid = jnp.where(valid, leaf_id, max_nodes - 1)
+        mins = jax.ops.segment_min(
+            jnp.where(valid[:, None], Xc, BIG), lid,
+            num_segments=max_nodes)
+        maxs = jax.ops.segment_max(
+            jnp.where(valid[:, None], Xc, -BIG), lid,
+            num_segments=max_nodes)
+        return {"min": mins, "max": maxs}
+    return _kernel
+
+
+def make_split_eval_kernel(max_nodes: int, n_classes: int):
+    """split-evaluate: per (leaf, feature, class) below-threshold counts +
+    per (leaf, class) totals.  One random threshold per feature (ERT)."""
+
+    def _kernel(Xc, yc, leaf_id, valid, thresholds):
+        # thresholds: (max_nodes, F) candidate per leaf x feature
+        t = thresholds[leaf_id]                       # (n_pc, F)
+        below = (Xc <= t).astype(jnp.int32)           # (n_pc, F)
+        seg = leaf_id * n_classes + yc                # (n_pc,)
+        seg = jnp.where(valid, seg, max_nodes * n_classes - 1)
+        below = jnp.where(valid[:, None], below, 0)
+        counts = jax.ops.segment_sum(
+            below, seg, num_segments=max_nodes * n_classes)
+        totals = jax.ops.segment_sum(
+            jnp.where(valid, 1, 0), seg,
+            num_segments=max_nodes * n_classes)
+        return {"below": counts.reshape(max_nodes, n_classes, -1),
+                "total": totals.reshape(max_nodes, n_classes)}
+    return _kernel
+
+
+def _commit_kernel(Xc, leaf_id, split_feature, split_thresh, left_id,
+                   right_id):
+    """split-commit: reassign each point to its child leaf (paper Fig. 5's
+    reorder, realized as a leaf_id rewrite — see module docstring)."""
+    f = split_feature[leaf_id]                        # (n_pc,)
+    has_split = f >= 0
+    fx = jnp.take_along_axis(
+        Xc, jnp.maximum(f, 0)[:, None], axis=1)[:, 0]
+    go_left = fx <= split_thresh[leaf_id]
+    child = jnp.where(go_left, left_id[leaf_id], right_id[leaf_id])
+    return jnp.where(has_split, child, leaf_id)
+
+
+# ---------------------------------------------------------------------------
+# Host-side Gini arithmetic.
+# ---------------------------------------------------------------------------
+
+def gini_score(below: np.ndarray, total: np.ndarray) -> np.ndarray:
+    """Weighted Gini impurity of candidate splits.
+
+    below: (L, C, F) class counts on the left side; total: (L, C).
+    Returns (L, F) score (lower is better).
+    """
+    below = below.astype(np.float64)
+    total = total.astype(np.float64)[:, :, None]       # (L, C, 1)
+    above = total - below
+    nl = below.sum(axis=1)                             # (L, F)
+    nr = above.sum(axis=1)
+    n = np.maximum(nl + nr, 1e-9)
+
+    def side_gini(counts, m):
+        m_safe = np.maximum(m, 1e-9)[:, None, :]
+        p = counts / m_safe
+        return 1.0 - (p * p).sum(axis=1)               # (L, F)
+
+    gl = side_gini(below, nl)
+    gr = side_gini(above, nr)
+    return (nl * gl + nr * gr) / n
+
+
+def train(X: np.ndarray, y: np.ndarray, pim: PimSystem,
+          cfg: Optional[TreeConfig] = None) -> Tree:
+    cfg = cfg or TreeConfig()
+    rng = np.random.RandomState(cfg.seed)
+    n, nf = X.shape
+    max_nodes = 2 ** (cfg.max_depth + 2)
+
+    Xs = pim.shard_rows(X.astype(np.float32))
+    ys = pim.shard_rows(y.astype(np.int32))
+    valid = pim.row_validity_mask(n)
+    leaf_id = jnp.zeros(valid.shape, jnp.int32)  # all points in root
+
+    feature = np.full(max_nodes, -1, np.int32)
+    threshold = np.zeros(max_nodes, np.float32)
+    left = np.zeros(max_nodes, np.int32)
+    right = np.zeros(max_nodes, np.int32)
+    leaf_class = np.zeros(max_nodes, np.int32)
+    depth = np.zeros(max_nodes, np.int32)
+    n_nodes = 1
+    frontier = [0]
+
+    minmax_k = make_minmax_kernel(max_nodes)
+    eval_k = make_split_eval_kernel(max_nodes, cfg.n_classes)
+
+    while frontier:
+        # ---- min-max command (host draws ERT thresholds) -----------------
+        mm = pim.map_reduce_custom(
+            minmax_k, (Xs, leaf_id, valid), (jnp.int32(0),),
+            reduce={"min": "min", "max": "max"})
+        mins, maxs = np.asarray(mm["min"]), np.asarray(mm["max"])
+        ok = mins <= maxs  # leaves that actually contain points
+        span = np.where(ok, maxs - mins, 0.0)
+        base = np.where(ok, mins, 0.0)
+        thresholds = np.asarray(
+            rng.uniform(0.0, 1.0, size=(max_nodes, nf)), np.float32)
+        thresholds = (base + thresholds * span).astype(np.float32)
+
+        # ---- split-evaluate command --------------------------------------
+        part = pim.map_reduce(
+            eval_k, (Xs, ys, leaf_id, valid),
+            (jnp.asarray(thresholds),))
+        below = np.asarray(part["below"])   # (L, C, F)
+        total = np.asarray(part["total"])   # (L, C)
+        score = gini_score(below, total)    # (L, F)
+
+        # ---- host decides splits ----------------------------------------
+        split_feature = np.full(max_nodes, -1, np.int32)
+        split_thresh = np.zeros(max_nodes, np.float32)
+        left_id = np.zeros(max_nodes, np.int32)
+        right_id = np.zeros(max_nodes, np.int32)
+        new_frontier = []
+        for leaf in frontier:
+            counts = total[leaf]
+            n_leaf = int(counts.sum())
+            leaf_class[leaf] = int(counts.argmax())
+            if (n_leaf < cfg.min_samples_split
+                    or (counts > 0).sum() <= 1
+                    or depth[leaf] >= cfg.max_depth
+                    or n_nodes + 2 > max_nodes):
+                continue
+            best_f = int(score[leaf].argmin())
+            nl = int(below[leaf, :, best_f].sum())
+            if nl == 0 or nl == n_leaf:      # degenerate threshold
+                continue
+            li, ri = n_nodes, n_nodes + 1
+            n_nodes += 2
+            feature[leaf] = best_f
+            threshold[leaf] = thresholds[leaf, best_f]
+            left[leaf], right[leaf] = li, ri
+            depth[li] = depth[ri] = depth[leaf] + 1
+            # children inherit majority class until refined
+            leaf_class[li] = leaf_class[ri] = leaf_class[leaf]
+            split_feature[leaf] = best_f
+            split_thresh[leaf] = thresholds[leaf, best_f]
+            left_id[leaf], right_id[leaf] = li, ri
+            new_frontier += [li, ri]
+
+        if not new_frontier:
+            break
+
+        # ---- split-commit command ----------------------------------------
+        leaf_id = pim.map_elementwise(
+            _commit_kernel, (Xs, leaf_id),
+            (jnp.asarray(split_feature), jnp.asarray(split_thresh),
+             jnp.asarray(left_id), jnp.asarray(right_id)))
+        frontier = new_frontier
+
+    return Tree(feature, threshold, left, right, leaf_class, depth, n_nodes)
+
+
+def train_cpu_baseline(X: np.ndarray, y: np.ndarray,
+                       cfg: Optional[TreeConfig] = None) -> Tree:
+    """CPU comparison point: the same ERT algorithm, plain numpy (the
+    paper's CPU baseline is sklearn CART; sklearn is unavailable offline —
+    recorded in DESIGN.md.  Accuracy parity bands are asserted instead)."""
+    cfg = cfg or TreeConfig()
+    rng = np.random.RandomState(cfg.seed + 1)
+    n, nf = X.shape
+    max_nodes = 2 ** (cfg.max_depth + 2)
+    X = np.asarray(X, np.float32)
+    y = np.asarray(y, np.int32)
+
+    feature = np.full(max_nodes, -1, np.int32)
+    threshold = np.zeros(max_nodes, np.float32)
+    left = np.zeros(max_nodes, np.int32)
+    right = np.zeros(max_nodes, np.int32)
+    leaf_class = np.zeros(max_nodes, np.int32)
+    depth = np.zeros(max_nodes, np.int32)
+    n_nodes = 1
+    # (leaf, row-index array) worklist
+    work = [(0, np.arange(n))]
+    while work:
+        leaf, idx = work.pop()
+        yy = y[idx]
+        counts = np.bincount(yy, minlength=cfg.n_classes)
+        leaf_class[leaf] = int(counts.argmax())
+        if (idx.size < cfg.min_samples_split or (counts > 0).sum() <= 1
+                or depth[leaf] >= cfg.max_depth or n_nodes + 2 > max_nodes):
+            continue
+        Xl = X[idx]
+        mins, maxs = Xl.min(0), Xl.max(0)
+        ts = mins + rng.uniform(0, 1, nf).astype(np.float32) * (maxs - mins)
+        below = Xl <= ts                                  # (m, F)
+        onehot = np.eye(cfg.n_classes, dtype=np.float64)[yy]  # (m, C)
+        bc = onehot.T @ below                             # (C, F)
+        score = gini_score(bc[None].transpose(0, 1, 2),
+                           counts[None].astype(np.float64))[0]
+        best_f = int(score.argmin())
+        mask = below[:, best_f]
+        if mask.all() or not mask.any():
+            continue
+        li, ri = n_nodes, n_nodes + 1
+        n_nodes += 2
+        feature[leaf] = best_f
+        threshold[leaf] = ts[best_f]
+        left[leaf], right[leaf] = li, ri
+        depth[li] = depth[ri] = depth[leaf] + 1
+        leaf_class[li] = leaf_class[ri] = leaf_class[leaf]
+        work.append((li, idx[mask]))
+        work.append((ri, idx[~mask]))
+    return Tree(feature, threshold, left, right, leaf_class, depth, n_nodes)

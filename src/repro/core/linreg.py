@@ -1,0 +1,191 @@
+"""Linear regression with gradient descent on the PIM system (paper §3.1).
+
+Four versions, exactly the paper's ladder of optimizations:
+  LIN-FP32   32-bit float training data and arithmetic (emulated on DPUs —
+             native on TPU, so this doubles as the CPU/GPU-style baseline).
+  LIN-INT32  32-bit fixed-point (Q. frac_bits) data + arithmetic.
+  LIN-HYB    hybrid precision: 8-bit inputs x 16-bit weights, 16-bit dot
+             products, 32-bit gradients.
+  LIN-BUI    same numerics as LIN-HYB (paper: "same behavior, since they
+             use the same datatypes") + the custom built-in multiply, which
+             only changes the instruction count -> modeled by DpuCostModel.
+
+Workload distribution mirrors §3.1: rows are partitioned across PIM cores;
+each core computes partial gradients over its resident shard; the host
+reduces partials, updates w, and re-broadcasts it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fixed_point import (_shift_round, fx_dot, fx_dot_hybrid, from_fixed,
+                          to_fixed)
+from .pim import PimSystem
+
+VERSIONS = ("fp32", "int32", "hyb", "bui")
+
+
+@dataclasses.dataclass
+class GdConfig:
+    version: str = "fp32"
+    n_iters: int = 500
+    lr: float = 0.1
+    frac_bits: int = 10      # Q format for INT32 data / all fixed-point grads
+    x8_frac: int = 7         # Q format of 8-bit inputs (HYB/BUI)
+    w16_frac: int = 8        # Q format of 16-bit weights (HYB/BUI)
+    record_every: int = 0    # 0 = only final metrics
+    minibatch: int = 0       # 0 = full-batch GD (paper default); >0 =
+    #                          SGD with per-core minibatches of this size
+    #                          (paper §2: "gradient descent or stochastic
+    #                          gradient descent")
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class GdResult:
+    w: np.ndarray            # float32 [F]
+    b: float
+    history: list            # [(iter, metric)] if record_every else []
+    n_iters: int = 0
+
+    def predict(self, X: np.ndarray) -> np.ndarray:
+        return np.asarray(X, np.float32) @ self.w + self.b
+
+
+# ---------------------------------------------------------------------------
+# Per-core kernels (run on every PIM core over its resident shard).
+# ---------------------------------------------------------------------------
+
+def _local_grad_fp32(Xc, yc, mask, w, b):
+    pred = Xc @ w + b
+    err = (pred - yc) * mask
+    return {"gw": Xc.T @ err, "gb": jnp.sum(err)}
+
+
+def make_local_grad_int32(frac_bits: int):
+    def _local(Xq, yq, mask, wq, bq):
+        dot = fx_dot(Xq, wq, frac_bits) + bq            # Q(f)
+        err = (dot - yq) * mask                         # Q(f)
+        prod = err[:, None] * Xq.astype(jnp.int32)      # Q(2f)
+        gw = jnp.sum(_shift_round(prod, frac_bits), 0)  # Q(f)
+        return {"gw": gw, "gb": jnp.sum(err)}
+    return _local
+
+
+def make_local_grad_hyb(x8_frac: int, w16_frac: int, out_frac: int):
+    def _local(Xq8, yq, mask, wq16, bq):
+        # 16-bit saturating dot product (the paper's stated precision)
+        dot = fx_dot_hybrid(Xq8, wq16, x8_frac, w16_frac, out_frac) + bq
+        err = (dot - yq) * mask                          # Q(out_frac) int32
+        prod = err[:, None] * Xq8.astype(jnp.int32)      # Q(out+x8)
+        gw = jnp.sum(_shift_round(prod, x8_frac), 0)     # Q(out_frac)
+        return {"gw": gw, "gb": jnp.sum(err)}
+    return _local
+
+
+# ---------------------------------------------------------------------------
+# Host-orchestrated training loop (paper §3.1 flow).
+# ---------------------------------------------------------------------------
+
+def _prep(pim: PimSystem, X: np.ndarray, y: np.ndarray, cfg: GdConfig):
+    """Quantize + shard the training set once (it stays core-resident)."""
+    n = X.shape[0]
+    mask = pim.row_validity_mask(n).astype(jnp.float32)
+    if cfg.version == "fp32":
+        Xs = pim.shard_rows(X.astype(np.float32))
+        ys = pim.shard_rows(y.astype(np.float32))
+        return Xs, ys, mask
+    if cfg.version == "int32":
+        Xq = np.asarray(to_fixed(X, cfg.frac_bits))
+        yq = np.asarray(to_fixed(y, cfg.frac_bits))
+        return pim.shard_rows(Xq), pim.shard_rows(yq), mask.astype(jnp.int32)
+    # hyb / bui: int8 inputs, fixed-point targets at out_frac
+    Xq8 = np.asarray(to_fixed(X, cfg.x8_frac, dtype=jnp.int8))
+    yq = np.asarray(to_fixed(y, cfg.frac_bits))
+    return pim.shard_rows(Xq8), pim.shard_rows(yq), mask.astype(jnp.int32)
+
+
+def _quantize_weights(cfg: GdConfig, w: np.ndarray, b: float):
+    if cfg.version == "fp32":
+        return jnp.asarray(w), jnp.float32(b)
+    if cfg.version == "int32":
+        return to_fixed(w, cfg.frac_bits), to_fixed(b, cfg.frac_bits)
+    return (to_fixed(w, cfg.w16_frac, dtype=jnp.int16),
+            to_fixed(b, cfg.frac_bits))
+
+
+def _grad_to_float(cfg: GdConfig, partial) -> tuple[np.ndarray, float]:
+    gw, gb = np.asarray(partial["gw"]), np.asarray(partial["gb"])
+    if cfg.version == "fp32":
+        return gw.astype(np.float32), float(gb)
+    return (np.asarray(from_fixed(jnp.asarray(gw), cfg.frac_bits)),
+            float(from_fixed(jnp.asarray(gb), cfg.frac_bits)))
+
+
+def train(X: np.ndarray, y: np.ndarray, pim: PimSystem,
+          cfg: Optional[GdConfig] = None,
+          eval_fn: Optional[Callable] = None,
+          _local_override: Optional[Callable] = None) -> GdResult:
+    """Full PIM training loop: shard once, iterate (kernel -> reduce ->
+    host update -> broadcast) until cfg.n_iters."""
+    cfg = cfg or GdConfig()
+    assert cfg.version in VERSIONS, cfg.version
+    n, f = X.shape
+    Xs, ys, mask = _prep(pim, X, y, cfg)
+
+    if _local_override is not None:
+        local = _local_override
+    elif cfg.version == "fp32":
+        local = _local_grad_fp32
+    elif cfg.version == "int32":
+        local = make_local_grad_int32(cfg.frac_bits)
+    else:
+        local = make_local_grad_hyb(cfg.x8_frac, cfg.w16_frac, cfg.frac_bits)
+
+    w = np.zeros(f, np.float32)
+    b = 0.0
+    history = []
+    rng = np.random.RandomState(cfg.seed)
+    n_pc = Xs.shape[1]
+    for it in range(cfg.n_iters):
+        wq, bq = _quantize_weights(cfg, w, b)
+        wq, bq = pim.broadcast((wq, bq))
+        if cfg.minibatch and cfg.minibatch < n_pc:
+            # SGD: every core samples the same per-core slice offset
+            # (keeps shards aligned; bank-resident data is never moved)
+            start = int(rng.randint(0, n_pc - cfg.minibatch + 1))
+            sl = (slice(None), slice(start, start + cfg.minibatch))
+            args = (Xs[sl], ys[sl], mask[sl])
+            n_eff = cfg.minibatch * pim.config.n_cores
+        else:
+            args = (Xs, ys, mask)
+            n_eff = n
+        partial = pim.map_reduce(local, args, (wq, bq))
+        gw, gb = _grad_to_float(cfg, partial)
+        w = w - cfg.lr * (2.0 / n_eff) * gw
+        b = b - cfg.lr * (2.0 / n_eff) * gb
+        if cfg.record_every and ((it + 1) % cfg.record_every == 0
+                                 or it == cfg.n_iters - 1):
+            metric = eval_fn(w, b) if eval_fn else None
+            history.append((it + 1, metric))
+    return GdResult(w=w, b=float(b), history=history, n_iters=cfg.n_iters)
+
+
+def train_cpu_baseline(X: np.ndarray, y: np.ndarray, n_iters: int = 500,
+                       lr: float = 0.1) -> GdResult:
+    """The CPU comparison point (paper §5.4 uses MKL; here: numpy BLAS)."""
+    n, f = X.shape
+    X = np.asarray(X, np.float32)
+    y = np.asarray(y, np.float32)
+    w = np.zeros(f, np.float32)
+    b = np.float32(0.0)
+    for _ in range(n_iters):
+        err = X @ w + b - y
+        w = w - lr * (2.0 / n) * (X.T @ err)
+        b = b - lr * (2.0 / n) * err.sum()
+    return GdResult(w=w, b=float(b), history=[], n_iters=n_iters)

@@ -1,0 +1,167 @@
+"""Logistic regression with gradient descent on the PIM system (paper §3.2).
+
+Six versions, exactly the paper's ladder:
+  LOG-FP32            float32 + Taylor-series sigmoid (DPUs lack exp)
+  LOG-INT32           Q(frac_bits) fixed point + fixed-point Taylor sigmoid
+  LOG-INT32-LUT(MRAM) fixed point + LUT sigmoid, LUT resident in DRAM bank
+  LOG-INT32-LUT(WRAM) fixed point + LUT sigmoid, LUT in the scratchpad
+  LOG-HYB-LUT         8-bit inputs x 16-bit weights + WRAM LUT
+  LOG-BUI-LUT         LOG-HYB-LUT numerics + built-in multiply (cost model)
+
+The MRAM/WRAM variants are numerically identical (same table); they differ
+in *placement*, which on the DPU is a ~3% effect (§5.2.2) and on TPU maps
+to HBM-gather vs VMEM-resident LUT (kernels/lut_activation).  Here the
+functional semantics are shared; the placement flag routes the cost model
+and (on TPU) kernel selection.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from .fixed_point import _shift_round, fx_dot, fx_dot_hybrid, to_fixed
+from .linreg import GdConfig, GdResult, _grad_to_float, _prep, \
+    _quantize_weights
+from .lut import SigmoidLut, build_sigmoid_lut, lut_sigmoid_fixed, \
+    taylor_sigmoid_fixed
+from .pim import PimSystem
+
+VERSIONS = ("fp32", "int32", "int32_lut_mram", "int32_lut_wram",
+            "hyb_lut", "bui_lut")
+
+
+@dataclasses.dataclass
+class LogRegConfig(GdConfig):
+    version: str = "fp32"
+    lr: float = 5.0              # logistic loss needs larger steps (flat
+                                 # gradients; validated in quality tests)
+    taylor_terms: int = 8
+    lut_boundary: int = 20       # paper Fig. 4: boundary 20, 10 frac bits
+    lut_frac_bits: int = 10
+
+
+def _sigmoid_taylor_f32(z: jnp.ndarray, terms: int) -> jnp.ndarray:
+    """Float Taylor sigmoid — the paper's LOG-FP32 path on DPUs.
+
+    exp(-|z|) via range-reduced Taylor (m=3 halvings), then reflect.
+    """
+    a = jnp.minimum(jnp.abs(z), 20.0)
+    t = a / 8.0
+    acc = jnp.ones_like(t)
+    for k in range(terms - 1, 0, -1):
+        acc = 1.0 - acc * t / k
+    e = acc ** 8  # (exp(-t))**8 = exp(-a)
+    pos = 1.0 / (1.0 + e)
+    return jnp.where(z < 0, 1.0 - pos, pos)
+
+
+def _gd_version_of(version: str) -> str:
+    return {"fp32": "fp32", "int32": "int32", "int32_lut_mram": "int32",
+            "int32_lut_wram": "int32", "hyb_lut": "hyb",
+            "bui_lut": "bui"}[version]
+
+
+def make_local_grad(cfg: LogRegConfig, lut: Optional[SigmoidLut]):
+    """Build the per-core kernel for the configured version."""
+    f = cfg.frac_bits
+
+    if cfg.version == "fp32":
+        terms = cfg.taylor_terms
+
+        def _local_fp32(Xc, yc, mask, w, b):
+            p = _sigmoid_taylor_f32(Xc @ w + b, terms)
+            err = (p - yc) * mask
+            return {"gw": Xc.T @ err, "gb": jnp.sum(err)}
+        return _local_fp32
+
+    if cfg.version == "int32":
+        terms = cfg.taylor_terms
+
+        def _local_int32_taylor(Xq, yq, mask, wq, bq):
+            z = fx_dot(Xq, wq, f) + bq                    # Q(f)
+            p = taylor_sigmoid_fixed(z, f, terms=terms)   # Q(f)
+            err = (p - yq) * mask
+            prod = err[:, None] * Xq.astype(jnp.int32)
+            gw = jnp.sum(_shift_round(prod, f), 0)
+            return {"gw": gw, "gb": jnp.sum(err)}
+        return _local_int32_taylor
+
+    if cfg.version in ("int32_lut_mram", "int32_lut_wram"):
+        assert lut is not None
+
+        def _local_int32_lut(Xq, yq, mask, wq, bq):
+            z = fx_dot(Xq, wq, f) + bq                    # Q(f)
+            p15 = lut_sigmoid_fixed(z, lut)               # Q(value_frac)
+            p = _shift_round(p15, lut.value_frac - f)     # -> Q(f)
+            err = (p - yq) * mask
+            prod = err[:, None] * Xq.astype(jnp.int32)
+            gw = jnp.sum(_shift_round(prod, f), 0)
+            return {"gw": gw, "gb": jnp.sum(err)}
+        return _local_int32_lut
+
+    # hyb_lut / bui_lut — identical numerics (paper §3.1/§3.2)
+    assert lut is not None
+    x8, w16 = cfg.x8_frac, cfg.w16_frac
+
+    def _local_hyb_lut(Xq8, yq, mask, wq16, bq):
+        z = fx_dot_hybrid(Xq8, wq16, x8, w16, f) + bq     # Q(f), 16-bit acc
+        p15 = lut_sigmoid_fixed(z, lut)
+        p = _shift_round(p15, lut.value_frac - f)
+        err = (p - yq) * mask
+        prod = err[:, None] * Xq8.astype(jnp.int32)
+        gw = jnp.sum(_shift_round(prod, x8), 0)
+        return {"gw": gw, "gb": jnp.sum(err)}
+    return _local_hyb_lut
+
+
+def train(X: np.ndarray, y: np.ndarray, pim: PimSystem,
+          cfg: Optional[LogRegConfig] = None,
+          eval_fn: Optional[Callable] = None) -> GdResult:
+    cfg = cfg or LogRegConfig()
+    assert cfg.version in VERSIONS, cfg.version
+    n, nf = X.shape
+
+    lut = None
+    if "lut" in cfg.version:
+        lut = build_sigmoid_lut(cfg.lut_boundary, cfg.lut_frac_bits)
+
+    # reuse linreg's data prep / weight quantization via the base version
+    base_cfg = dataclasses.replace(cfg, version=_gd_version_of(cfg.version))
+    Xs, ys, mask = _prep(pim, X, y, base_cfg)
+    local = make_local_grad(cfg, lut)
+
+    w = np.zeros(nf, np.float32)
+    b = 0.0
+    history = []
+    for it in range(cfg.n_iters):
+        wq, bq = _quantize_weights(base_cfg, w, b)
+        wq, bq = pim.broadcast((wq, bq))
+        partial = pim.map_reduce(local, (Xs, ys, mask), (wq, bq))
+        gw, gb = _grad_to_float(base_cfg, partial)
+        w = w - cfg.lr * (1.0 / n) * gw
+        b = b - cfg.lr * (1.0 / n) * gb
+        if cfg.record_every and ((it + 1) % cfg.record_every == 0
+                                 or it == cfg.n_iters - 1):
+            metric = eval_fn(w, b) if eval_fn else None
+            history.append((it + 1, metric))
+    return GdResult(w=w, b=float(b), history=history, n_iters=cfg.n_iters)
+
+
+def train_cpu_baseline(X: np.ndarray, y: np.ndarray, n_iters: int = 500,
+                       lr: float = 5.0) -> GdResult:
+    """CPU comparison point: float32, *exact* sigmoid (MKL-style)."""
+    n, nf = X.shape
+    X = np.asarray(X, np.float32)
+    y = np.asarray(y, np.float32)
+    w = np.zeros(nf, np.float32)
+    b = np.float32(0.0)
+    for _ in range(n_iters):
+        z = X @ w + b
+        p = 1.0 / (1.0 + np.exp(-z, dtype=np.float32))
+        err = p - y
+        w = w - lr * (1.0 / n) * (X.T @ err)
+        b = b - lr * (1.0 / n) * err.sum()
+    return GdResult(w=w, b=float(b), history=[], n_iters=n_iters)

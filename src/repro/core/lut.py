@@ -1,0 +1,183 @@
+"""Lookup-table based transcendental functions (paper §3.2, Fig. 4).
+
+The paper replaces Taylor-series sigmoid with a LUT of pre-computed sigmoid
+values: boundary B=20, 10 fractional bits -> 20*1024 entries of 16 bits
+(40 KB), exploiting sigmoid's symmetry sigmoid(-x) = 1 - sigmoid(x).  The
+LUT fits in the DPU's 64 KB WRAM scratchpad; an MRAM-resident variant is
+only ~3% slower because each query is a single access.
+
+TPU adaptation: WRAM -> VMEM.  kernels/lut_activation pins the table in
+VMEM inside a Pallas kernel; the "MRAM" variant is an HBM-resident XLA
+gather.  This module is the backend-agnostic functional core used by both
+and by the faithful LOG-*-LUT reproductions.
+
+Also provided: fixed-point Taylor-series sigmoid (the paper's non-LUT
+baseline, LOG-INT32) and a generic ``ActivationLut`` used by the LM stack
+(models/quantized.py) to run SiLU/GELU through the same technique.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .fixed_point import _shift_round, from_fixed, to_fixed
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SigmoidLut:
+    """Paper-faithful sigmoid LUT (Fig. 4).
+
+    ``table[i] = round(sigmoid(i / 2**frac_bits) * 2**value_frac)`` for
+    i in [0, boundary << frac_bits).  Stored int16 (value_frac=15 keeps
+    sigmoid in [0, 32767]).
+    """
+
+    table: jnp.ndarray  # int16 [boundary << frac_bits]
+    frac_bits: int
+    boundary: int
+    value_frac: int
+
+    def tree_flatten(self):
+        return (self.table,), (self.frac_bits, self.boundary, self.value_frac)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        (table,) = children
+        return cls(table, *aux)
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.table.size) * 2
+
+
+def build_sigmoid_lut(boundary: int = 20, frac_bits: int = 10,
+                      value_frac: int = 15) -> SigmoidLut:
+    n = boundary << frac_bits
+    xs = np.arange(n, dtype=np.float64) / float(1 << frac_bits)
+    vals = 1.0 / (1.0 + np.exp(-xs))
+    table = np.clip(np.round(vals * (1 << value_frac)), 0,
+                    2 ** 15 - 1).astype(np.int16)
+    return SigmoidLut(jnp.asarray(table), frac_bits, boundary, value_frac)
+
+
+def lut_sigmoid_fixed(x_q: jnp.ndarray, lut: SigmoidLut) -> jnp.ndarray:
+    """Sigmoid of Q(lut.frac_bits) fixed-point input -> Q(lut.value_frac).
+
+    Mirrors the DPU kernel: take |x|, clamp at the boundary (sigmoid
+    saturates), one table read, reflect for negative inputs.
+    """
+    xq = x_q.astype(jnp.int32)
+    neg = xq < 0
+    idx = jnp.minimum(jnp.abs(xq), lut.table.size - 1)
+    v = lut.table[idx].astype(jnp.int32)
+    one = jnp.int32(1 << lut.value_frac)
+    return jnp.where(neg, one - v, v)
+
+
+def lut_sigmoid_float(x: jnp.ndarray, lut: SigmoidLut) -> jnp.ndarray:
+    """Float-in/float-out wrapper (quantize index, LUT, dequantize)."""
+    x_q = to_fixed(x, lut.frac_bits)
+    return from_fixed(lut_sigmoid_fixed(x_q, lut), lut.value_frac)
+
+
+# ---------------------------------------------------------------------------
+# Taylor-series sigmoid — the paper's LOG-INT32 / LOG-FP32 baseline on DPUs.
+# ---------------------------------------------------------------------------
+
+def taylor_exp_fixed(x_q: jnp.ndarray, frac_bits: int, terms: int = 8,
+                     range_shift: int = 3) -> jnp.ndarray:
+    """exp(-|x|) for Q(frac_bits) input, fixed-point Taylor with range
+    reduction: exp(-x) = exp(-x / 2**m) ** (2**m), Taylor on the reduced
+    argument (|t| < 1 keeps the series convergent in fixed point).
+    Returns Q(frac_bits).  This is deliberately the *slow, iterative*
+    method the paper measures 53x LUT speedup against (§5.2.2).
+    """
+    one = jnp.int32(1 << frac_bits)
+    a = jnp.abs(x_q.astype(jnp.int32))
+    # clamp: exp(-20) is below Q10 resolution anyway (matches LUT boundary)
+    a = jnp.minimum(a, 20 << frac_bits)
+    t = a >> range_shift  # reduced argument, Q(frac_bits)
+    # Horner evaluation of sum_k (-t)^k / k!
+    acc = jnp.zeros_like(t) + one // math.factorial(terms - 1)
+    for k in range(terms - 2, -1, -1):
+        acc = one // math.factorial(k) - _shift_round(t * acc, frac_bits)
+    acc = jnp.maximum(acc, 0)
+    for _ in range(range_shift):  # square back up
+        acc = _shift_round(acc * acc, frac_bits)
+    return acc
+
+
+def taylor_sigmoid_fixed(x_q: jnp.ndarray, frac_bits: int,
+                         terms: int = 8) -> jnp.ndarray:
+    """sigmoid(x) = 1 / (1 + exp(-x)) in Q(frac_bits) via Taylor exp and
+    integer division (both emulated-and-slow on the DPU, per the paper)."""
+    one = jnp.int32(1 << frac_bits)
+    e = taylor_exp_fixed(x_q, frac_bits, terms=terms)  # exp(-|x|), Q(f)
+    # sigmoid(|x|) = 1/(1+exp(-|x|)); integer divide (emulated on DPU).
+    # numerator 2**(2f) fits int32 for f <= 15 (we use f=10).
+    pos = (jnp.int32(1 << (2 * frac_bits)) // jnp.maximum(one + e, 1))
+    return jnp.where(x_q < 0, one - pos, pos)
+
+
+# ---------------------------------------------------------------------------
+# Generic activation LUT for the LM stack (beyond-paper application).
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ActivationLut:
+    """Uniform-grid LUT for an arbitrary activation over [x_min, x_max].
+
+    Used by models/quantized.py to run SiLU/GELU the way the paper runs
+    sigmoid (Recommendation #5: convert computation to memory accesses).
+    Values stored float32 (TPU VMEM is big enough; the DPU constraint that
+    forced int16 storage does not bind here — recorded in DESIGN.md §2).
+    """
+
+    table: jnp.ndarray  # float32 [n_entries]
+    x_min: float
+    x_max: float
+
+    def tree_flatten(self):
+        return (self.table,), (self.x_min, self.x_max)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        (table,) = children
+        return cls(table, *aux)
+
+    @classmethod
+    def from_fn(cls, fn: Callable, x_min: float = -8.0, x_max: float = 8.0,
+                n_entries: int = 4096) -> "ActivationLut":
+        xs = np.linspace(x_min, x_max, n_entries, dtype=np.float64)
+        # keep the table as a host numpy array: ActivationLuts are cached
+        # at module level and reused across jit traces — a jnp array
+        # materialized inside one trace would leak its tracer into the next
+        table = np.asarray(fn(xs), dtype=np.float32)
+        return cls(table, float(x_min), float(x_max))
+
+    def __call__(self, x: jnp.ndarray) -> jnp.ndarray:
+        table = jnp.asarray(self.table)  # per-trace constant
+        n = table.shape[0]
+        t = (x.astype(jnp.float32) - self.x_min) / (self.x_max - self.x_min)
+        idx = jnp.clip(jnp.round(t * (n - 1)), 0, n - 1).astype(jnp.int32)
+        return table[idx].astype(x.dtype)
+
+
+def silu_lut(n_entries: int = 4096) -> ActivationLut:
+    return ActivationLut.from_fn(lambda x: x / (1.0 + np.exp(-x)),
+                                 x_min=-12.0, x_max=12.0, n_entries=n_entries)
+
+
+def gelu_lut(n_entries: int = 4096) -> ActivationLut:
+    # tanh-form GELU (no scipy dependency in this offline container)
+    c = np.sqrt(2.0 / np.pi)
+    return ActivationLut.from_fn(
+        lambda x: 0.5 * x * (1 + np.tanh(c * (x + 0.044715 * x ** 3))),
+        x_min=-12.0, x_max=12.0, n_entries=n_entries)

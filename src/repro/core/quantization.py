@@ -1,0 +1,100 @@
+"""Symmetric quantization utilities (paper §3, §5.4).
+
+The paper applies *symmetric quantization* to training datasets so that the
+PIM cores can use natively-supported integer arithmetic (UPMEM DPUs have no
+FPU; 8-bit multiply is native, 32-bit multiply is emulated).  On TPU the
+analogous native fast path is the MXU int8 x int8 -> int32 matmul, so the
+same dataset-quantization machinery feeds both the faithful reproduction
+(core/linreg.py, core/logreg.py, core/kmeans.py) and the beyond-paper
+quantized LM layers (models/quantized.py, kernels/quant_matmul).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_INT_DTYPES = {8: jnp.int8, 16: jnp.int16, 32: jnp.int32}
+
+
+def int_dtype_for_bits(bits: int):
+    """Smallest signed integer dtype that stores `bits`-bit values."""
+    for b, dt in _INT_DTYPES.items():
+        if bits <= b:
+            return dt
+    raise ValueError(f"unsupported bit width {bits}")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantParams:
+    """Symmetric quantization parameters: ``x ~= q * scale``.
+
+    ``scale`` may be a scalar (per-tensor) or an array broadcastable against
+    the quantized tensor (per-channel / per-column).
+    """
+
+    scale: jnp.ndarray
+    bits: int
+    axis: Optional[int] = None
+
+    # -- pytree protocol (scale is a leaf; bits/axis are static) ------------
+    def tree_flatten(self):
+        return (self.scale,), (self.bits, self.axis)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        (scale,) = children
+        bits, axis = aux
+        return cls(scale=scale, bits=bits, axis=axis)
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.bits - 1) - 1
+
+
+def symmetric_quantize(
+    x: jnp.ndarray,
+    bits: int = 8,
+    axis: Optional[int] = None,
+    eps: float = 1e-12,
+) -> tuple[jnp.ndarray, QuantParams]:
+    """Quantize ``x`` symmetrically to signed ``bits``-bit integers.
+
+    axis=None  -> one scale for the whole tensor (paper's dataset quantization)
+    axis=k     -> per-slice scales along every axis *except* k is reduced
+                  (i.e. one scale per index of axis k), used per-channel.
+    """
+    qmax = 2 ** (bits - 1) - 1
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        reduce_axes = tuple(i for i in range(x.ndim) if i != axis)
+        amax = jnp.max(jnp.abs(x), axis=reduce_axes, keepdims=True)
+    scale = jnp.maximum(amax, eps) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax)
+    return q.astype(int_dtype_for_bits(bits)), QuantParams(scale=scale, bits=bits, axis=axis)
+
+
+def dequantize(q: jnp.ndarray, params: QuantParams) -> jnp.ndarray:
+    return q.astype(jnp.float32) * params.scale
+
+
+def quantize_with(x: jnp.ndarray, params: QuantParams) -> jnp.ndarray:
+    """Quantize using pre-computed params (e.g. train-set params on eval data)."""
+    qmax = params.qmax
+    q = jnp.clip(jnp.round(x / params.scale), -qmax - 1, qmax)
+    return q.astype(int_dtype_for_bits(params.bits))
+
+
+def quantization_snr_db(x: Union[np.ndarray, jnp.ndarray], bits: int) -> float:
+    """Signal-to-quantization-noise ratio in dB (diagnostic used in tests)."""
+    x = jnp.asarray(x, jnp.float32)
+    q, p = symmetric_quantize(x, bits=bits)
+    err = x - dequantize(q, p)
+    num = jnp.sum(x * x)
+    den = jnp.maximum(jnp.sum(err * err), 1e-30)
+    return float(10.0 * jnp.log10(num / den))

@@ -1,0 +1,96 @@
+"""Synthetic dataset generators (paper §4, Table 3).
+
+The paper evaluates training quality on synthetic datasets with uniformly
+distributed random samples (values with 4 decimal digits for LIN/LOG), and
+uses synthetic data sized per-core for the weak/strong scaling experiments.
+scikit-learn is not available in this container, so the generators below
+reimplement the relevant subset (make_classification-style informative/
+redundant/random attributes for DTR; isotropic blobs for KME).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def round_decimals(x: np.ndarray, decimals: int) -> np.ndarray:
+    """Paper §4.1: samples have a fixed number of decimal digits."""
+    return np.round(x, decimals).astype(np.float32)
+
+
+def make_linear_dataset(n_samples: int = 8192, n_features: int = 16,
+                        decimals: int = 4, seed: int = 0,
+                        task: str = "classification",
+                        noise: float = 0.0):
+    """Uniform random samples + ground-truth linear model (LIN/LOG quality).
+
+    ``task="classification"`` binarizes the linear response at its median —
+    the paper's "training error rate" for LIN/LOG counts thresholded
+    prediction errors on the training set (their real datasets, SUSY/Skin,
+    are binary classification).
+    Returns (X float32 [n, f], y float32 [n], w_true float32 [f+1]).
+    """
+    rng = np.random.RandomState(seed)
+    X = rng.uniform(0.0, 1.0, size=(n_samples, n_features))
+    X = round_decimals(X, decimals)
+    w = rng.uniform(-1.0, 1.0, size=n_features).astype(np.float32)
+    b = np.float32(rng.uniform(-0.5, 0.5))
+    resp = X @ w + b
+    if noise:
+        resp = resp + rng.normal(0.0, noise, size=n_samples)
+    if task == "classification":
+        y = (resp > np.median(resp)).astype(np.float32)
+    else:
+        y = resp.astype(np.float32)
+    return X.astype(np.float32), y, np.concatenate([w, [b]]).astype(np.float32)
+
+
+def make_classification(n_samples: int = 600_000, n_features: int = 16,
+                        n_informative: int = 4, n_redundant: int = 4,
+                        n_classes: int = 2, class_sep: float = 1.0,
+                        seed: int = 0):
+    """DTR quality dataset (paper §4.1): 4 informative + 4 redundant
+    (random linear combination of the informative) + 8 random attributes,
+    float32, *not* quantized.  Follows the make_classification recipe:
+    class clusters at hypercube vertices in informative subspace."""
+    rng = np.random.RandomState(seed)
+    n_random = n_features - n_informative - n_redundant
+    assert n_random >= 0
+    # class centroids: distinct +-class_sep hypercube corners
+    centroids = np.zeros((n_classes, n_informative))
+    for c in range(n_classes):
+        bits = [(c >> i) & 1 for i in range(n_informative)]
+        centroids[c] = (2.0 * np.array(bits) - 1.0) * class_sep
+    y = rng.randint(0, n_classes, size=n_samples)
+    X_inf = centroids[y] + rng.normal(0, 1.0, size=(n_samples, n_informative))
+    A = rng.normal(0, 1.0, size=(n_informative, n_redundant))
+    X_red = X_inf @ A
+    X_rand = rng.normal(0, 1.0, size=(n_samples, n_random))
+    X = np.concatenate([X_inf, X_red, X_rand], axis=1)
+    perm = rng.permutation(n_features)
+    return X[:, perm].astype(np.float32), y.astype(np.int32)
+
+
+def make_blobs(n_samples: int = 100_000, n_features: int = 16,
+               centers: int = 16, cluster_std: float = 1.0,
+               center_box: tuple = (-10.0, 10.0), seed: int = 0):
+    """KME quality dataset (paper §4.1): 16 isotropic clusters, float32."""
+    rng = np.random.RandomState(seed)
+    C = rng.uniform(center_box[0], center_box[1], size=(centers, n_features))
+    y = rng.randint(0, centers, size=n_samples)
+    X = C[y] + rng.normal(0, cluster_std, size=(n_samples, n_features))
+    return X.astype(np.float32), y.astype(np.int32), C.astype(np.float32)
+
+
+def make_scaling_dataset(workload: str, n_cores: int, per_core_samples: int,
+                         n_features: int = 16, seed: int = 0):
+    """Weak/strong-scaling inputs (paper Table 3): synthetic, sized per core."""
+    n = n_cores * per_core_samples
+    if workload in ("lin", "log"):
+        X, y, _ = make_linear_dataset(n, n_features, seed=seed)
+        return X, y
+    if workload == "dtr":
+        return make_classification(n, n_features, seed=seed)
+    if workload == "kme":
+        X, y, _ = make_blobs(n, n_features, seed=seed)
+        return X, y
+    raise ValueError(workload)

@@ -1,0 +1,86 @@
+"""Activation sharding constraints (GSPMD hints inside the model).
+
+Without these, the SPMD partitioner is free to keep activations replicated
+over the data axis inside scanned layer bodies — which the granite-3-8b
+baseline dry-run actually did (16x redundant compute; see EXPERIMENTS.md
+§Perf iteration log).  The model code calls ``constrain(x, kind)`` at
+well-known cut points; the launcher opts in by setting the mesh via
+``use_mesh`` (tests and single-device runs leave it unset -> no-op).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _dp(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    prev = getattr(_STATE, "mesh", None)
+    _STATE.mesh = mesh
+    try:
+        yield
+    finally:
+        _STATE.mesh = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+import os
+
+#: sequence parallelism (Korthikanti et al.): shard the residual stream's
+#: sequence dim over "model" between blocks — norms/elementwise compute
+#: shard 16x and the per-layer activation all-reduce splits into
+#: reduce-scatter + all-gather (overlappable).  §Perf experiment knob.
+SEQ_PARALLEL = os.environ.get("REPRO_SEQ_PARALLEL", "0") == "1"
+
+
+#: cut-point -> spec builder (ndim-aware)
+def _spec_for(kind: str, ndim: int, mesh: Mesh) -> Optional[P]:
+    dp = _dp(mesh)
+    if kind == "btd":        # [B, S, d] residual stream
+        if ndim == 3:
+            return P(dp, "model", None) if SEQ_PARALLEL else \
+                P(dp, None, None)
+    if kind == "bhsd":       # [B, H, S, hd] attention heads
+        if ndim == 4:
+            return P(dp, "model", None, None)
+    if kind == "btf":        # [B, S, ffn] mlp hidden
+        if ndim == 3:
+            return P(dp, None, "model")
+    if kind == "ecd":        # [E, cap, d] moe expert inputs/outputs
+        if ndim == 3:
+            return P("model", None, None)
+    if kind == "gecd":       # [G, E, cap, d] group-local moe buffers
+        if ndim == 4:
+            return P(dp, "model", None, None)
+    if kind == "btv":        # [B, S, vocab] logits
+        if ndim == 3:
+            return P(dp, None, "model")
+    if kind == "bdp":        # batch -> dp, everything else replicated
+        return P(*((dp,) + (None,) * (ndim - 1)))
+    return None
+
+
+def constrain(x, kind: str):
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = _spec_for(kind, x.ndim, mesh)
+    if spec is None:
+        return x
+    # drop axes that don't divide
+    from .sharding import validate_divisibility
+    spec = validate_divisibility(spec, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,196 @@
+"""Sharding rules: parameter/optimizer/data PartitionSpecs over the
+production mesh axes ("pod", "data", "model").
+
+Philosophy (DESIGN.md §5): batch -> (pod, data); heads / FFN hidden /
+experts / vocab -> model.  Specs are GSPMD hints — correctness is the SPMD
+partitioner's job; these rules decide the collective schedule, which the
+roofline reads back out of the compiled HLO.
+
+Rules are name-based over the param tree paths (every weight in the model
+zoo uses the canonical names below), with the leading stacked-layer axis
+(reps) always unsharded.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+#: trailing-dims spec per canonical weight name (leading dims -> None)
+_RULES: dict[str, tuple] = {
+    # embeddings / heads: vocab over model
+    "tok_emb": ("model", None),
+    "lm_head": (None, "model"),
+    # attention
+    "wq": (None, "model"), "wk": (None, "model"), "wv": (None, "model"),
+    "wo": ("model", None),
+    "bq": ("model",), "bk": ("model",), "bv": ("model",),
+    # mlp
+    "up": (None, "model"), "gate": (None, "model"), "down": ("model", None),
+    # moe (leading expert axis over model = EP)
+    "router": (None, "model"),
+    "w_gate": ("model", None, None), "w_up": ("model", None, None),
+    "w_down": ("model", None, None),
+    # mlstm / ssm
+    "w_in": (None, "model"),
+    "w_up_m": (None, "model"),
+    "conv_w": (None, "model"),
+    "w_bc": ("model", None), "w_dt": ("model", None),
+    "a_log": ("model", None), "d_skip": ("model",),
+    "w_x": (None, "model"), "w_out": ("model", None),
+    # misc
+    "meta": (), "final_norm": (), "enc_ln": (), "dec_ln": (),
+}
+
+#: weight names that stay replicated regardless of shape
+_REPLICATED = {"norm", "norm1", "norm2", "attn_norm", "ssm_norm",
+               "q_norm", "k_norm", "b", "w", "b_if", "w_if", "r",
+               "dt_bias", "gate_attn", "gate_mlp", "ln1", "ln2", "ln3"}
+
+
+def _path_names(path) -> list[str]:
+    names = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            names.append(str(k.key))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            names.append(k.name)
+    return names
+
+
+def spec_for_param(path, leaf) -> P:
+    names = _path_names(path)
+    name = names[-1] if names else ""
+    # mlstm's w_up/w_gate collide with moe names; disambiguate by rank:
+    # moe expert weights are (reps, E, d, f) = rank 4.
+    if name in ("w_gate", "w_up", "w_down") and leaf.ndim < 4:
+        rule = {"w_gate": (None, "model"), "w_up": (None, "model"),
+                "w_down": ("model", None)}[name]
+    elif name in _REPLICATED or name not in _RULES:
+        return P()
+    else:
+        rule = _RULES[name]
+    rule = tuple(rule)
+    ndim = leaf.ndim
+    if len(rule) > ndim:
+        return P()
+    lead = (None,) * (ndim - len(rule))
+    spec = lead + rule
+    # never shard an axis the size doesn't divide (e.g. reduced smoke cfgs)
+    return P(*spec)
+
+
+def validate_divisibility(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding on axes whose size doesn't divide the mesh axis."""
+    out = []
+    for dim, s in enumerate(spec):
+        if s is None:
+            out.append(None)
+            continue
+        axes = (s,) if isinstance(s, str) else tuple(s)
+        total = int(np.prod([mesh.shape[a] for a in axes]))
+        out.append(s if shape[dim] % total == 0 else None)
+    return P(*out)
+
+
+#: only embeddings keep model-axis sharding when TP is disabled for the
+#: backbone (small recurrent models: replicate weights, pure DP + ZeRO)
+_EMB_NAMES = {"tok_emb", "lm_head"}
+
+
+def param_shardings(mesh: Mesh, param_tree, tp_dense: bool = True):
+    """NamedShardings for a param (or shape) pytree.
+
+    tp_dense=False: backbone weights replicated (vocab tensors still shard
+    over "model") — the §Perf fix for xlstm-class models where TP
+    all-gathers of tiny weights dominated the collective term.
+    """
+    def one(path, leaf):
+        names = _path_names(path)
+        if not tp_dense and not (_EMB_NAMES & set(names)):
+            return NamedSharding(mesh, P())
+        spec = spec_for_param(path, leaf)
+        spec = validate_divisibility(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, param_tree)
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    """Data-parallel mesh axes: ("pod","data") if pod axis present."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def extend_with_dp(spec: P, shape, mesh: Mesh) -> P:
+    """ZeRO/FSDP extension: additionally shard the largest still-unsharded
+    dim over the data axes (weights: FSDP; adam moments: ZeRO-1).  GSPMD
+    inserts the matching all-gathers/reduce-scatters automatically."""
+    dp = dp_axes(mesh)
+    if not dp:
+        return spec
+    total = int(np.prod([mesh.shape[a] for a in dp]))
+    spec_t = tuple(spec) + (None,) * (len(shape) - len(spec))
+    best, best_size = None, 0
+    for dim, s in enumerate(spec_t):
+        if s is None and shape[dim] % total == 0 and shape[dim] > best_size:
+            best, best_size = dim, shape[dim]
+    if best is None:
+        return P(*spec_t)
+    out = list(spec_t)
+    out[best] = dp if len(dp) > 1 else dp[0]
+    return P(*out)
+
+
+def param_shardings_fsdp(mesh: Mesh, param_tree):
+    """FSDP variant of param_shardings (dbrx-class models whose replicated
+    weights would not fit per-chip HBM)."""
+    def one(path, leaf):
+        spec = spec_for_param(path, leaf)
+        spec = validate_divisibility(spec, leaf.shape, mesh)
+        spec = extend_with_dp(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+    return jax.tree_util.tree_map_with_path(one, param_tree)
+
+
+def opt_state_shardings(mesh: Mesh, param_tree):
+    """ZeRO-1: adam moments sharded over data axes on top of the param
+    spec (f32 moments are 4x the bf16 weights — always worth sharding)."""
+    return param_shardings_fsdp(mesh, param_tree)
+
+
+def batch_shardings(mesh: Mesh, batch_tree):
+    """Leading axis -> data parallel; everything else replicated."""
+    dp = dp_axes(mesh)
+
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        total = int(np.prod([mesh.shape[a] for a in dp]))
+        spec = (dp if leaf.shape[0] % total == 0 else None,)
+        return NamedSharding(mesh, P(*spec + (None,) * (leaf.ndim - 1)))
+    return jax.tree_util.tree_map(one, batch_tree)
+
+
+def cache_shardings(mesh: Mesh, cache_tree):
+    """KV caches: (reps, B, H, S, D) -> (None, dp, model, None, None);
+    recurrent states (reps, B, ...) -> (None, dp, ...); scalars replicated.
+    Falls back to replication when sizes don't divide."""
+    dp = dp_axes(mesh)
+
+    def one(path, leaf):
+        if leaf.ndim <= 1:
+            return NamedSharding(mesh, P())
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        spec: list = [None] * leaf.ndim
+        # find the batch axis: KVCache leaves are (reps, B, H, S, D) or
+        # whisper dict leaves (L, B, H, S, D); states (reps, B, ...)
+        b_axis = 1 if leaf.ndim >= 2 else None
+        if b_axis is not None:
+            spec[b_axis] = dp
+        if leaf.ndim >= 4 and name in ("k", "v", "ck", "cv"):
+            spec[2] = "model"
+        validated = validate_divisibility(P(*spec), leaf.shape, mesh)
+        return NamedSharding(mesh, validated)
+    return jax.tree_util.tree_map_with_path(one, cache_tree)

@@ -1,0 +1,31 @@
+"""jit'd wrapper: batched/GQA attention with kernel or XLA-ref routing."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import flash_attention
+from .ref import attention_ref
+
+
+def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+        causal: bool = True, q_offset: int = 0, window: int = 0,
+        use_pallas: bool = False, interpret: bool = True, bq: int = 128,
+        bk: int = 128) -> jnp.ndarray:
+    """q [B, Hq, Sq, D]; k,v [B, Hkv, Skv, D] (GQA: Hq multiple of Hkv).
+    ``window`` > 0: sliding-window attention."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    if hq != hkv:
+        assert hq % hkv == 0, (hq, hkv)
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    if not use_pallas:
+        return attention_ref(q, k, v, causal=causal, q_offset=q_offset,
+                             window=window)
+    out = flash_attention(q.reshape(b * hq, sq, d),
+                          k.reshape(b * hq, skv, d),
+                          v.reshape(b * hq, skv, d),
+                          causal=causal, q_offset=q_offset, window=window,
+                          bq=bq, bk=bk, interpret=interpret)
+    return out.reshape(b, hq, sq, d)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle: softmax attention (causal / full), f32 accumulation.
+
+This is also the path the LM stack uses for *training* (XLA fuses it well
+and provides the backward pass); the Pallas kernel accelerates serving
+prefill — see DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, scale: float | None = None,
+                  q_offset: int = 0, window: int = 0) -> jnp.ndarray:
+    """q [B, H, Sq, D]; k,v [B, H, Skv, D] -> [B, H, Sq, D].
+
+    ``q_offset``: absolute position of q[0] (for decode: Skv - Sq).
+    ``window`` > 0: sliding-window mask (qpos - kpos < window).
+    """
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / (d ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal or window:
+        sq, skv = q.shape[2], k.shape[2]
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(skv)[None, :]
+        mask = qpos >= kpos if causal else jnp.ones((sq, skv), bool)
+        if window:
+            mask &= (qpos - kpos) < window
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,92 @@
+"""Pallas TPU kernel: decision-tree split-evaluate (paper §3.3, Fig. 5).
+
+TPU adaptation of the paper's streaming layout: the DPU version reorders
+feature values so each leaf is contiguous and streams MRAM->WRAM.  On TPU
+the same property — "every byte fetched from HBM is used by exactly one
+streaming pass" — is achieved by tiling points into (block_n x F) VMEM
+blocks and turning both per-leaf threshold selection and per-(leaf,class)
+count scatter into **one-hot matmuls** (MXU work, no data-dependent
+scatter, which Mosaic does not support):
+
+  t[i, f]      = onehot_leaf[i, :] @ thresholds[:, f]
+  counts[s, f] = onehot_seg[:, s].T @ below[:, f]        s = leaf*C + class
+
+Thresholds and the count accumulators stay pinned in VMEM across the grid;
+point blocks stream — the direct analogue of the DPU's DMA streaming.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gini_kernel(x_ref, seg_ref, leaf_ref, th_ref, counts_ref, totals_ref,
+                 *, n_slots: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+        totals_ref[...] = jnp.zeros_like(totals_ref)
+
+    x = x_ref[...]                                   # (bn, F) f32
+    seg = seg_ref[...]                               # (bn,) int32 leaf*C+y
+    leaf = leaf_ref[...]                             # (bn,) int32
+    th = th_ref[...]                                 # (L, F) f32
+
+    n_leaves = th.shape[0]
+    oh_leaf = (leaf[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (1, n_leaves), 1)).astype(jnp.float32)
+    t = jax.lax.dot_general(oh_leaf, th, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    below = (x <= t).astype(jnp.int32)               # (bn, F)
+
+    oh_seg = (seg[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (1, n_slots), 1)).astype(jnp.int32)
+    counts_ref[...] += jax.lax.dot_general(
+        oh_seg, below, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)            # (n_slots, F)
+    totals_ref[...] += jnp.sum(oh_seg, axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_classes", "block_n",
+                                             "interpret"))
+def gini_counts(x: jnp.ndarray, y: jnp.ndarray, leaf: jnp.ndarray,
+                thresholds: jnp.ndarray, *, n_classes: int,
+                block_n: int = 1024, interpret: bool = False):
+    """x f32 [N, F]; y/leaf int32 [N]; thresholds f32 [L, F].
+    N must be a block multiple and leaf in [0, L) (ops.py pads/validates).
+    -> (below int32 [L, C, F], total int32 [L, C])."""
+    n, f = x.shape
+    n_leaves = thresholds.shape[0]
+    n_slots = n_leaves * n_classes
+    bn = min(block_n, n)
+    assert n % bn == 0, (n, bn)
+    seg = leaf * n_classes + y
+    counts, totals = pl.pallas_call(
+        functools.partial(_gini_kernel, n_slots=n_slots),
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, f), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((n_leaves, f), lambda i: (0, 0)),  # pinned
+        ],
+        out_specs=[
+            pl.BlockSpec((n_slots, f), lambda i: (0, 0)),   # accumulated
+            pl.BlockSpec((n_slots,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_slots, f), jnp.int32),
+            jax.ShapeDtypeStruct((n_slots,), jnp.int32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(x, seg, leaf, thresholds)
+    return (counts.reshape(n_leaves, n_classes, f),
+            totals.reshape(n_leaves, n_classes))

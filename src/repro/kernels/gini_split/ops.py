@@ -1,0 +1,39 @@
+"""jit'd wrapper for split-evaluate with padding + ref fallback.
+
+The host remaps frontier leaf ids to a compact [0, L) range before calling
+(keeping the one-hot matmuls small); padding rows are routed to a spill
+leaf slot that is sliced off afterwards.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import gini_counts
+from .ref import gini_counts_ref
+
+
+def split_evaluate(x, y, leaf, thresholds, n_classes: int, *,
+                   use_pallas: bool = True, interpret: bool = True,
+                   block_n: int = 1024):
+    """Returns (below [L, C, F], total [L, C]) over valid rows only."""
+    if not use_pallas:
+        return gini_counts_ref(x, y, leaf, thresholds, n_classes)
+    n = x.shape[0]
+    n_leaves = thresholds.shape[0]
+    bn = min(block_n, max(n, 8))
+    n_pad = -(-n // bn) * bn
+    if n_pad != n:
+        pad = n_pad - n
+        x = jnp.concatenate([x, jnp.zeros((pad, x.shape[1]), x.dtype)])
+        y = jnp.concatenate([y, jnp.zeros((pad,), y.dtype)])
+        # spill slot: one extra leaf row with very-negative thresholds
+        # (never <=).  Finite sentinel: the kernel's one-hot matmul would
+        # turn 0 * -inf into NaN.
+        leaf = jnp.concatenate(
+            [leaf, jnp.full((pad,), n_leaves, leaf.dtype)])
+        thresholds = jnp.concatenate(
+            [thresholds,
+             jnp.full((1, x.shape[1]), -1e30, thresholds.dtype)])
+    below, total = gini_counts(x, y, leaf, thresholds, n_classes=n_classes,
+                               block_n=bn, interpret=interpret)
+    return below[:n_leaves], total[:n_leaves]

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the Gini split-evaluate kernel (paper §3.3).
+
+Semantics: given points (x, class y, leaf id), one candidate threshold per
+(leaf, feature), produce per-(leaf, class, feature) below-threshold counts
+and per-(leaf, class) totals — the per-PIM-core part of split-evaluate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gini_counts_ref(x: jnp.ndarray, y: jnp.ndarray, leaf: jnp.ndarray,
+                    thresholds: jnp.ndarray, n_classes: int):
+    """x f32 [N, F]; y int32 [N]; leaf int32 [N] in [0, L);
+    thresholds f32 [L, F] -> (below int32 [L, C, F], total int32 [L, C])."""
+    n_leaves = thresholds.shape[0]
+    t = thresholds[leaf]                            # (N, F)
+    below = (x <= t).astype(jnp.int32)              # (N, F)
+    seg = leaf * n_classes + y
+    counts = jax.ops.segment_sum(below, seg,
+                                 num_segments=n_leaves * n_classes)
+    totals = jax.ops.segment_sum(jnp.ones_like(seg), seg,
+                                 num_segments=n_leaves * n_classes)
+    return (counts.reshape(n_leaves, n_classes, -1),
+            totals.reshape(n_leaves, n_classes))

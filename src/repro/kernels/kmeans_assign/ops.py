@@ -1,0 +1,34 @@
+"""jit'd wrapper for the K-Means assign kernel with ref fallback + padding."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernel import kmeans_assign
+from .ref import kmeans_assign_ref
+
+
+def assign_and_accumulate(x_q: jnp.ndarray, c_q: jnp.ndarray, *,
+                          use_pallas: bool = True, interpret: bool = True,
+                          block_n: int = 1024):
+    """Pads N to a block multiple, runs the kernel, and corrects the
+    padding's contribution (padding rows are zeros -> they land in whichever
+    cluster minimizes -2*0.c + ||c||^2; we subtract them from that cluster).
+    """
+    n = x_q.shape[0]
+    if not use_pallas:
+        return kmeans_assign_ref(x_q, c_q)
+    bn = min(block_n, max(n, 8))
+    n_pad = -(-n // bn) * bn
+    if n_pad != n:
+        xp = jnp.zeros((n_pad, x_q.shape[1]), x_q.dtype).at[:n].set(x_q)
+    else:
+        xp = x_q
+    labels, sums, counts = kmeans_assign(xp, c_q, block_n=bn,
+                                         interpret=interpret)
+    if n_pad != n:
+        c = c_q.astype(jnp.int32)
+        pad_label = jnp.argmin(jnp.sum(c * c, axis=1)).astype(jnp.int32)
+        n_fake = n_pad - n
+        counts = counts.at[pad_label].add(-n_fake)
+        labels = labels[:n]
+    return labels, sums, counts

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the K-Means assign/accumulate kernel.
+
+Semantics (paper §3.4): for each quantized point find the nearest centroid
+(squared L2, integer arithmetic), then produce per-cluster coordinate sums
+and counts — the per-PIM-core part of one Lloyd iteration.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def kmeans_assign_ref(x_q: jnp.ndarray, c_q: jnp.ndarray):
+    """x_q int16 [N, F]; c_q int16 [K, F]
+    -> (labels int32 [N], sums int32 [K, F], counts int32 [K])."""
+    x = x_q.astype(jnp.int32)
+    c = c_q.astype(jnp.int32)
+    cross = jax.lax.dot_general(x, c.T, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.int32)
+    cnorm = jnp.sum(c * c, axis=1)
+    dist = cnorm[None, :] - 2 * cross          # ||x||^2 omitted (argmin-inv)
+    labels = jnp.argmin(dist, axis=1).astype(jnp.int32)
+    k = c_q.shape[0]
+    onehot = (labels[:, None] == jnp.arange(k)[None, :]).astype(jnp.int32)
+    sums = jax.lax.dot_general(onehot.T, x, (((1,), (0,)), ((), ())),
+                               preferred_element_type=jnp.int32)
+    counts = jnp.sum(onehot, axis=0)
+    return labels, sums, counts

@@ -1,0 +1,57 @@
+"""Pallas TPU kernel: LUT-based sigmoid with the table pinned in VMEM.
+
+TPU adaptation of the paper's WRAM-resident sigmoid LUT (§3.2, Fig. 4):
+  DPU WRAM (64 KB)  ->  VMEM: the 40 KB table (20 x 1024 int16 entries)
+  rides along as a full-block input that the BlockSpec machinery keeps
+  resident across the whole grid (index_map pins block (0,) for every i).
+The "MRAM" variant of the paper corresponds to *not* using this kernel and
+letting XLA issue an HBM gather (ops.lut_sigmoid with placement="hbm").
+
+Each grid step processes one (block_rows, lanes) tile of the input: index
+clamp, one VMEM gather, reflection for negative inputs — the same three
+steps as the DPU kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lut_sigmoid_kernel(x_ref, lut_ref, o_ref, *, value_frac: int):
+    xq = x_ref[...].astype(jnp.int32)
+    table = lut_ref[...]
+    neg = xq < 0
+    idx = jnp.minimum(jnp.abs(xq), table.shape[0] - 1)
+    v = jnp.take(table, idx.reshape(-1), axis=0).reshape(xq.shape)
+    v = v.astype(jnp.int32)
+    one = jnp.int32(1 << value_frac)
+    o_ref[...] = jnp.where(neg, one - v, v)
+
+
+@functools.partial(jax.jit, static_argnames=("value_frac", "block_rows",
+                                             "interpret"))
+def lut_sigmoid_vmem(x_q: jnp.ndarray, table: jnp.ndarray, *,
+                     value_frac: int = 15, block_rows: int = 256,
+                     interpret: bool = False) -> jnp.ndarray:
+    """x_q: int32 Q(f) [rows, lanes]; table: int16 [n] -> int32 [rows, lanes].
+
+    The whole table is one VMEM block shared by every grid step; rows are
+    tiled so arbitrarily large activations stream through.
+    """
+    rows, lanes = x_q.shape
+    br = min(block_rows, rows)
+    assert rows % br == 0, (rows, br)
+    return pl.pallas_call(
+        functools.partial(_lut_sigmoid_kernel, value_frac=value_frac),
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((table.shape[0],), lambda i: (0,)),  # pinned
+        ],
+        out_specs=pl.BlockSpec((br, lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, lanes), jnp.int32),
+        interpret=interpret,
+    )(x_q, table)

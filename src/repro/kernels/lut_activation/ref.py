@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the LUT-activation kernel.
+
+Semantics (paper Fig. 4): fixed-point Q(frac_bits) input, symmetric sigmoid
+LUT over [0, boundary), int16 Q(value_frac) entries; negative inputs are
+reflected (sigmoid(-x) = 1 - sigmoid(x)).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def lut_sigmoid_ref(x_q: jnp.ndarray, table: jnp.ndarray,
+                    value_frac: int = 15) -> jnp.ndarray:
+    """x_q int32 Q(f) of any shape; table int16 [n]; -> int32 Q(value_frac)."""
+    xq = x_q.astype(jnp.int32)
+    neg = xq < 0
+    idx = jnp.minimum(jnp.abs(xq), table.shape[0] - 1)
+    v = table[idx].astype(jnp.int32)
+    one = jnp.int32(1 << value_frac)
+    return jnp.where(neg, one - v, v)
+
+
+def lut_gather_ref(x: jnp.ndarray, table: jnp.ndarray, x_min: float,
+                   x_max: float) -> jnp.ndarray:
+    """Float-grid LUT (ActivationLut semantics) for the LM-side kernel."""
+    n = table.shape[0]
+    t = (x.astype(jnp.float32) - x_min) / (x_max - x_min)
+    idx = jnp.clip(jnp.round(t * (n - 1)), 0, n - 1).astype(jnp.int32)
+    return table[idx].astype(x.dtype)

@@ -1,0 +1,50 @@
+"""jit'd public wrappers around the quantized matmul kernel.
+
+``quant_matmul``   : dequantizing int8 matmul (kernel or XLA ref path)
+``quant_dense``    : float-in/float-out PIM-style dense layer — quantizes
+                     activations on the fly (per-tensor) against int8
+                     weights (per-output-channel scales), the direct
+                     TPU analogue of LIN-HYB feeding an LM linear layer.
+
+``use_pallas=False`` routes to the pure-jnp oracle; that path is what the
+multi-pod dry-run lowers (Mosaic kernels only lower for real TPU targets —
+DESIGN.md §6), and XLA fuses it into a single int8 MXU matmul on TPU anyway.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import symmetric_quantize
+from .kernel import int_matmul
+from .ref import int_matmul_ref, quant_matmul_ref
+
+
+def quant_matmul(a_q, b_q, a_scale, b_scale, *, use_pallas: bool = True,
+                 interpret: bool = True, out_dtype=jnp.float32):
+    if use_pallas:
+        acc = int_matmul(a_q, b_q, interpret=interpret)
+    else:
+        acc = int_matmul_ref(a_q, b_q)
+    return (acc.astype(jnp.float32) * (a_scale * b_scale)).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def quant_dense(x: jnp.ndarray, w_q: jnp.ndarray, w_scale: jnp.ndarray,
+                *, use_pallas: bool = False,
+                interpret: bool = True) -> jnp.ndarray:
+    """x: float [..., K]; w_q: int8 [K, N]; w_scale: [1, N] per-channel.
+
+    Activations are quantized per-tensor on the fly (symmetric), matmul'd
+    in int8 -> int32, and dequantized — matching the paper's quantize-the-
+    dataset-once + integer-kernel flow, applied per layer.
+    """
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    x_q, xp = symmetric_quantize(x2, bits=8)
+    out = quant_matmul(x_q, w_q, xp.scale, w_scale,
+                       use_pallas=use_pallas, interpret=interpret)
+    return out.reshape(*lead, -1).astype(x.dtype)

@@ -1,0 +1,228 @@
+"""Loop-corrected HLO cost extraction for the roofline (deliverable (g)).
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified
+experimentally: a scan of 8 matmuls reports the flops of 1 — see
+EXPERIMENTS.md §Roofline "methodology").  Since every model here scans
+over layer units / microbatches / chunks, raw numbers undercount by
+10-1000x.  This module parses the compiled HLO text:
+
+  - splits it into named computations,
+  - walks the call graph from ENTRY, multiplying by each while op's
+    ``known_trip_count`` backend_config,
+  - counts per-computation dot FLOPs (2*M*N*K from operand shapes),
+    collective payload bytes by kind, and materialized buffer bytes,
+
+yielding trip-corrected totals.  Elementwise FLOPs are ignored (dots
+dominate at these shapes); buffer bytes approximate HBM traffic as
+(bytes written + bytes read) at fusion boundaries.
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "u64": 8,
+                "c64": 8, "c128": 16, "s4": 1, "u4": 1}
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*{\s*$")
+_SHAPE = re.compile(r"(f64|f32|bf16|f16|s64|s32|u64|u32|s16|u16|s8|u8|pred|"
+                    r"f8e4m3fn|f8e5m2|c64|c128|s4|u4)\[([0-9,]*)\]")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_CALLS = re.compile(r"(?:calls|body|condition|branch_computations)=\{?%?([\w.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+# ops whose output buffers we do not count as HBM traffic
+_NO_TRAFFIC = ("parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "copy-done", "after-all", "iota")
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for m in _SHAPE.finditer(txt):
+        n = 1
+        dims = m.group(2)
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[m.group(1)]
+    return total
+
+
+def _shape_dims(txt: str) -> Optional[Tuple[str, List[int]]]:
+    m = _SHAPE.search(txt)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d] if m.group(2) else []
+    return m.group(1), dims
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.lines: List[str] = []
+        # parsed:
+        self.dot_flops = 0.0
+        self.conv_flops = 0.0
+        self.coll_bytes: Dict[str, float] = {}
+        self.coll_counts: Dict[str, int] = {}
+        self.traffic_bytes = 0.0
+        self.subcalls: List[Tuple[str, str, int]] = []  # (kind, name, trips)
+
+
+def parse_hlo(hlo: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for line in hlo.splitlines():
+        stripped = line.rstrip()
+        if stripped.endswith("{") and ("->" in stripped or
+                                       stripped.startswith("ENTRY")):
+            m = _COMP_HEADER.match(stripped.strip())
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if stripped.strip().startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if stripped.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            cur.lines.append(stripped)
+    for c in comps.values():
+        _analyze_computation(c)
+    if entry:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _operand_names(rhs: str) -> List[str]:
+    # operands are inside the first (...) after the op name
+    i = rhs.find("(")
+    if i < 0:
+        return []
+    depth = 0
+    for j in range(i, len(rhs)):
+        if rhs[j] == "(":
+            depth += 1
+        elif rhs[j] == ")":
+            depth -= 1
+            if depth == 0:
+                inner = rhs[i + 1: j]
+                return re.findall(r"%([\w.\-]+)", inner)
+    return []
+
+
+def _analyze_computation(c: Computation) -> None:
+    shapes: Dict[str, str] = {}          # instr name -> shape text
+    for line in c.lines:
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        shapes[name] = rhs.split("=")[0] if "=" in rhs else rhs
+        shapes[name] = rhs  # full rhs keeps the shape prefix
+        opm = re.match(r"(\([^)]*\)|[\w\[\],{}\s]+?)\s*([a-z][\w\-]*)\(",
+                       rhs)
+        op = opm.group(2) if opm else ""
+
+        # sub-computation calls (while bodies, fusions, conditionals)
+        if op == "while":
+            trips = 1
+            tm = _TRIP.search(line)
+            if tm:
+                trips = int(tm.group(1))
+            for cm in _CALLS.finditer(line):
+                c.subcalls.append(("while", cm.group(1), trips))
+        elif "calls=" in line and op in ("fusion", "call", "custom-call"):
+            for cm in _CALLS.finditer(line):
+                c.subcalls.append(("call", cm.group(1), 1))
+        elif op == "conditional":
+            for cm in _CALLS.finditer(line):
+                c.subcalls.append(("call", cm.group(1), 1))
+
+        # collectives (sync or -start async forms)
+        base = op.replace("-start", "")
+        if base in _COLLECTIVES and not op.endswith("-done"):
+            nbytes = _shape_bytes(rhs.split(op)[0])
+            c.coll_bytes[base] = c.coll_bytes.get(base, 0) + nbytes
+            c.coll_counts[base] = c.coll_counts.get(base, 0) + 1
+
+        # dot flops: 2 * prod(out) * prod(contracting dims of lhs)
+        if op in ("dot", "dot-general"):
+            out = _shape_dims(rhs.split(op)[0])
+            lhs_ops = _operand_names(rhs)
+            k = 1
+            cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+            if out and cm and lhs_ops:
+                lhs_shape = _find_shape_of(c, lhs_ops[0])
+                if lhs_shape:
+                    for d in cm.group(1).split(","):
+                        if d and int(d) < len(lhs_shape[1]):
+                            k *= lhs_shape[1][int(d)]
+                    n_out = 1
+                    for d in out[1]:
+                        n_out *= d
+                    c.dot_flops += 2.0 * n_out * k
+        if op == "convolution":
+            out = _shape_dims(rhs.split(op)[0])
+            if out:
+                n_out = 1
+                for d in out[1]:
+                    n_out *= d
+                # depthwise convs here: K taps per output element
+                c.conv_flops += 2.0 * n_out * 4
+
+        # HBM traffic proxy: materialized outputs (write) + read once
+        if op and op not in _NO_TRAFFIC and not op.endswith("-done"):
+            c.traffic_bytes += 2.0 * _shape_bytes(rhs.split("(")[0])
+
+
+def _find_shape_of(c: Computation, name: str) -> Optional[Tuple[str, list]]:
+    for line in c.lines:
+        m = _INSTR.match(line)
+        if m and m.group(1) == name:
+            return _shape_dims(m.group(2))
+    return None
+
+
+def corrected_totals(hlo: str) -> dict:
+    comps = parse_hlo(hlo)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return {"flops": 0, "collective_bytes": 0, "traffic_bytes": 0,
+                "collectives": {}, "note": "no ENTRY computation found"}
+
+    mult: Dict[str, float] = {}
+
+    def walk(name: str, m: float):
+        c = comps.get(name)
+        if c is None:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for kind, sub, trips in c.subcalls:
+            walk(sub, m * trips)
+
+    walk(entry.name, 1.0)
+
+    flops = 0.0
+    traffic = 0.0
+    coll: Dict[str, float] = {}
+    counts: Dict[str, float] = {}
+    for name, m in mult.items():
+        c = comps[name]
+        flops += m * (c.dot_flops + c.conv_flops)
+        traffic += m * c.traffic_bytes
+        for k, v in c.coll_bytes.items():
+            coll[k] = coll.get(k, 0.0) + m * v
+            counts[k] = counts.get(k, 0.0) + m * c.coll_counts[k]
+    return {"flops": flops,
+            "traffic_bytes": traffic,
+            "collective_bytes": sum(coll.values()),
+            "collectives": {k: v for k, v in sorted(coll.items())},
+            "collective_counts": {k: int(v) for k, v in counts.items()}}

@@ -1,0 +1,24 @@
+"""Production mesh construction (deliverable (e), MULTI-POD DRY-RUN §1).
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips/pod; 2 pods = 512 chips with a leading "pod" axis."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_mesh(shape: tuple, axes: tuple):
+    """Arbitrary mesh for tests / elastic rescale."""
+    return jax.make_mesh(shape, axes)
+
+
+def describe(mesh) -> str:
+    return " x ".join(f"{a}={mesh.shape[a]}" for a in mesh.axis_names)

@@ -1,0 +1,139 @@
+"""Roofline analysis (deliverable (g)) — reads experiments/dryrun_results.json.
+
+Per (arch x shape x mesh):
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / (links * link_bw)
+
+All three in seconds-per-step for ONE chip's program (the dry-run HLO is
+the per-device SPMD program).  The dominant term is the bottleneck; the
+roofline fraction reported in EXPERIMENTS.md §Perf is
+    useful_time / max(term)   with   useful_time = MODEL_FLOPS /
+                                     (n_chips * peak)
+i.e. how close the useful math comes to the achievable step time.
+
+FLOPs/bytes come from the loop-corrected HLO walk (launch/hlo_analysis) —
+``cost_analysis()`` counts while bodies once (verified; its raw numbers
+are retained in the JSON for reference).  Collective bytes are summed from
+the per-op payloads in the compiled HLO, trip-corrected the same way.
+
+Hardware constants (TPU v5e class, per the assignment):
+  197 TFLOP/s bf16 per chip - 819 GB/s HBM - ~50 GB/s/link ICI.
+We charge the collective term at 2 links' worth of concurrent ICI
+bandwidth (a 2-D torus drives >= 2 links for ring collectives along one
+axis); single-link numbers are 2x larger, noted in the table.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s
+ICI_LINK_BW = 50e9           # B/s per link
+ICI_LINKS = 2                # concurrent links charged for collectives
+
+RESULTS_PATH = "experiments/dryrun_results.json"
+
+
+def terms(entry: dict, n_chips: int, arch: str = "",
+          shape_name: str = "") -> Optional[dict]:
+    if entry.get("status") != "ok":
+        return None
+    corr = entry["corrected"]
+    ana = entry["analytic"]
+    t_compute = corr["flops"] / PEAK_FLOPS
+    if arch and shape_name:
+        from repro.configs.base import get_config
+        from repro.configs.shapes import shape_for
+        from repro.launch.analytic import memory_bytes
+        cfg = get_config(arch)
+        mem = memory_bytes(cfg, shape_for(cfg, shape_name), n_chips)
+        t_memory = mem["total"] / HBM_BW
+    else:
+        t_memory = corr["traffic_bytes"] / HBM_BW
+    t_coll = corr["collective_bytes"] / (ICI_LINKS * ICI_LINK_BW)
+    bound = max(("compute", t_compute), ("memory", t_memory),
+                ("collective", t_coll), key=lambda kv: kv[1])[0]
+    useful = ana["model_flops"] / (n_chips * PEAK_FLOPS)
+    step = max(t_compute, t_memory, t_coll)
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bound": bound,
+        "model_flops": ana["model_flops"],
+        "hlo_flops_per_chip": corr["flops"],
+        "useful_ratio": ana["model_flops"] / max(
+            corr["flops"] * n_chips, 1e-9),
+        "roofline_fraction": useful / max(step, 1e-30),
+        "step_time_s": step,
+    }
+
+
+def _fmt(x: float) -> str:
+    return f"{x:.3e}"
+
+
+def build_table(results: dict, mesh: str = "1pod") -> list:
+    rows = []
+    for key, entry in sorted(results.items()):
+        parts = key.split("|")
+        if len(parts) != 3:
+            continue  # --mesh-shape experiment entries
+        arch, shape, m = parts
+        if m != mesh:
+            continue
+        if entry.get("status") == "skipped":
+            rows.append({"arch": arch, "shape": shape,
+                         "status": "skipped",
+                         "reason": entry.get("reason", "")[:60]})
+            continue
+        if entry.get("status") != "ok":
+            rows.append({"arch": arch, "shape": shape, "status": "error"})
+            continue
+        n_chips = entry.get("n_devices", 256)
+        t = terms(entry, n_chips, arch, shape)
+        rows.append({"arch": arch, "shape": shape, "status": "ok", **t})
+    return rows
+
+
+def render_markdown(rows: list, mesh: str) -> str:
+    out = [f"### Roofline — {mesh} mesh", "",
+           "| arch | shape | compute s | memory s | collective s | bound |"
+           " MODEL/HLO | roofline frac |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                       f"{r['status']} | — | — |")
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt(r['t_compute_s'])} | "
+            f"{_fmt(r['t_memory_s'])} | {_fmt(r['t_collective_s'])} | "
+            f"{r['bound']} | {r['useful_ratio']:.3f} | "
+            f"{r['roofline_fraction']:.3f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default=RESULTS_PATH)
+    ap.add_argument("--out", default="experiments/roofline.md")
+    args = ap.parse_args()
+    with open(args.results) as f:
+        results = json.load(f)
+    sections = []
+    for mesh in ("1pod", "2pod"):
+        rows = build_table(results, mesh)
+        if rows:
+            sections.append(render_markdown(rows, mesh))
+    text = "\n\n".join(sections) + "\n"
+    with open(args.out, "w") as f:
+        f.write(text)
+    print(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,120 @@
+"""Unified model facade over all architecture families + input_specs.
+
+``Model(cfg)`` exposes init/loss/forward/prefill/decode_step uniformly;
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+input of the lowered step (weak-type-correct, shardable, no allocation) —
+the dry-run contract (deliverable (e)).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.configs.shapes import InputShape
+from . import encdec, transformer
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.is_encdec = cfg.family == "audio"
+
+    # -- init -----------------------------------------------------------------
+    def init(self, key):
+        if self.is_encdec:
+            return encdec.init_encdec(self.cfg, key)
+        return transformer.init_lm(self.cfg, key)
+
+    def param_shapes(self):
+        return jax.eval_shape(
+            lambda k: self.init(k), jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+    # -- training -------------------------------------------------------------
+    def loss(self, params, batch: dict) -> jnp.ndarray:
+        cfg = self.cfg
+        if self.is_encdec:
+            return encdec.encdec_loss(cfg, params, batch["frames"],
+                                      batch["tokens"], batch["targets"])
+        extras = {}
+        if cfg.family == "vlm":
+            extras["cross_states"] = batch["vision"]
+        return transformer.lm_loss(cfg, params, batch["tokens"],
+                                   batch["targets"], extras)
+
+    def forward(self, params, batch: dict):
+        cfg = self.cfg
+        if self.is_encdec:
+            enc = encdec.encode(cfg, params, batch["frames"])
+            return encdec.decoder_forward(cfg, params, batch["tokens"], enc)
+        extras = {}
+        if cfg.family == "vlm":
+            extras["cross_states"] = batch["vision"]
+        logits, _ = transformer.lm_forward(cfg, params, batch["tokens"],
+                                           extras)
+        return logits
+
+    # -- serving ----------------------------------------------------------------
+    def prefill(self, params, batch: dict, max_seq: int):
+        cfg = self.cfg
+        if self.is_encdec:
+            return encdec.encdec_prefill(cfg, params, batch["frames"],
+                                         batch["tokens"], max_seq)
+        extras = {}
+        if cfg.family == "vlm":
+            extras["cross_states"] = batch["vision"]
+        return transformer.lm_prefill(cfg, params, batch["tokens"],
+                                      max_seq, extras)
+
+    def decode_step(self, params, tokens, cache, extras=None):
+        cfg = self.cfg
+        if self.is_encdec:
+            return encdec.encdec_decode_step(cfg, params, tokens, cache)
+        logits, cache = transformer.lm_decode_step(cfg, params, tokens,
+                                                   cache, extras or {})
+        return logits, cache
+
+    def init_cache(self, batch: int, max_seq: int):
+        cfg = self.cfg
+        if self.is_encdec:
+            return encdec.init_dec_cache(cfg, batch, max_seq)
+        return transformer.init_cache(cfg, batch, max_seq)
+
+    def cache_shapes(self, batch: int, max_seq: int):
+        return jax.eval_shape(lambda: self.init_cache(batch, max_seq))
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> dict:
+    """ShapeDtypeStruct stand-ins for the step's data inputs.
+
+    train   : {tokens, targets (+vision/frames)}
+    prefill : {tokens (+vision/frames)}
+    decode  : {tokens [B,1], cache}
+    """
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    tok = jnp.int32
+    model = Model(cfg)
+    if shape.kind == "train":
+        spec = {"tokens": _sds((b, s), tok), "targets": _sds((b, s), tok)}
+        if cfg.family == "vlm":
+            spec["vision"] = _sds((b, cfg.vision_tokens, cfg.vision_dim), dt)
+        if cfg.family == "audio":
+            spec["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), dt)
+        return spec
+    if shape.kind == "prefill":
+        spec = {"tokens": _sds((b, s), tok)}
+        if cfg.family == "vlm":
+            spec["vision"] = _sds((b, cfg.vision_tokens, cfg.vision_dim), dt)
+        if cfg.family == "audio":
+            spec["frames"] = _sds((b, cfg.encoder_seq, cfg.d_model), dt)
+        return spec
+    # decode: one new token against a seq_len KV cache
+    cache = model.cache_shapes(b, s)
+    return {"tokens": _sds((b, 1), tok), "cache": cache}

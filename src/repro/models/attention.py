@@ -1,0 +1,272 @@
+"""Attention layers: GQA, KV cache, sliding-window, cross-attention.
+
+TP divisibility (DESIGN.md §4): `plan_heads` pads query heads up to a
+multiple of the model-parallel degree and replicates KV heads so the
+(heads -> "model") sharding always divides.  Padded heads are zero-init
+and receive zero gradient signal only through their (dead) output slice;
+the padding waste is visible in the roofline MODEL_FLOPS/HLO_FLOPs ratio.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_sharding import constrain
+from repro.kernels.flash_attention.ops import mha
+from .layers import apply_rope, dense_init, rms_norm
+
+
+class HeadPlan(NamedTuple):
+    n_q: int          # padded query heads
+    n_kv: int         # padded kv heads
+    group: int        # q heads per kv head (after padding)
+    n_q_real: int
+    n_kv_real: int
+
+
+def plan_heads(n_q: int, n_kv: int, tp: int = 16) -> HeadPlan:
+    """Pad (n_q, n_kv) to multiples of ``tp`` with integral GQA groups.
+
+    kv < tp (e.g. GQA kv=8 on a 16-way model axis) is realized by kv-head
+    replication at init; odd counts (hymba 25H/kv5, whisper 6H) pad with
+    dead heads.  Waste is intentional + measured (DESIGN.md §4).
+    """
+    n_kv_p = _next_multiple(n_kv, tp)
+    n_q_p = _next_multiple(n_q, tp)
+    while n_q_p % n_kv_p != 0:
+        n_q_p += tp
+    return HeadPlan(n_q_p, n_kv_p, n_q_p // n_kv_p, n_q, n_kv)
+
+
+def _next_multiple(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnSpec:
+    d_model: int
+    plan: HeadPlan
+    head_dim: int
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope_fraction: float = 1.0
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-5
+    kv_dim: int = 0    # cross-attn source dim (0 -> d_model)
+
+
+def init_attention(key, spec: AttnSpec, dtype, cross: bool = False):
+    ks = jax.random.split(key, 6)
+    kv_in = (spec.kv_dim or spec.d_model) if cross else spec.d_model
+    p = {
+        "wq": dense_init(ks[0], spec.d_model,
+                         spec.plan.n_q * spec.head_dim, dtype),
+        "wk": dense_init(ks[1], kv_in,
+                         spec.plan.n_kv * spec.head_dim, dtype),
+        "wv": dense_init(ks[2], kv_in,
+                         spec.plan.n_kv * spec.head_dim, dtype),
+        "wo": dense_init(ks[3], spec.plan.n_q * spec.head_dim,
+                         spec.d_model, dtype),
+    }
+    if spec.qkv_bias:
+        p["bq"] = jnp.zeros((spec.plan.n_q * spec.head_dim,), dtype)
+        p["bk"] = jnp.zeros((spec.plan.n_kv * spec.head_dim,), dtype)
+        p["bv"] = jnp.zeros((spec.plan.n_kv * spec.head_dim,), dtype)
+    if spec.qk_norm:
+        p["q_norm"] = jnp.ones((spec.head_dim,), dtype)
+        p["k_norm"] = jnp.ones((spec.head_dim,), dtype)
+    return p
+
+
+class KVCache(NamedTuple):
+    """Static-shape cache; ``length`` is the filled prefix.
+
+    int8 mode (the paper's quantization technique applied to the
+    decode-cell memory bound): k/v stored int8 with per-(batch, head,
+    position) f32 scales — the KV read, which dominates decode HBM
+    traffic, halves.  ``k_scale is None`` <=> unquantized storage.
+    """
+    k: jnp.ndarray          # [B, Hkv, S_max, D] (dtype or int8)
+    v: jnp.ndarray
+    length: jnp.ndarray     # int32 scalar
+    k_scale: Optional[jnp.ndarray] = None   # [B, Hkv, S_max] f32
+    v_scale: Optional[jnp.ndarray] = None
+
+
+def init_kv_cache(batch: int, plan: HeadPlan, head_dim: int, max_seq: int,
+                  dtype, bits: int = 16) -> KVCache:
+    shape = (batch, plan.n_kv, max_seq, head_dim)
+    if bits == 8:
+        sshape = shape[:-1]
+        return KVCache(jnp.zeros(shape, jnp.int8),
+                       jnp.zeros(shape, jnp.int8),
+                       jnp.zeros((), jnp.int32),
+                       jnp.ones(sshape, jnp.float32),
+                       jnp.ones(sshape, jnp.float32))
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype),
+                   jnp.zeros((), jnp.int32))
+
+
+def quantize_kv(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """[..., D] -> (int8 [..., D], f32 scale [...]) per-vector symmetric."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q: jnp.ndarray, scale: jnp.ndarray,
+                  dtype) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def _project_qkv(params, spec: AttnSpec, x: jnp.ndarray,
+                 positions: Optional[jnp.ndarray], rope: bool = True):
+    b, s, _ = x.shape
+    hd = spec.head_dim
+    q = x @ params["wq"].astype(x.dtype)
+    k = x @ params["wk"].astype(x.dtype)
+    v = x @ params["wv"].astype(x.dtype)
+    if spec.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = q.reshape(b, s, spec.plan.n_q, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, spec.plan.n_kv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, spec.plan.n_kv, hd).transpose(0, 2, 1, 3)
+    if spec.qk_norm:
+        q = rms_norm(q, params["q_norm"], spec.norm_eps)
+        k = rms_norm(k, params["k_norm"], spec.norm_eps)
+    if rope and positions is not None and spec.rope_fraction > 0:
+        q = apply_rope(q, positions, spec.rope_fraction, spec.rope_theta)
+        k = apply_rope(k, positions, spec.rope_fraction, spec.rope_theta)
+    return (constrain(q, "bhsd"), constrain(k, "bhsd"),
+            constrain(v, "bhsd"))
+
+
+def _sdpa(q, k, v, *, causal: bool, q_offset: int = 0,
+          window: Optional[int] = None, kv_len: Optional[jnp.ndarray] = None,
+          use_pallas: bool = False) -> jnp.ndarray:
+    """Scaled dot-product attention with GQA + optional sliding window and
+    valid-kv-length masking (for static-shape caches).
+
+    Only the fully-causal unwindowed path routes to the Pallas kernel; the
+    masked variants use the XLA path (windowing inside the kernel is a
+    §Perf hillclimb item, not needed for correctness).
+    """
+    if window is None and kv_len is None and use_pallas:
+        return mha(q, k, v, causal=causal, q_offset=q_offset,
+                   use_pallas=True)
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    if hq != hkv:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    # bf16 operands + f32 accumulation: full MXU rate, f32-stable softmax
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) / (d ** 0.5)
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    if kv_len is not None:
+        mask &= kpos < kv_len
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def attention(params, spec: AttnSpec, x: jnp.ndarray,
+              positions: jnp.ndarray, *, window: Optional[int] = None,
+              meta_kv: Optional[tuple] = None,
+              use_pallas: bool = False) -> jnp.ndarray:
+    """Training / prefill path (full sequence, causal)."""
+    q, k, v = _project_qkv(params, spec, x, positions)
+    if meta_kv is not None:       # hymba meta tokens: extra unmasked kv
+        mk, mv = meta_kv
+        b = x.shape[0]
+        mk = jnp.broadcast_to(mk[None], (b,) + mk.shape).astype(k.dtype)
+        mv = jnp.broadcast_to(mv[None], (b,) + mv.shape).astype(v.dtype)
+        n_meta = mk.shape[2]
+        k = jnp.concatenate([mk, k], axis=2)
+        v = jnp.concatenate([mv, v], axis=2)
+        out = _sdpa(q, k, v, causal=True, q_offset=n_meta, window=window)
+    else:
+        out = _sdpa(q, k, v, causal=True, window=window,
+                    use_pallas=use_pallas)
+    b, h, s, hd = out.shape
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    return out @ params["wo"].astype(x.dtype)
+
+
+def attention_decode(params, spec: AttnSpec, x: jnp.ndarray,
+                     cache: KVCache, *, window: Optional[int] = None
+                     ) -> tuple[jnp.ndarray, KVCache]:
+    """Single-token decode: append to the cache, attend to the prefix."""
+    b, s, _ = x.shape  # s == 1
+    pos = cache.length + jnp.arange(s)
+    q, k, v = _project_qkv(params, spec, x, pos[None].astype(jnp.int32))
+    if cache.k_scale is not None:           # int8 cache (see KVCache doc)
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        new_k = jax.lax.dynamic_update_slice(
+            cache.k, kq, (0, 0, cache.length, 0))
+        new_v = jax.lax.dynamic_update_slice(
+            cache.v, vq, (0, 0, cache.length, 0))
+        new_ks = jax.lax.dynamic_update_slice(
+            cache.k_scale, ks, (0, 0, cache.length))
+        new_vs = jax.lax.dynamic_update_slice(
+            cache.v_scale, vs, (0, 0, cache.length))
+        k_full = dequantize_kv(new_k, new_ks, x.dtype)
+        v_full = dequantize_kv(new_v, new_vs, x.dtype)
+        new_cache = KVCache(new_k, new_v, cache.length + s,
+                            new_ks, new_vs)
+    else:
+        new_k = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, 0, cache.length, 0))
+        new_v = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, 0, cache.length, 0))
+        k_full, v_full = new_k, new_v
+        new_cache = KVCache(new_k, new_v, cache.length + s)
+    out = _sdpa(q, k_full, v_full, causal=True, q_offset=cache.length,
+                window=window, kv_len=cache.length + s)
+    b_, h, s_, hd = out.shape
+    out = out.transpose(0, 2, 1, 3).reshape(b_, s_, h * hd)
+    out = out @ params["wo"].astype(x.dtype)
+    return out, new_cache
+
+
+def cross_attention(params, spec: AttnSpec, x: jnp.ndarray,
+                    kv_states: jnp.ndarray) -> jnp.ndarray:
+    """Encoder-decoder / vision cross-attention (no causal mask, no rope)."""
+    b, s, _ = x.shape
+    hd = spec.head_dim
+    q = (x @ params["wq"].astype(x.dtype))
+    if spec.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+    q = q.reshape(b, s, spec.plan.n_q, hd).transpose(0, 2, 1, 3)
+    kv = kv_states.astype(x.dtype)
+    k = (kv @ params["wk"].astype(x.dtype))
+    v = (kv @ params["wv"].astype(x.dtype))
+    if spec.qkv_bias:
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    sk = kv.shape[1]
+    k = k.reshape(b, sk, spec.plan.n_kv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, sk, spec.plan.n_kv, hd).transpose(0, 2, 1, 3)
+    if spec.qk_norm:
+        q = rms_norm(q, params["q_norm"], spec.norm_eps)
+        k = rms_norm(k, params["k_norm"], spec.norm_eps)
+    out = _sdpa(q, k, v, causal=False)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, -1)
+    return out @ params["wo"].astype(x.dtype)

@@ -1,0 +1,161 @@
+"""Shared neural-net layers (pure-functional JAX).
+
+Conventions:
+  - params are nested dicts of jnp arrays; init fns take a PRNG key.
+  - all matmuls run in the config dtype (bf16 by default) with f32
+    normalization statistics and f32 loss.
+  - the paper's techniques surface here as two switches used by every
+    linear layer / activation: ``quantize_dense`` (int8 weight path, the
+    LIN-HYB analogue — see models/quantized.py) and ``lut_activations``
+    (LOG-LUT analogue).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lut import ActivationLut, gelu_lut, silu_lut
+
+# Module-level LUTs (built once; 16 KB each — the VMEM budget argument from
+# the paper's Fig. 4 carries over).
+_ACT_LUTS: dict[str, ActivationLut] = {}
+
+
+def _get_act_lut(name: str) -> ActivationLut:
+    if name not in _ACT_LUTS:
+        _ACT_LUTS[name] = {"silu": silu_lut, "gelu": gelu_lut}[name]()
+    return _ACT_LUTS[name]
+
+
+def activation(x: jnp.ndarray, name: str, lut: bool = False) -> jnp.ndarray:
+    if lut:
+        return _get_act_lut(name)(x)
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x)
+    raise ValueError(name)
+
+
+# -- initializers -----------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02
+            ).astype(dtype)
+
+
+# -- norms -------------------------------------------------------------------
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray,
+             eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(x: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# -- rotary embeddings --------------------------------------------------------
+
+def rope_frequencies(head_dim: int, fraction: float, theta: float
+                     ) -> np.ndarray:
+    """Inverse frequencies for the rotary fraction of the head dim."""
+    rot = int(head_dim * fraction) // 2 * 2
+    return 1.0 / (theta ** (np.arange(0, rot, 2, dtype=np.float64) / rot))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, fraction: float,
+               theta: float) -> jnp.ndarray:
+    """x: [B, H, S, D]; positions: [B, S] or [S].  Partial rotary supported
+    (stablelm-style): only the first ``fraction`` of D is rotated."""
+    d = x.shape[-1]
+    rot = int(d * fraction) // 2 * 2
+    if rot == 0:
+        return x
+    inv = jnp.asarray(rope_frequencies(d, fraction, theta), jnp.float32)
+    pos = positions.astype(jnp.float32)
+    ang = pos[..., None] * inv  # [B?, S, rot/2]
+    if ang.ndim == 2:           # [S, rot/2] -> broadcast over batch
+        ang = ang[None]
+    cos = jnp.cos(ang)[:, None, :, :]  # [B, 1, S, rot/2]
+    sin = jnp.sin(ang)[:, None, :, :]
+    xr = x[..., :rot].astype(jnp.float32)
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    rx1 = x1 * cos - x2 * sin
+    rx2 = x1 * sin + x2 * cos
+    rotated = jnp.stack([rx1, rx2], axis=-1).reshape(x[..., :rot].shape)
+    return jnp.concatenate(
+        [rotated.astype(x.dtype), x[..., rot:]], axis=-1)
+
+
+def sinusoidal_positions(n: int, d: int) -> np.ndarray:
+    """Whisper-style sinusoidal position embeddings, computed on the fly."""
+    pos = np.arange(n)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    angle = pos / np.power(10000.0, 2 * dim / d)
+    return np.concatenate([np.sin(angle), np.cos(angle)],
+                          axis=1).astype(np.float32)
+
+
+# -- dense layer with the paper's quantized path -------------------------------
+
+def linear(x: jnp.ndarray, w, bias: Optional[jnp.ndarray] = None,
+           quantized: bool = False) -> jnp.ndarray:
+    """w is either a raw array or a QuantizedWeight dict (models/quantized).
+
+    The quantized path is the paper's hybrid-precision technique applied to
+    LM linears: int8 weights, on-the-fly int8 activations, int32 MXU
+    accumulation (kernels/quant_matmul).
+    """
+    if quantized:
+        from repro.models.quantized import pim_dense
+        out = pim_dense(x, w)
+    else:
+        out = x @ w.astype(x.dtype)
+    if bias is not None:
+        out = out + bias.astype(out.dtype)
+    return out
+
+
+# -- MLP blocks ----------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype, gated: bool = True):
+    ks = jax.random.split(key, 3)
+    p = {"up": dense_init(ks[0], d_model, d_ff, dtype),
+         "down": dense_init(ks[1], d_ff, d_model, dtype)}
+    if gated:
+        p["gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def mlp(params, x: jnp.ndarray, act: str = "silu", lut: bool = False,
+        quantized: bool = False) -> jnp.ndarray:
+    from repro.distributed.act_sharding import constrain
+    up = constrain(linear(x, params["up"], quantized=quantized), "btf")
+    if "gate" in params:
+        g = activation(
+            constrain(linear(x, params["gate"], quantized=quantized),
+                      "btf"), act, lut)
+        h = g * up
+    else:
+        h = activation(up, act, lut)
+    return linear(h, params["down"], quantized=quantized)

@@ -1,0 +1,160 @@
+"""Mixture-of-Experts layer with expert parallelism (dbrx / qwen2-moe).
+
+Dispatch uses the GShard-style dense formulation (one-hot matmuls with a
+per-expert capacity), which (a) lowers on every backend, (b) under pjit
+with experts sharded over the "model" axis becomes the dispatch/combine
+all-to-all pair on TPU, and (c) keeps shapes static for the dry-run.
+
+Expert-count padding (DESIGN.md §4): qwen2-moe's 60 routed experts pad to
+64 so EP=16 divides; the router logits of padding experts are masked to
+-inf, so they are never selected and their (zero-init) weights never get
+tokens routed to them.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .layers import activation, dense_init, init_mlp, mlp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeSpec:
+    d_model: int
+    n_experts: int          # padded count (divisible by EP)
+    n_experts_real: int
+    top_k: int
+    d_ff: int               # per-expert hidden
+    capacity_factor: float = 1.25
+    activation: str = "silu"
+    dispatch: str = "gather"  # "gather" (scatter/gather, ~0 dispatch
+    #                           flops) | "dense" (one-hot matmuls —
+    #                           §Perf baseline, kept for comparison)
+    groups: int = 1           # group-local routing: tokens route within
+    #                           their group; set == data-parallel degree so
+    #                           dispatch scatters/gathers never cross data
+    #                           shards (§Perf iteration A2)
+
+
+def pad_experts(n_experts: int, ep: int = 16) -> int:
+    return -(-n_experts // ep) * ep
+
+
+def init_moe(key, spec: MoeSpec, dtype):
+    ks = jax.random.split(key, 4)
+    e, d, f = spec.n_experts, spec.d_model, spec.d_ff
+    scale = 1.0 / jnp.sqrt(d).astype(jnp.float32)
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        # stacked expert weights: E is the EP sharding axis
+        "w_gate": (jax.random.normal(ks[1], (e, d, f), jnp.float32)
+                   * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (e, d, f), jnp.float32)
+                 * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (e, f, d), jnp.float32)
+                   * (1.0 / jnp.sqrt(f))).astype(dtype),
+    }
+    return p
+
+
+def _route(params, spec: MoeSpec, xt: jnp.ndarray):
+    """Router: top-k gates + load-balancing aux + capacity positions."""
+    t = xt.shape[0]
+    e, k = spec.n_experts, spec.top_k
+    logits = xt.astype(jnp.float32) @ params["router"]
+    if spec.n_experts_real < e:  # mask padding experts
+        pad_mask = jnp.arange(e) >= spec.n_experts_real
+        logits = jnp.where(pad_mask[None], -1e30, logits)
+    gval, gidx = jax.lax.top_k(logits, k)                 # (t, k)
+    gates = jax.nn.softmax(gval, axis=-1)                 # (t, k)
+    probs = jax.nn.softmax(logits, axis=-1)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jax.nn.one_hot(gidx, e, dtype=jnp.float32).sum(axis=1), axis=0)
+    aux = jnp.sum(me * ce) * (e / k)
+    # position of each (token, slot) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(gidx, e, dtype=jnp.int32)     # (t, k, e)
+    pos = jnp.cumsum(onehot.reshape(t * k, e), axis=0) * \
+        onehot.reshape(t * k, e) - 1                      # (t*k, e)
+    pos = (pos.reshape(t, k, e) * onehot).sum(-1)         # (t, k)
+    return gates, gidx, pos, aux
+
+
+def moe_apply(params, spec: MoeSpec, x: jnp.ndarray,
+              lut: bool = False) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, d] -> (out [B, S, d], aux_loss scalar).
+
+    dispatch="gather" (default): scatter token ids into per-expert
+    capacity buffers and gather activations — ~zero dispatch FLOPs; under
+    EP sharding GSPMD turns the cross-shard gathers into all-to-all-class
+    collectives.  §Perf measured 19x HLO-FLOPs reduction vs the one-hot
+    "dense" baseline on qwen2-moe train_4k (EXPERIMENTS.md).
+    """
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    e, k = spec.n_experts, spec.top_k
+    G = spec.groups if t % max(spec.groups, 1) == 0 else 1
+    tg = t // G
+    cap = int(max(k * tg / e * spec.capacity_factor, 1))
+    cap = min(cap, k * tg)  # never exceed the total assignment count
+
+    from repro.distributed.act_sharding import constrain
+    if spec.dispatch == "dense":
+        gates, gidx, pos, aux = _route(params, spec, xt)
+        keep = (pos >= 0) & (pos < cap)
+        pos_c = jnp.clip(pos, 0, cap - 1)
+        pos_oh = jax.nn.one_hot(pos_c, cap, dtype=jnp.float32) * \
+            keep[..., None].astype(jnp.float32)           # (t, k, cap)
+        eh = jax.nn.one_hot(gidx, e, dtype=jnp.float32)   # (t, k, e)
+        dispatch = jnp.einsum("tke,tkc->tec", eh, pos_oh)
+        combine = jnp.einsum("tk,tke,tkc->tec", gates, eh, pos_oh)
+        xe = constrain(
+            jnp.einsum("tec,td->ecd", dispatch.astype(x.dtype), xt), "ecd")
+        g = activation(jnp.einsum("ecd,edf->ecf", xe, params["w_gate"]
+                                  .astype(x.dtype)), spec.activation, lut)
+        u = jnp.einsum("ecd,edf->ecf", xe, params["w_up"].astype(x.dtype))
+        ye = constrain(jnp.einsum("ecf,efd->ecd", g * u,
+                                  params["w_down"].astype(x.dtype)), "ecd")
+        out = jnp.einsum("tec,ecd->td", combine.astype(x.dtype), ye)
+        return out.reshape(b, s, d), aux
+
+    # -- gather dispatch, group-local routing -------------------------------
+    xg = xt.reshape(G, tg, d)
+    gates, gidx, pos, aux = jax.vmap(
+        lambda xx: _route(params, spec, xx))(xg)          # (G, tg, k) ...
+    aux = jnp.mean(aux)
+    keep = (pos >= 0) & (pos < cap)
+    pos_c = jnp.clip(pos, 0, cap - 1)
+    slot = gidx * cap + pos_c                             # (G, tg, k)
+    slot = jnp.where(keep, slot, e * cap)                 # dropped -> spill
+
+    def scatter_group(slot_g):
+        tok = jnp.broadcast_to(
+            jnp.arange(tg, dtype=jnp.int32)[:, None], (tg, k)).reshape(-1)
+        st = jnp.zeros((e * cap + 1,), jnp.int32).at[
+            slot_g.reshape(-1)].set(tok, mode="drop")
+        filled = jnp.zeros((e * cap + 1,), jnp.bool_).at[
+            slot_g.reshape(-1)].set(True, mode="drop")
+        return st[: e * cap], filled[: e * cap]
+
+    token_src, slot_filled = jax.vmap(scatter_group)(slot)  # (G, e*cap)
+    xe = jax.vmap(lambda xx, idx: jnp.take(xx, idx, axis=0))(
+        xg, token_src)                                    # (G, e*cap, d)
+    xe = xe * slot_filled[..., None].astype(xe.dtype)
+    xe = constrain(xe.reshape(G, e, cap, d), "gecd")
+
+    gact = activation(jnp.einsum("gecd,edf->gecf", xe, params["w_gate"]
+                                 .astype(x.dtype)), spec.activation, lut)
+    u = jnp.einsum("gecd,edf->gecf", xe, params["w_up"].astype(x.dtype))
+    ye = constrain(jnp.einsum("gecf,efd->gecd", gact * u,
+                              params["w_down"].astype(x.dtype)), "gecd")
+
+    flat_ye = ye.reshape(G, e * cap, d)
+    yk = jax.vmap(lambda yy, idx: jnp.take(yy, idx, axis=0))(
+        flat_ye, (gidx * cap + pos_c).reshape(G, tg * k))
+    yk = yk.reshape(G, tg, k, d) * keep[..., None].astype(x.dtype)
+    out = jnp.einsum("gtk,gtkd->gtd", gates.astype(x.dtype), yk)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,50 @@
+"""PIM-quantized linear layers for the LM stack (beyond-paper application).
+
+The paper's LIN-HYB/LIN-BUI insight — replace wide multiplies with the
+hardware's native narrow ones — maps to the TPU MXU's int8 x int8 -> int32
+path.  ``QuantizedWeight`` stores int8 weights + per-output-channel scales
+(symmetric, like the paper's dataset quantization);
+
+  - serve path    : true int8 matmul via kernels/quant_matmul
+  - train path    : fake-quant with a straight-through estimator, so the
+                    quantization noise is *felt* by the optimizer while
+                    gradients flow (standard QAT; the paper trains directly
+                    on quantized data, which is the same forward numerics)
+"""
+from __future__ import annotations
+
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import QuantParams, symmetric_quantize
+from repro.kernels.quant_matmul.ops import quant_dense
+
+
+def quantize_weight(w: jnp.ndarray) -> dict:
+    """float [K, N] -> {"q": int8 [K, N], "scale": f32 [1, N]}."""
+    q, p = symmetric_quantize(w.astype(jnp.float32), bits=8, axis=w.ndim - 1)
+    return {"q": q, "scale": p.scale}
+
+
+def is_quantized(w) -> bool:
+    return isinstance(w, dict) and "q" in w
+
+
+def pim_dense(x: jnp.ndarray, w: Union[dict, jnp.ndarray],
+              use_pallas: bool = False) -> jnp.ndarray:
+    """Serve-path int8 dense (use_pallas=False lowers on any backend and
+    becomes a single MXU int8 matmul on TPU; =True uses the Pallas kernel)."""
+    if not is_quantized(w):
+        w = quantize_weight(w)
+    return quant_dense(x, w["q"], w["scale"], use_pallas=use_pallas)
+
+
+def fake_quant_dense(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Train-path QAT: forward sees int8-quantized weights, backward flows
+    to the float master weights (straight-through estimator)."""
+    q, p = symmetric_quantize(w.astype(jnp.float32), bits=8, axis=w.ndim - 1)
+    w_dq = q.astype(jnp.float32) * p.scale
+    w_ste = w + jax.lax.stop_gradient(w_dq.astype(w.dtype) - w)
+    return x @ w_ste.astype(x.dtype)

@@ -1,0 +1,387 @@
+"""Recurrent sequence-mixing layers: xLSTM (mLSTM + sLSTM) and a
+Mamba-style selective SSM (used by the Hymba hybrid blocks).
+
+Training uses parallel forms (chunkwise for mLSTM, associative scan for the
+selective SSM); decoding uses O(1)-per-token recurrent updates — which is
+what makes the ``long_500k`` shape runnable for xlstm/hymba (DESIGN.md §4).
+
+mLSTM stabilization follows the xLSTM paper (arXiv:2405.04517): all
+exponential gates are tracked in log space with a running max ``m`` so the
+chunkwise and recurrent forms are numerically identical (tested).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_sharding import constrain
+from .layers import dense_init
+
+
+# ---------------------------------------------------------------------------
+# Causal depthwise conv (shared by mLSTM and mamba paths).
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """x [B, S, C]; w [K, C] depthwise causal conv."""
+    k, c = w.shape
+    out = jax.lax.conv_general_dilated(
+        x, w[:, None, :].astype(x.dtype),  # [K, 1, C] HIO-ish
+        window_strides=(1,), padding=[(k - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=c)
+    return out
+
+
+def conv_state_init(batch: int, width: int, channels: int, dtype):
+    return jnp.zeros((batch, width - 1, channels), dtype)
+
+
+def causal_conv1d_step(x_t: jnp.ndarray, state: jnp.ndarray,
+                       w: jnp.ndarray):
+    """Single-token conv: x_t [B, 1, C], state [B, K-1, C]."""
+    window = jnp.concatenate([state, x_t], axis=1)        # [B, K, C]
+    out = jnp.sum(window * w[None].astype(x_t.dtype), axis=1, keepdims=True)
+    return out, window[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM (matrix-memory LSTM) — xLSTM's parallelizable block.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MlstmSpec:
+    d_model: int
+    n_heads: int
+    proj_factor: float = 2.0
+    conv_width: int = 4
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.d_model * self.proj_factor)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+class MlstmState(NamedTuple):
+    c: jnp.ndarray     # [B, H, Dh, Dh] stabilized matrix memory
+    n: jnp.ndarray     # [B, H, Dh]
+    m: jnp.ndarray     # [B, H] log-space stabilizer
+    conv: jnp.ndarray  # [B, K-1, Di]
+
+
+def init_mlstm(key, spec: MlstmSpec, dtype):
+    ks = jax.random.split(key, 8)
+    d, di, h = spec.d_model, spec.d_inner, spec.n_heads
+    return {
+        "w_up": dense_init(ks[0], d, di, dtype),
+        "w_gate": dense_init(ks[1], d, di, dtype),
+        "conv_w": (jax.random.normal(ks[2], (spec.conv_width, di),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "wq": dense_init(ks[3], di, di, dtype),
+        "wk": dense_init(ks[4], di, di, dtype),
+        "wv": dense_init(ks[5], di, di, dtype),
+        "w_if": dense_init(ks[6], di, 2 * h, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((h,), jnp.float32),
+                                 3.0 * jnp.ones((h,), jnp.float32)]),
+        "w_down": dense_init(ks[7], di, d, dtype),
+    }
+
+
+def _mlstm_qkv_gates(params, spec: MlstmSpec, u: jnp.ndarray):
+    """u: [B, S, Di] post-conv branch -> per-head q,k,v and log gates."""
+    b, s, di = u.shape
+    h, dh = spec.n_heads, spec.head_dim
+    q = (u @ params["wq"].astype(u.dtype)).reshape(b, s, h, dh)
+    k = (u @ params["wk"].astype(u.dtype)).reshape(b, s, h, dh)
+    v = (u @ params["wv"].astype(u.dtype)).reshape(b, s, h, dh)
+    k = k / jnp.sqrt(jnp.float32(dh)).astype(k.dtype)
+    gates = u.astype(jnp.float32) @ params["w_if"] + params["b_if"]
+    logi = gates[..., :h]                                  # exp input gate
+    logf = jax.nn.log_sigmoid(gates[..., h:])              # sigmoid forget
+    return q, k, v, logi, logf
+
+
+def mlstm_chunkwise(params, spec: MlstmSpec, x: jnp.ndarray,
+                    chunk: int = 64) -> jnp.ndarray:
+    """Parallel training form: scan over chunks, quadratic within chunk."""
+    b, s, d = x.shape
+    h, dh = spec.n_heads, spec.head_dim
+    u0 = x @ params["w_up"].astype(x.dtype)
+    g = x @ params["w_gate"].astype(x.dtype)
+    u = jax.nn.silu(causal_conv1d(u0, params["conv_w"]))
+    q, k, v, logi, logf = _mlstm_qkv_gates(params, spec, u)
+
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    def reshape_c(t):  # [B, S, ...] -> [nc, B, chunk, ...]
+        return t.reshape(b, nc, chunk, *t.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc = map(reshape_c, (q, k, v))
+    lic, lfc = map(reshape_c, (logi, logf))
+
+    c0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h, dh), jnp.float32)
+    m0 = jnp.full((b, h), -1e30, jnp.float32)
+
+    def chunk_step(carry, inp):
+        c_st, n_st, m_st = carry
+        qb, kb, vb, li, lf = inp          # [B, L, H, dh], gates [B, L, H]
+        qb = qb.astype(jnp.float32).transpose(0, 2, 1, 3)  # [B,H,L,dh]
+        kb = kb.astype(jnp.float32).transpose(0, 2, 1, 3)
+        vb = vb.astype(jnp.float32).transpose(0, 2, 1, 3)
+        li = li.transpose(0, 2, 1)        # [B, H, L]
+        lf = lf.transpose(0, 2, 1)
+        bcum = jnp.cumsum(lf, axis=-1)    # [B,H,L] decay from chunk start
+        a = li - bcum                     # log i_j - b_j
+        A = jnp.maximum(m_st[..., None], jax.lax.cummax(a, axis=2))
+        # intra-chunk scores: (q_i k_j) exp(a_j - A_i), j <= i
+        sc = jnp.einsum("bhid,bhjd->bhij", qb, kb)
+        w = jnp.exp(a[:, :, None, :] - A[:, :, :, None])
+        L = a.shape[-1]
+        causal = jnp.tril(jnp.ones((L, L), bool))
+        w = jnp.where(causal[None, None], w, 0.0)
+        num = jnp.einsum("bhij,bhjd->bhid", sc * w, vb)
+        ninc = jnp.einsum("bhij,bhjd->bhid", w, kb)        # sum_j w k_j
+        inter = jnp.exp(m_st[..., None] - A)               # [B,H,L]
+        # (C q)_d = sum_e C[d,e] q_e  with C[d,e] = sum w * v_d k_e
+        num = num + inter[..., None] * jnp.einsum(
+            "bhie,bhde->bhid", qb, c_st)
+        nvec = ninc + inter[..., None] * n_st[:, :, None, :]
+        qn = jnp.abs(jnp.einsum("bhid,bhid->bhi", qb, nvec))
+        m_abs = bcum + A
+        denom = jnp.maximum(qn, jnp.exp(-jnp.clip(m_abs, -30.0, 30.0)))
+        hid = num / denom[..., None]                       # [B,H,L,dh]
+        # end-of-chunk state
+        A_L = A[..., -1]
+        wl = jnp.exp(a - A_L[..., None])                   # [B,H,L]
+        decay_state = jnp.exp(m_st - A_L)
+        c_new = decay_state[..., None, None] * c_st + jnp.einsum(
+            "bhj,bhjd,bhje->bhde", wl, vb, kb)
+        n_new = decay_state[..., None] * n_st + jnp.einsum(
+            "bhj,bhjd->bhd", wl, kb)
+        m_new = bcum[..., -1] + A_L
+        out = hid.transpose(0, 2, 1, 3).reshape(b, L, h * dh)
+        return (c_new, n_new, m_new), out
+
+    (_, _, _), outs = jax.lax.scan(
+        chunk_step, (c0, n0, m0), (qc, kc, vc, lic, lfc))
+    hseq = outs.swapaxes(0, 1).reshape(b, s, h * dh).astype(x.dtype)
+    return (hseq * jax.nn.silu(g)) @ params["w_down"].astype(x.dtype)
+
+
+def mlstm_state_init(batch: int, spec: MlstmSpec, dtype) -> MlstmState:
+    h, dh = spec.n_heads, spec.head_dim
+    return MlstmState(
+        c=jnp.zeros((batch, h, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, h, dh), jnp.float32),
+        m=jnp.full((batch, h), -1e30, jnp.float32),
+        conv=conv_state_init(batch, spec.conv_width, spec.d_inner, dtype))
+
+
+def mlstm_decode_step(params, spec: MlstmSpec, x: jnp.ndarray,
+                      state: MlstmState) -> tuple[jnp.ndarray, MlstmState]:
+    """x: [B, 1, d] -> ([B, 1, d], new state).  Recurrent O(1) update."""
+    b = x.shape[0]
+    h, dh = spec.n_heads, spec.head_dim
+    u0 = x @ params["w_up"].astype(x.dtype)
+    g = x @ params["w_gate"].astype(x.dtype)
+    conv_out, conv_new = causal_conv1d_step(u0, state.conv, params["conv_w"])
+    u = jax.nn.silu(conv_out)
+    q, k, v, logi, logf = _mlstm_qkv_gates(params, spec, u)
+    q = q[:, 0].astype(jnp.float32)        # [B, H, dh]
+    k = k[:, 0].astype(jnp.float32)
+    v = v[:, 0].astype(jnp.float32)
+    li = logi[:, 0]                        # [B, H]
+    lf = logf[:, 0]
+    m_new = jnp.maximum(lf + state.m, li)
+    fp = jnp.exp(lf + state.m - m_new)
+    ip = jnp.exp(li - m_new)
+    c_new = fp[..., None, None] * state.c + \
+        ip[..., None, None] * jnp.einsum("bhd,bhe->bhde", v, k)
+    n_new = fp[..., None] * state.n + ip[..., None] * k
+    num = jnp.einsum("bhde,bhe->bhd", c_new, q)
+    qn = jnp.abs(jnp.einsum("bhd,bhd->bh", q, n_new))
+    denom = jnp.maximum(qn, jnp.exp(-jnp.clip(m_new, -30.0, 30.0)))
+    hid = (num / denom[..., None]).reshape(b, 1, h * dh).astype(x.dtype)
+    out = (hid * jax.nn.silu(g)) @ params["w_down"].astype(x.dtype)
+    return out, MlstmState(c_new, n_new, m_new, conv_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — xLSTM's scalar-memory recurrent block (sequential over time).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SlstmSpec:
+    d_model: int
+    n_heads: int
+    conv_width: int = 4
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+class SlstmState(NamedTuple):
+    c: jnp.ndarray   # [B, D]
+    n: jnp.ndarray   # [B, D]
+    h: jnp.ndarray   # [B, D]
+    m: jnp.ndarray   # [B, D]
+
+
+def init_slstm(key, spec: SlstmSpec, dtype):
+    ks = jax.random.split(key, 4)
+    d, hds = spec.d_model, spec.n_heads
+    dh = spec.head_dim
+    return {
+        "w_x": dense_init(ks[0], d, 4 * d, jnp.float32),
+        # block-diagonal recurrent weights, one block per head
+        "r": (jax.random.normal(ks[1], (hds, dh, 4 * dh), jnp.float32)
+              / jnp.sqrt(jnp.float32(dh))),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "w_out": dense_init(ks[2], d, d, dtype),
+        "norm": jnp.ones((d,), jnp.float32),
+    }
+
+
+def slstm_state_init(batch: int, spec: SlstmSpec) -> SlstmState:
+    d = spec.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SlstmState(z, z, z, jnp.full((batch, d), -1e30, jnp.float32))
+
+
+def _slstm_cell(params, spec: SlstmSpec, xt: jnp.ndarray,
+                st: SlstmState) -> tuple[jnp.ndarray, SlstmState]:
+    """xt: [B, D] (pre-activations from x side already included)."""
+    b, d = st.h.shape
+    hds, dh = spec.n_heads, spec.head_dim
+    hprev = st.h.reshape(b, hds, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hprev, params["r"]).reshape(b, 4 * d)
+    pre = xt + rec + params["b"]
+    zt, it, ft, ot = jnp.split(pre, 4, axis=-1)
+    logf = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(logf + st.m, it)
+    ip = jnp.exp(it - m_new)
+    fp = jnp.exp(logf + st.m - m_new)
+    c_new = fp * st.c + ip * jnp.tanh(zt)
+    n_new = fp * st.n + ip
+    h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1.0)
+    return h_new, SlstmState(c_new, n_new, h_new, m_new)
+
+
+def slstm_apply(params, spec: SlstmSpec, x: jnp.ndarray) -> jnp.ndarray:
+    """Training form: lax.scan over time (inherently sequential block)."""
+    b, s, d = x.shape
+    xp = x.astype(jnp.float32) @ params["w_x"]
+    st0 = slstm_state_init(b, spec)
+
+    def step(st, xt):
+        h, st2 = _slstm_cell(params, spec, xt, st)
+        return st2, h
+
+    _, hs = jax.lax.scan(step, st0, xp.swapaxes(0, 1))
+    hs = hs.swapaxes(0, 1)                                 # [B, S, D]
+    from .layers import rms_norm
+    hs = rms_norm(hs, params["norm"])
+    return hs.astype(x.dtype) @ params["w_out"].astype(x.dtype)
+
+
+def slstm_decode_step(params, spec: SlstmSpec, x: jnp.ndarray,
+                      state: SlstmState):
+    xt = x[:, 0].astype(jnp.float32) @ params["w_x"]
+    h, st = _slstm_cell(params, spec, xt, state)
+    from .layers import rms_norm
+    h = rms_norm(h[:, None, :], params["norm"])
+    return h.astype(x.dtype) @ params["w_out"].astype(x.dtype), st
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM (hymba's SSM heads).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SsmSpec:
+    d_model: int
+    d_inner: int
+    d_state: int = 16
+    conv_width: int = 4
+
+
+class SsmState(NamedTuple):
+    h: jnp.ndarray      # [B, Di, N]
+    conv: jnp.ndarray   # [B, K-1, Di]
+
+
+def init_ssm(key, spec: SsmSpec, dtype):
+    ks = jax.random.split(key, 6)
+    d, di, n = spec.d_model, spec.d_inner, spec.d_state
+    return {
+        "w_in": dense_init(ks[0], d, di, dtype),
+        "conv_w": (jax.random.normal(ks[1], (spec.conv_width, di),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "w_bc": dense_init(ks[2], di, 2 * n, jnp.float32),
+        "w_dt": dense_init(ks[3], di, di, jnp.float32),
+        "dt_bias": jnp.full((di,), -2.0, jnp.float32),
+        "a_log": jnp.log(jnp.tile(
+            jnp.arange(1, n + 1, dtype=jnp.float32)[None], (di, 1))),
+        "d_skip": jnp.ones((di,), jnp.float32),
+        "w_out": dense_init(ks[4], di, d, dtype),
+    }
+
+
+def _ssm_inputs(params, spec: SsmSpec, u: jnp.ndarray):
+    """u: [B, S, Di] post-conv -> (dA [B,S,Di,N], dBu [B,S,Di,N], C)."""
+    uf = u.astype(jnp.float32)
+    bc = uf @ params["w_bc"]
+    B, C = jnp.split(bc, 2, axis=-1)                      # [B,S,N]
+    dt = jax.nn.softplus(uf @ params["w_dt"] + params["dt_bias"])  # [B,S,Di]
+    A = -jnp.exp(params["a_log"])                          # [Di, N]
+    dA = jnp.exp(dt[..., None] * A[None, None])            # [B,S,Di,N]
+    dBu = dt[..., None] * B[:, :, None, :] * uf[..., None]
+    return dA, dBu, C
+
+
+def ssm_apply(params, spec: SsmSpec, x: jnp.ndarray) -> jnp.ndarray:
+    """Training form: associative scan over time."""
+    b, s, d = x.shape
+    u0 = x @ params["w_in"].astype(x.dtype)
+    u = jax.nn.silu(causal_conv1d(u0, params["conv_w"]))
+    dA, dBu, C = _ssm_inputs(params, spec, u)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (dA, dBu), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", hh, C)                # [B,S,Di]
+    y = y + params["d_skip"] * u.astype(jnp.float32)
+    return y.astype(x.dtype) @ params["w_out"].astype(x.dtype)
+
+
+def ssm_state_init(batch: int, spec: SsmSpec, dtype) -> SsmState:
+    return SsmState(
+        h=jnp.zeros((batch, spec.d_inner, spec.d_state), jnp.float32),
+        conv=conv_state_init(batch, spec.conv_width, spec.d_inner, dtype))
+
+
+def ssm_decode_step(params, spec: SsmSpec, x: jnp.ndarray,
+                    state: SsmState) -> tuple[jnp.ndarray, SsmState]:
+    b = x.shape[0]
+    u0 = x @ params["w_in"].astype(x.dtype)
+    conv_out, conv_new = causal_conv1d_step(u0, state.conv, params["conv_w"])
+    u = jax.nn.silu(conv_out)                              # [B,1,Di]
+    dA, dBu, C = _ssm_inputs(params, spec, u)
+    h_new = dA[:, 0] * state.h + dBu[:, 0]                 # [B,Di,N]
+    y = jnp.einsum("bdn,bn->bd", h_new, C[:, 0])
+    y = y + params["d_skip"] * u[:, 0].astype(jnp.float32)
+    out = y[:, None].astype(x.dtype) @ params["w_out"].astype(x.dtype)
+    return out, SsmState(h_new, conv_new)

@@ -1,0 +1,590 @@
+"""Generic decoder LM assembling all block families (DESIGN.md §3).
+
+Layer stacking: the per-layer pattern (configs.base.layer_pattern) is
+factored into its repeating *unit* (e.g. 4x attn + 1x cross for the VLM;
+7x mLSTM + 1x sLSTM for xLSTM) and the trainer ``lax.scan``s over unit
+repetitions with stacked parameters — HLO stays unit-sized regardless of
+depth, which keeps the 40-cell dry-run compile tractable.
+
+Heterogeneous per-layer attention windows (hymba's 3 global layers) ride
+through the scan as a traced per-layer int array (0 == full attention).
+
+Modes: train forward (+aux losses), prefill (writes KV caches), decode
+(single token, O(1) state for SSM blocks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.distributed.act_sharding import constrain
+from . import ssm as ssm_mod
+from .attention import (AttnSpec, KVCache, attention, attention_decode,
+                        cross_attention, init_attention, init_kv_cache,
+                        plan_heads)
+from .layers import dense_init, embed_init, init_mlp, mlp, rms_norm
+from .moe import MoeSpec, init_moe, moe_apply, pad_experts
+
+FULL_WINDOW = jnp.int32(1 << 30)
+
+
+# ---------------------------------------------------------------------------
+# Specs derived from the config.
+# ---------------------------------------------------------------------------
+
+def attn_spec(cfg: ArchConfig, tp: int = 16) -> AttnSpec:
+    return AttnSpec(
+        d_model=cfg.d_model,
+        plan=plan_heads(cfg.n_heads, cfg.n_kv_heads, tp),
+        head_dim=cfg.resolved_head_dim,
+        qkv_bias=cfg.qkv_bias, qk_norm=cfg.qk_norm,
+        rope_fraction=cfg.rope_fraction, rope_theta=cfg.rope_theta,
+        norm_eps=cfg.norm_eps,
+        kv_dim=cfg.vision_dim or 0)
+
+
+def moe_spec(cfg: ArchConfig, ep: int = 16) -> MoeSpec:
+    return MoeSpec(
+        d_model=cfg.d_model,
+        n_experts=pad_experts(cfg.n_experts, ep),
+        n_experts_real=cfg.n_experts,
+        top_k=cfg.n_experts_per_tok, d_ff=cfg.moe_d_ff,
+        capacity_factor=cfg.moe_capacity_factor,
+        activation=cfg.activation, dispatch=cfg.moe_dispatch,
+        groups=cfg.moe_groups)
+
+
+def mlstm_spec(cfg: ArchConfig) -> ssm_mod.MlstmSpec:
+    return ssm_mod.MlstmSpec(d_model=cfg.d_model, n_heads=cfg.n_heads,
+                             proj_factor=cfg.ssm_proj_factor)
+
+
+def slstm_spec(cfg: ArchConfig) -> ssm_mod.SlstmSpec:
+    return ssm_mod.SlstmSpec(d_model=cfg.d_model, n_heads=cfg.n_heads)
+
+
+def ssm_spec(cfg: ArchConfig) -> ssm_mod.SsmSpec:
+    return ssm_mod.SsmSpec(
+        d_model=cfg.d_model,
+        d_inner=int(cfg.d_model * cfg.ssm_proj_factor),
+        d_state=cfg.ssm_state or 16)
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply dispatch.
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ArchConfig, bt: str):
+    dt = _dtype(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    norm = lambda: jnp.ones((d,), dt)
+    if bt == "attn":
+        return {"norm1": norm(), "attn": init_attention(ks[0],
+                                                        attn_spec(cfg), dt),
+                "norm2": norm(),
+                "mlp": init_mlp(ks[1], d, cfg.d_ff, dt)}
+    if bt == "moe":
+        p = {"norm1": norm(), "attn": init_attention(ks[0],
+                                                     attn_spec(cfg), dt),
+             "norm2": norm(), "moe": init_moe(ks[1], moe_spec(cfg), dt)}
+        if cfg.shared_expert_d_ff:
+            p["shared"] = init_mlp(ks[2], d, cfg.shared_expert_d_ff, dt)
+        return p
+    if bt == "mlstm":
+        return {"norm1": norm(),
+                "mlstm": ssm_mod.init_mlstm(ks[0], mlstm_spec(cfg), dt)}
+    if bt == "slstm":
+        return {"norm1": norm(),
+                "slstm": ssm_mod.init_slstm(ks[0], slstm_spec(cfg), dt)}
+    if bt == "hymba":
+        return {"norm1": norm(),
+                "attn": init_attention(ks[0], attn_spec(cfg), dt),
+                "ssm": ssm_mod.init_ssm(ks[1], ssm_spec(cfg), dt),
+                "attn_norm": norm(), "ssm_norm": norm(),
+                "norm2": norm(),
+                "mlp": init_mlp(ks[2], d, cfg.d_ff, dt)}
+    if bt == "cross":
+        return {"norm1": norm(),
+                "cross": init_attention(ks[0], attn_spec(cfg), dt,
+                                        cross=True),
+                "norm2": norm(),
+                "mlp": init_mlp(ks[1], d, cfg.d_ff, dt),
+                "gate_attn": jnp.zeros((), jnp.float32),
+                "gate_mlp": jnp.zeros((), jnp.float32)}
+    raise ValueError(bt)
+
+
+def apply_block_train(p, cfg: ArchConfig, bt: str, x, positions, window,
+                      extras) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """-> (x, aux_loss)."""
+    q = cfg.quantize_dense
+    lut = cfg.lut_activations
+    zero = jnp.float32(0.0)
+    win = window  # traced int32; FULL_WINDOW means unbounded
+    win_opt = None if bt == "cross" else win
+    if bt in ("attn", "moe"):
+        h = attention(p["attn"], attn_spec(cfg), rms_norm(x, p["norm1"]),
+                      positions, window=win_opt)
+        x = x + h
+        if bt == "attn":
+            x = x + mlp(p["mlp"], rms_norm(x, p["norm2"]),
+                        cfg.activation, lut, q)
+            return x, zero
+        y = rms_norm(x, p["norm2"])
+        mo, aux = moe_apply(p["moe"], moe_spec(cfg), y, lut)
+        if "shared" in p:
+            mo = mo + mlp(p["shared"], y, cfg.activation, lut, q)
+        return x + mo, aux
+    if bt == "mlstm":
+        return x + ssm_mod.mlstm_chunkwise(
+            p["mlstm"], mlstm_spec(cfg), rms_norm(x, p["norm1"])), zero
+    if bt == "slstm":
+        return x + ssm_mod.slstm_apply(
+            p["slstm"], slstm_spec(cfg), rms_norm(x, p["norm1"])), zero
+    if bt == "hymba":
+        y = rms_norm(x, p["norm1"])
+        ha = attention(p["attn"], attn_spec(cfg), y, positions,
+                       window=win_opt)
+        hs = ssm_mod.ssm_apply(p["ssm"], ssm_spec(cfg), y)
+        h = 0.5 * (rms_norm(ha, p["attn_norm"])
+                   + rms_norm(hs, p["ssm_norm"]))
+        x = x + h
+        x = x + mlp(p["mlp"], rms_norm(x, p["norm2"]),
+                    cfg.activation, lut, q)
+        return x, zero
+    if bt == "cross":
+        kv = extras["cross_states"]
+        h = cross_attention(p["cross"], attn_spec(cfg),
+                            rms_norm(x, p["norm1"]), kv)
+        x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * h
+        h2 = mlp(p["mlp"], rms_norm(x, p["norm2"]), cfg.activation, lut, q)
+        x = x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * h2
+        return x, zero
+    raise ValueError(bt)
+
+
+# -- caches -------------------------------------------------------------------
+
+def init_block_cache(cfg: ArchConfig, bt: str, batch: int, max_seq: int):
+    dt = _dtype(cfg)
+    spec = attn_spec(cfg)
+    if bt in ("attn", "moe", "hymba"):
+        c = {"kv": init_kv_cache(batch, spec.plan, spec.head_dim,
+                                 max_seq, dt, bits=cfg.kv_cache_bits)}
+        if bt == "hymba":
+            c["ssm"] = ssm_mod.ssm_state_init(batch, ssm_spec(cfg), dt)
+        return c
+    if bt == "mlstm":
+        return {"mlstm": ssm_mod.mlstm_state_init(batch, mlstm_spec(cfg),
+                                                  dt)}
+    if bt == "slstm":
+        return {"slstm": ssm_mod.slstm_state_init(batch, slstm_spec(cfg))}
+    if bt == "cross":
+        # cross K/V computed once at prefill from the vision/encoder states
+        sk = cfg.vision_tokens or cfg.encoder_seq
+        shape = (batch, attn_spec(cfg).plan.n_kv, sk, spec.head_dim)
+        return {"ck": jnp.zeros(shape, dt), "cv": jnp.zeros(shape, dt)}
+    raise ValueError(bt)
+
+
+def _cross_kv(p, spec: AttnSpec, kv_states, dtype):
+    b, sk, _ = kv_states.shape
+    k = (kv_states.astype(dtype) @ p["wk"].astype(dtype))
+    v = (kv_states.astype(dtype) @ p["wv"].astype(dtype))
+    if spec.qkv_bias:
+        k = k + p["bk"].astype(dtype)
+        v = v + p["bv"].astype(dtype)
+    k = k.reshape(b, sk, spec.plan.n_kv, spec.head_dim).transpose(0, 2, 1, 3)
+    v = v.reshape(b, sk, spec.plan.n_kv, spec.head_dim).transpose(0, 2, 1, 3)
+    return k, v
+
+
+def apply_block_decode(p, cfg: ArchConfig, bt: str, x, cache, window,
+                       extras):
+    """Single-token step.  -> (x, new_cache)."""
+    q = cfg.quantize_dense
+    lut = cfg.lut_activations
+    win_opt = window
+    if bt in ("attn", "moe"):
+        h, kv = attention_decode(p["attn"], attn_spec(cfg),
+                                 rms_norm(x, p["norm1"]), cache["kv"],
+                                 window=win_opt)
+        x = x + h
+        if bt == "attn":
+            x = x + mlp(p["mlp"], rms_norm(x, p["norm2"]),
+                        cfg.activation, lut, q)
+            return x, {"kv": kv}
+        y = rms_norm(x, p["norm2"])
+        mo, _ = moe_apply(p["moe"], moe_spec(cfg), y, lut)
+        if "shared" in p:
+            mo = mo + mlp(p["shared"], y, cfg.activation, lut, q)
+        return x + mo, {"kv": kv}
+    if bt == "mlstm":
+        h, st = ssm_mod.mlstm_decode_step(
+            p["mlstm"], mlstm_spec(cfg), rms_norm(x, p["norm1"]),
+            cache["mlstm"])
+        return x + h, {"mlstm": st}
+    if bt == "slstm":
+        h, st = ssm_mod.slstm_decode_step(
+            p["slstm"], slstm_spec(cfg), rms_norm(x, p["norm1"]),
+            cache["slstm"])
+        return x + h, {"slstm": st}
+    if bt == "hymba":
+        y = rms_norm(x, p["norm1"])
+        ha, kv = attention_decode(p["attn"], attn_spec(cfg), y,
+                                  cache["kv"], window=win_opt)
+        hs, st = ssm_mod.ssm_decode_step(p["ssm"], ssm_spec(cfg), y,
+                                         cache["ssm"])
+        h = 0.5 * (rms_norm(ha, p["attn_norm"])
+                   + rms_norm(hs, p["ssm_norm"]))
+        x = x + h
+        x = x + mlp(p["mlp"], rms_norm(x, p["norm2"]),
+                    cfg.activation, lut, q)
+        return x, {"kv": kv, "ssm": st}
+    if bt == "cross":
+        spec = attn_spec(cfg)
+        from .attention import _sdpa
+        y = rms_norm(x, p["norm1"])
+        b, s, _ = y.shape
+        qh = (y @ p["cross"]["wq"].astype(y.dtype))
+        if spec.qkv_bias:
+            qh = qh + p["cross"]["bq"].astype(y.dtype)
+        qh = qh.reshape(b, s, spec.plan.n_q,
+                        spec.head_dim).transpose(0, 2, 1, 3)
+        if spec.qk_norm:
+            qh = rms_norm(qh, p["cross"]["q_norm"], spec.norm_eps)
+        out = _sdpa(qh, cache["ck"], cache["cv"], causal=False)
+        out = out.transpose(0, 2, 1, 3).reshape(b, s, -1)
+        h = out @ p["cross"]["wo"].astype(y.dtype)
+        x = x + jnp.tanh(p["gate_attn"]).astype(x.dtype) * h
+        h2 = mlp(p["mlp"], rms_norm(x, p["norm2"]), cfg.activation, lut, q)
+        x = x + jnp.tanh(p["gate_mlp"]).astype(x.dtype) * h2
+        return x, dict(cache)
+    raise ValueError(bt)
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init / apply with unit scan.
+# ---------------------------------------------------------------------------
+
+def unit_pattern(cfg: ArchConfig) -> tuple[tuple[str, ...], int]:
+    """(repeating unit, reps)."""
+    pattern = cfg.layer_pattern()
+    n = len(pattern)
+    for p in range(1, n + 1):
+        if n % p == 0 and pattern == pattern[:p] * (n // p):
+            return pattern[:p], n // p
+    return pattern, 1
+
+
+def init_lm(cfg: ArchConfig, key) -> dict:
+    dt = _dtype(cfg)
+    unit, reps = unit_pattern(cfg)
+    keys = jax.random.split(key, 4 + len(unit))
+    params: dict[str, Any] = {
+        "tok_emb": embed_init(keys[0], cfg.padded_vocab, cfg.d_model, dt),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+        "lm_head": dense_init(keys[1], cfg.d_model, cfg.padded_vocab, dt),
+    }
+    if cfg.meta_tokens:
+        params["meta"] = (jax.random.normal(
+            keys[2], (cfg.meta_tokens, cfg.d_model), jnp.float32)
+            * 0.02).astype(dt)
+    unit_params = []
+    for i, bt in enumerate(unit):
+        rep_keys = jax.random.split(keys[4 + i], reps)
+        unit_params.append(jax.vmap(
+            lambda k, bt=bt: init_block(k, cfg, bt))(rep_keys))
+    params["unit"] = tuple(unit_params)
+    return params
+
+
+def _windows_stacked(cfg: ArchConfig, unit_len: int, reps: int):
+    wins = [w if w else int(FULL_WINDOW) for w in cfg.layer_windows()]
+    return jnp.asarray(np.array(wins, np.int32).reshape(reps, unit_len))
+
+
+def _embed(cfg: ArchConfig, params, tokens):
+    x = params["tok_emb"][tokens]
+    if cfg.meta_tokens:
+        b = tokens.shape[0]
+        meta = jnp.broadcast_to(params["meta"][None],
+                                (b,) + params["meta"].shape).astype(x.dtype)
+        x = jnp.concatenate([meta, x], axis=1)
+    return x
+
+
+def lm_forward(cfg: ArchConfig, params, tokens: jnp.ndarray,
+               extras: Optional[dict] = None):
+    """Training forward: tokens [B, S] -> (logits [B, S, Vpad], aux)."""
+    extras = extras or {}
+    unit, reps = unit_pattern(cfg)
+    x = constrain(_embed(cfg, params, tokens), "btd")
+    s_total = x.shape[1]
+    positions = jnp.arange(s_total, dtype=jnp.int32)[None]
+    windows = _windows_stacked(cfg, len(unit), reps)
+
+    windowed = cfg.sliding_window > 0
+
+    def unit_body(carry, xs):
+        h, aux = carry
+        unit_p, wins = xs
+        for i, bt in enumerate(unit):
+            win = wins[i] if windowed else None  # static fast path
+            h = constrain(h, "btd")
+            h, a = apply_block_train(unit_p[i], cfg, bt, h, positions,
+                                     win, extras)
+            aux = aux + a
+        return (h, aux), None
+
+    body = unit_body
+    if cfg.remat == "full":
+        body = jax.checkpoint(unit_body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)),
+                               (params["unit"], windows))
+    if cfg.meta_tokens:
+        x = x[:, cfg.meta_tokens:]
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = constrain(x @ params["lm_head"].astype(x.dtype), "btv")
+    return logits, aux
+
+
+def lm_loss(cfg: ArchConfig, params, tokens: jnp.ndarray,
+            targets: jnp.ndarray, extras: Optional[dict] = None,
+            aux_weight: float = 0.01):
+    logits, aux = lm_forward(cfg, params, tokens, extras)
+    logits = logits.astype(jnp.float32)
+    # mask padded vocab columns
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad_mask[None, None], -1e30, logits)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None],
+                               axis=-1)[..., 0]
+    nll = jnp.mean(logz - gold)
+    return nll + aux_weight * aux
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    unit, reps = unit_pattern(cfg)
+    if cfg.meta_tokens:
+        max_seq = max_seq + cfg.meta_tokens
+
+    def stack_cache(bt):
+        one = init_block_cache(cfg, bt, batch, max_seq)
+        return jax.tree_util.tree_map(
+            lambda v: jnp.broadcast_to(v[None], (reps,) + v.shape), one)
+
+    return tuple(stack_cache(bt) for bt in unit)
+
+
+def lm_prefill(cfg: ArchConfig, params, tokens: jnp.ndarray, max_seq: int,
+               extras: Optional[dict] = None):
+    """Run the full prompt, returning (last-token logits, filled cache).
+
+    Implemented as chained decode over the training forward's k/v:
+    for simplicity and HLO size we run the parallel forward per block and
+    materialize its k/v into the cache (standard prefill)."""
+    extras = extras or {}
+    unit, reps = unit_pattern(cfg)
+    x = _embed(cfg, params, tokens)
+    b, s_total, _ = x.shape
+    positions = jnp.arange(s_total, dtype=jnp.int32)[None]
+    windows = _windows_stacked(cfg, len(unit), reps)
+    cache_max = max_seq + (cfg.meta_tokens or 0)
+
+    windowed = cfg.sliding_window > 0
+
+    def unit_body(x, xs):
+        unit_p, wins = xs
+        new_caches = []
+        for i, bt in enumerate(unit):
+            win = wins[i] if windowed else None
+            x = constrain(x, "btd")
+            x, c = _prefill_block(unit_p[i], cfg, bt, x, positions,
+                                  win, extras, cache_max)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, caches = jax.lax.scan(unit_body, x, (params["unit"], windows))
+    if cfg.meta_tokens:
+        x = x[:, cfg.meta_tokens:]
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x[:, -1:] @ params["lm_head"].astype(x.dtype)
+    return logits, caches
+
+
+def _prefill_block(p, cfg, bt, x, positions, window, extras, cache_max):
+    """Forward one block while materializing its decode cache."""
+    b = x.shape[0]
+    spec = attn_spec(cfg)
+    dt = _dtype(cfg)
+    s_total = x.shape[1]
+    if bt in ("attn", "moe", "hymba"):
+        from .attention import _project_qkv, quantize_kv
+        y = rms_norm(x, p["norm1"])
+        qh, kh, vh = _project_qkv(p["attn"], spec, y, positions)
+        kv_shape = (b, spec.plan.n_kv, cache_max, spec.head_dim)
+        if cfg.kv_cache_bits == 8:
+            kq, ks = quantize_kv(kh)
+            vq, vs = quantize_kv(vh)
+            kpad = jax.lax.dynamic_update_slice(
+                jnp.zeros(kv_shape, jnp.int8), kq, (0, 0, 0, 0))
+            vpad = jax.lax.dynamic_update_slice(
+                jnp.zeros(kv_shape, jnp.int8), vq, (0, 0, 0, 0))
+            kspad = jax.lax.dynamic_update_slice(
+                jnp.ones(kv_shape[:-1], jnp.float32), ks, (0, 0, 0))
+            vspad = jax.lax.dynamic_update_slice(
+                jnp.ones(kv_shape[:-1], jnp.float32), vs, (0, 0, 0))
+            kv = KVCache(kpad, vpad, jnp.int32(s_total), kspad, vspad)
+        else:
+            kpad = jax.lax.dynamic_update_slice(
+                jnp.zeros(kv_shape, dt), kh.astype(dt), (0, 0, 0, 0))
+            vpad = jax.lax.dynamic_update_slice(
+                jnp.zeros(kv_shape, dt), vh.astype(dt), (0, 0, 0, 0))
+            kv = KVCache(kpad, vpad, jnp.int32(s_total))
+        cache = {"kv": kv}
+        win = None if bt == "cross" else window
+        from .attention import _sdpa
+        att = _sdpa(qh, kh, vh, causal=True, window=win)
+        att = att.transpose(0, 2, 1, 3).reshape(b, s_total, -1)
+        h = att @ p["attn"]["wo"].astype(x.dtype)
+        if bt == "hymba":
+            # SSM path: parallel scan for outputs + final state for cache
+            hs, st = _ssm_prefill(p["ssm"], cfg, y)
+            h = 0.5 * (rms_norm(h, p["attn_norm"])
+                       + rms_norm(hs, p["ssm_norm"]))
+            cache["ssm"] = st
+        x = x + h
+        lut, q = cfg.lut_activations, cfg.quantize_dense
+        if bt == "attn" or bt == "hymba":
+            x = x + mlp(p["mlp"], rms_norm(x, p["norm2"]),
+                        cfg.activation, lut, q)
+        else:
+            y2 = rms_norm(x, p["norm2"])
+            mo, _ = moe_apply(p["moe"], moe_spec(cfg), y2, lut)
+            if "shared" in p:
+                mo = mo + mlp(p["shared"], y2, cfg.activation, lut, q)
+            x = x + mo
+        return x, cache
+    if bt == "mlstm":
+        h, st = _mlstm_prefill(p["mlstm"], cfg, rms_norm(x, p["norm1"]))
+        return x + h, {"mlstm": st}
+    if bt == "slstm":
+        h, st = _slstm_prefill(p["slstm"], cfg, rms_norm(x, p["norm1"]))
+        return x + h, {"slstm": st}
+    if bt == "cross":
+        kv_states = extras["cross_states"]
+        ck, cv = _cross_kv(p["cross"], spec, kv_states, dt)
+        x, _ = apply_block_train(p, cfg, bt, x, positions, window, extras)
+        return x, {"ck": ck, "cv": cv}
+    raise ValueError(bt)
+
+
+def _ssm_prefill(params, cfg, y):
+    """Parallel SSM over the prompt + final recurrent state."""
+    spec = ssm_spec(cfg)
+    out = ssm_mod.ssm_apply(params, spec, y)
+    # final state: run the recurrence on the last conv window only is NOT
+    # sufficient (state accumulates); recompute via associative scan
+    u0 = y @ params["w_in"].astype(y.dtype)
+    u = jax.nn.silu(ssm_mod.causal_conv1d(u0, params["conv_w"]))
+    dA, dBu, _ = ssm_mod._ssm_inputs(params, spec, u)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, hh = jax.lax.associative_scan(combine, (dA, dBu), axis=1)
+    st = ssm_mod.SsmState(h=hh[:, -1],
+                          conv=u0[:, -(spec.conv_width - 1):].astype(
+                              u0.dtype))
+    return out, st
+
+
+def _mlstm_prefill(params, cfg, y):
+    spec = mlstm_spec(cfg)
+    out = ssm_mod.mlstm_chunkwise(params, spec, y)
+    # final recurrent state by replaying decode on the last position only
+    # would be wrong; recompute states by chunk scan (same code path with
+    # state output).  Cheap approximation: run decode steps over the last
+    # chunk after bulk-scanning prior chunks is an optimization; here we
+    # scan all steps recurrently for state only (compiled once; serving
+    # prefill for ssm archs is linear anyway).
+    b, s, _ = y.shape
+    st = ssm_mod.mlstm_state_init(b, spec, y.dtype)
+
+    def step(st, yt):
+        _, st2 = ssm_mod.mlstm_decode_step(params, spec, yt[:, None], st)
+        return st2, 0
+
+    st, _ = jax.lax.scan(step, st, y.swapaxes(0, 1))
+    return out, st
+
+
+def _slstm_prefill(params, cfg, y):
+    spec = slstm_spec(cfg)
+    b, s, _ = y.shape
+    xp = y.astype(jnp.float32) @ params["w_x"]
+    st0 = ssm_mod.slstm_state_init(b, spec)
+
+    def step(st, xt):
+        h, st2 = ssm_mod._slstm_cell(params, spec, xt, st)
+        return st2, h
+
+    st, hs = jax.lax.scan(step, st0, xp.swapaxes(0, 1))
+    hs = rms_norm(hs.swapaxes(0, 1), params["norm"])
+    out = hs.astype(y.dtype) @ params["w_out"].astype(y.dtype)
+    return out, st
+
+
+def lm_decode_step(cfg: ArchConfig, params, tokens: jnp.ndarray, caches,
+                   extras: Optional[dict] = None):
+    """tokens [B, 1] -> (logits [B, 1, Vpad], new caches)."""
+    extras = extras or {}
+    unit, reps = unit_pattern(cfg)
+    x = params["tok_emb"][tokens]
+    windows = _windows_stacked(cfg, len(unit), reps)
+
+    windowed = cfg.sliding_window > 0
+
+    def unit_body(x, xs):
+        unit_p, unit_c, wins = xs
+        new_caches = []
+        for i, bt in enumerate(unit):
+            win = wins[i] if windowed else None
+            x = constrain(x, "btd")
+            x, c = apply_block_decode(unit_p[i], cfg, bt, x, unit_c[i],
+                                      win, extras)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, new_caches = jax.lax.scan(unit_body, x,
+                                 (params["unit"], caches, windows))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["lm_head"].astype(x.dtype)
+    return logits, new_caches
+
+
+def param_shapes(cfg: ArchConfig):
+    """Parameter ShapeDtypeStructs without allocation (for the dry-run)."""
+    return jax.eval_shape(lambda k: init_lm(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def count_params(cfg: ArchConfig) -> int:
+    tree = param_shapes(cfg)
+    return sum(int(np.prod(l.shape))
+               for l in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,89 @@
+"""AdamW in pure JAX (no optax in this container).
+
+f32 master moments regardless of param dtype (bf16 weights get f32 m/v —
+the standard mixed-precision recipe); moments inherit the parameter
+sharding so optimizer state scales with the model shards.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jnp.ndarray
+    m: dict
+    v: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+
+    def init(self, params) -> AdamState:
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamState(step=jnp.zeros((), jnp.int32), m=zeros,
+                         v=jax.tree_util.tree_map(jnp.copy, zeros))
+
+    def init_shapes(self, param_shapes) -> AdamState:
+        zeros = jax.tree_util.tree_map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+            param_shapes)
+        return AdamState(step=jax.ShapeDtypeStruct((), jnp.int32), m=zeros,
+                         v=zeros)
+
+    def update(self, grads, state: AdamState, params):
+        step = state.step + 1
+        gf = jax.tree_util.tree_map(
+            lambda g: g.astype(jnp.float32), grads)
+        if self.grad_clip:
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(jnp.square(g))
+                for g in jax.tree_util.tree_leaves(gf)) + 1e-12)
+            scale = jnp.minimum(1.0, self.grad_clip / gnorm)
+            gf = jax.tree_util.tree_map(lambda g: g * scale, gf)
+        else:
+            gnorm = jnp.float32(0.0)
+        m = jax.tree_util.tree_map(
+            lambda mm, g: self.b1 * mm + (1 - self.b1) * g, state.m, gf)
+        v = jax.tree_util.tree_map(
+            lambda vv, g: self.b2 * vv + (1 - self.b2) * g * g,
+            state.v, gf)
+        t = step.astype(jnp.float32)
+        bc1 = 1 - self.b1 ** t
+        bc2 = 1 - self.b2 ** t
+
+        def upd(p, mm, vv):
+            u = (mm / bc1) / (jnp.sqrt(vv / bc2) + self.eps)
+            if self.weight_decay:
+                u = u + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - self.lr * u).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, m, v)
+        return new_params, AdamState(step=step, m=m, v=v), gnorm
+
+
+@dataclasses.dataclass(frozen=True)
+class SGD:
+    """Plain SGD (the paper's host-side update rule for LIN/LOG)."""
+    lr: float = 0.1
+
+    def init(self, params):
+        return AdamState(step=jnp.zeros((), jnp.int32), m={}, v={})
+
+    def update(self, grads, state, params):
+        new_params = jax.tree_util.tree_map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - self.lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new_params, AdamState(step=state.step + 1, m={}, v={}), \
+            jnp.float32(0.0)

@@ -1,0 +1,125 @@
+"""Fault-tolerance runtime: straggler detection + elastic rescale.
+
+At 1000+ node scale the two dominant failure modes are (a) slow nodes
+(thermal throttling, flaky ICI links) and (b) dead nodes.  The trainer
+handles them with:
+
+  - ``StragglerMonitor``: per-step wall-time EWMA with z-score flagging;
+    on a real pod each host reports its step time through the same
+    all-host channel the data loader uses, and persistent stragglers
+    trigger a checkpoint + rescale.  (On CPU the monitor is fed the
+    local step times; the detection logic is identical and unit-tested.)
+  - ``plan_rescale``: given surviving device count, pick the largest mesh
+    (dp x tp) that (1) divides the survivors and (2) keeps tp equal (so
+    weight shards stay valid) — restoring the latest checkpoint onto the
+    new mesh re-shards everything (train/checkpoint.py).
+  - ``run_with_recovery``: the supervision loop — catch step failures,
+    restore from the last checkpoint, continue; injected-fault tested.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """EWMA + z-score step-time outlier detection."""
+    alpha: float = 0.1
+    z_threshold: float = 3.0
+    warmup_steps: int = 5
+
+    mean: float = 0.0
+    var: float = 0.0
+    n: int = 0
+    flagged: int = 0
+
+    def observe(self, step_seconds: float) -> bool:
+        """Returns True if this step is a straggler outlier."""
+        self.n += 1
+        if self.n <= self.warmup_steps:
+            # prime the statistics
+            delta = step_seconds - self.mean
+            self.mean += delta / self.n
+            self.var += delta * (step_seconds - self.mean)
+            return False
+        std = math.sqrt(max(self.var / max(self.n - 1, 1), 1e-12))
+        z = (step_seconds - self.mean) / max(std, 1e-9)
+        is_outlier = z > self.z_threshold
+        if is_outlier:
+            self.flagged += 1
+        else:
+            # EWMA update only on healthy steps (outliers would poison it)
+            self.mean = (1 - self.alpha) * self.mean \
+                + self.alpha * step_seconds
+            self.var = (1 - self.alpha) * self.var \
+                + self.alpha * (step_seconds - self.mean) ** 2
+        return is_outlier
+
+
+def plan_rescale(n_surviving: int, tp: int,
+                 pod_axis: bool = False) -> Optional[tuple]:
+    """Largest usable mesh shape from surviving chips, keeping tp fixed.
+
+    Returns ("pod","data","model") or ("data","model") dims, or None if
+    fewer than one tp group survives.  Keeping tp constant means weight
+    shards from the checkpoint remain bitwise-valid; only the data axis
+    shrinks (gradient all-reduce groups re-form automatically).
+    """
+    if n_surviving < tp:
+        return None
+    dp = n_surviving // tp
+    if pod_axis and dp % 2 == 0:
+        return (2, dp // 2, tp)
+    return (dp, tp)
+
+
+@dataclasses.dataclass
+class RecoveryStats:
+    failures: int = 0
+    restores: int = 0
+    steps_lost: int = 0
+
+
+def run_with_recovery(step_fn: Callable, save_fn: Callable,
+                      restore_fn: Callable, *, n_steps: int,
+                      ckpt_every: int, state,
+                      monitor: Optional[StragglerMonitor] = None,
+                      max_failures: int = 10):
+    """Supervised training loop with checkpoint/restart semantics.
+
+    ``step_fn(state, step) -> state`` may raise (injected faults in tests;
+    XlaRuntimeError / RPC errors on a real pod).  On failure: restore the
+    latest checkpoint and continue from there.
+    """
+    stats = RecoveryStats()
+    last_saved = -1
+    step = 0
+    while step < n_steps:
+        try:
+            t0 = time.perf_counter()
+            state = step_fn(state, step)
+            dt = time.perf_counter() - t0
+            if monitor is not None:
+                monitor.observe(dt)
+            if (step + 1) % ckpt_every == 0:
+                save_fn(state, step + 1)
+                last_saved = step + 1
+            step += 1
+        except Exception:
+            stats.failures += 1
+            if stats.failures > max_failures:
+                raise
+            if last_saved >= 0:
+                state = restore_fn(last_saved)
+                stats.steps_lost += step - last_saved
+                step = last_saved
+            else:
+                stats.steps_lost += step
+                step = 0
+            stats.restores += 1
+    return state, stats

@@ -1,0 +1,50 @@
+"""sklearn-style estimator facade (paper §4: scikit-learn compatibility)."""
+import numpy as np
+
+from repro.core.estimators import (PimDecisionTreeClassifier, PimKMeans,
+                                   PimLinearRegression,
+                                   PimLogisticRegression)
+from repro.data.synthetic import (make_blobs, make_classification,
+                                  make_linear_dataset)
+
+
+def test_linear_regression_estimator():
+    X, y, _ = make_linear_dataset(2048, 8, task="regression", seed=0)
+    est = PimLinearRegression(version="int32", n_iters=400).fit(X, y)
+    assert est.score(X, y) > 0.95
+    assert est.coef_.shape == (8,)
+
+
+def test_logistic_regression_estimator():
+    X, y, _ = make_linear_dataset(2048, 8, seed=1)
+    est = PimLogisticRegression(version="int32_lut_wram",
+                                n_iters=400).fit(X, y)
+    assert est.score(X, y) > 0.95
+    proba = est.predict_proba(X[:10])
+    assert proba.shape == (10, 2)
+    assert np.allclose(proba.sum(axis=1), 1.0, atol=1e-5)
+
+
+def test_decision_tree_estimator():
+    X, y = make_classification(8000, 16, seed=3, class_sep=1.5)
+    est = PimDecisionTreeClassifier(max_depth=8, seed=0).fit(X, y)
+    assert est.score(X, y) > 0.75
+
+
+def test_kmeans_estimator():
+    X, _, _ = make_blobs(6000, 8, centers=8, seed=4)
+    est = PimKMeans(n_clusters=8, n_init=2, seed=0).fit(X)
+    assert est.cluster_centers_.shape == (8, 8)
+    assert est.labels_.shape == (6000,)
+    pred = est.predict(X[:100])
+    assert np.array_equal(pred, est.labels_[:100])
+
+
+def test_estimators_duck_type_sklearn():
+    """fit returns self; predict/score exist (pipeline compatibility)."""
+    X, y, _ = make_linear_dataset(512, 4, seed=5)
+    for est in (PimLinearRegression(n_iters=10),
+                PimLogisticRegression(n_iters=10)):
+        assert est.fit(X, y) is est
+        assert est.predict(X).shape[0] == 512
+        assert np.isfinite(est.score(X, y))

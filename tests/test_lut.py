@@ -1,0 +1,67 @@
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.fixed_point import from_fixed, to_fixed
+from repro.core.lut import (ActivationLut, build_sigmoid_lut, gelu_lut,
+                            lut_sigmoid_fixed, lut_sigmoid_float, silu_lut,
+                            taylor_sigmoid_fixed)
+
+
+def test_lut_size_matches_paper():
+    """Paper Fig. 4: boundary 20, 10 frac bits, 16-bit entries -> 40 KB."""
+    lut = build_sigmoid_lut(boundary=20, frac_bits=10)
+    assert lut.table.size == 20 * 1024
+    assert lut.nbytes == 40 * 1024
+    assert lut.table.dtype == jnp.int16
+
+
+def test_lut_sigmoid_accuracy():
+    lut = build_sigmoid_lut()
+    x = jnp.linspace(-15, 15, 4001)
+    err = np.abs(np.asarray(lut_sigmoid_float(x, lut))
+                 - np.asarray(jax.nn.sigmoid(x)))
+    assert err.max() < 5e-4  # Q10 input / Q15 value resolution
+
+
+def test_lut_sigmoid_symmetry():
+    """sigmoid(-x) = 1 - sigmoid(x) must hold exactly (paper exploits it)."""
+    lut = build_sigmoid_lut()
+    xq = to_fixed(jnp.linspace(0.01, 19, 257), 10)
+    pos = lut_sigmoid_fixed(xq, lut)
+    neg = lut_sigmoid_fixed(-xq, lut)
+    one = 1 << lut.value_frac
+    assert np.array_equal(np.asarray(pos + neg), np.full(257, one))
+
+
+def test_taylor_sigmoid_worse_than_lut():
+    """Paper §5.1.2: Taylor versions have higher error than LUT versions."""
+    lut = build_sigmoid_lut()
+    x = jnp.linspace(-10, 10, 2001)
+    xq = to_fixed(x, 10)
+    ref = np.asarray(jax.nn.sigmoid(x))
+    lut_err = np.abs(np.asarray(from_fixed(lut_sigmoid_fixed(xq, lut), 15))
+                     - ref).max()
+    tay_err = np.abs(np.asarray(from_fixed(taylor_sigmoid_fixed(xq, 10), 10))
+                     - ref).max()
+    assert tay_err > lut_err
+    assert tay_err < 0.05  # still usable (paper's LOG-INT32 trains OK)
+
+
+@pytest.mark.parametrize("make,fn", [
+    (silu_lut, lambda x: x / (1 + np.exp(-x))),
+    (gelu_lut, lambda x: 0.5 * x * (1 + np.tanh(
+        np.sqrt(2 / np.pi) * (x + 0.044715 * x ** 3)))),
+])
+def test_activation_luts(make, fn):
+    lut = make(n_entries=8192)
+    x = jnp.linspace(-10, 10, 1001).astype(jnp.float32)
+    out = np.asarray(lut(x))
+    assert np.abs(out - fn(np.asarray(x))).max() < 2e-2
+
+
+def test_activation_lut_clamps_out_of_range():
+    lut = ActivationLut.from_fn(lambda x: x, x_min=-1, x_max=1, n_entries=256)
+    out = np.asarray(lut(jnp.asarray([-5.0, 5.0])))
+    assert out[0] == -1.0 and out[1] == 1.0

@@ -1,0 +1,46 @@
+import numpy as np
+
+from repro.core.metrics import (accuracy, adjusted_rand_index,
+                                calinski_harabasz, frobenius_shift,
+                                training_error_rate)
+
+
+def test_training_error_rate():
+    pred = np.array([0.9, 0.1, 0.6, 0.4])
+    y = np.array([1.0, 0.0, 0.0, 1.0])
+    assert training_error_rate(pred, y) == 50.0
+
+
+def test_accuracy():
+    assert accuracy(np.array([1, 0, 1]), np.array([1, 1, 1])) == 2 / 3
+
+
+def test_ari_identical_partitions():
+    a = np.array([0, 0, 1, 1, 2, 2])
+    assert adjusted_rand_index(a, a) == 1.0
+    # relabeling-invariant
+    b = np.array([5, 5, 9, 9, 7, 7])
+    assert adjusted_rand_index(a, b) == 1.0
+
+
+def test_ari_random_partitions_near_zero():
+    rng = np.random.RandomState(0)
+    a = rng.randint(0, 4, 4000)
+    b = rng.randint(0, 4, 4000)
+    assert abs(adjusted_rand_index(a, b)) < 0.02
+
+
+def test_calinski_harabasz_prefers_true_clustering():
+    rng = np.random.RandomState(1)
+    centers = np.array([[0, 0], [10, 10], [-10, 10]], np.float64)
+    y = rng.randint(0, 3, 3000)
+    X = centers[y] + rng.normal(0, 1, (3000, 2))
+    good = calinski_harabasz(X, y)
+    bad = calinski_harabasz(X, rng.randint(0, 3, 3000))
+    assert good > 100 * max(bad, 1e-9)
+
+
+def test_frobenius_shift():
+    a = np.eye(3)
+    assert frobenius_shift(a, a) == 0.0
+    assert frobenius_shift(a, 2 * a) > 0.5

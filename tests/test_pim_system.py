@@ -1,0 +1,131 @@
+"""PIM execution model invariants (core/pim.py)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.pim import (DpuCostModel, PimConfig, PimSystem, ReduceVia)
+
+
+def _sum_kernel(xc, w):
+    return {"s": jnp.sum(xc * w)}
+
+
+def test_shard_rows_pads_to_equal_shards():
+    pim = PimSystem(PimConfig(n_cores=4))
+    x = np.arange(10, dtype=np.float32)
+    xs = pim.shard_rows(x)
+    assert xs.shape == (4, 3)
+    mask = np.asarray(pim.row_validity_mask(10))
+    assert mask.sum() == 10
+    assert mask.shape == (4, 3)
+
+
+def test_map_reduce_sums_across_cores():
+    pim = PimSystem(PimConfig(n_cores=4))
+    x = np.arange(12, dtype=np.float32)
+    xs = pim.shard_rows(x)
+    out = pim.map_reduce(_sum_kernel, (xs,), (jnp.float32(2.0),))
+    assert float(out["s"]) == 2.0 * x.sum()
+
+
+def test_host_reduce_matches_fabric():
+    x = np.random.RandomState(0).uniform(-1, 1, 64).astype(np.float32)
+    outs = {}
+    for mode in (ReduceVia.FABRIC, ReduceVia.HOST):
+        pim = PimSystem(PimConfig(n_cores=8, reduce=mode))
+        xs = pim.shard_rows(x)
+        outs[mode] = float(pim.map_reduce(
+            _sum_kernel, (xs,), (jnp.float32(1.0),))["s"])
+    assert outs[ReduceVia.FABRIC] == pytest.approx(outs[ReduceVia.HOST],
+                                                   rel=1e-6)
+
+
+def test_result_independent_of_core_count_int():
+    """Partitioning must not change integer results (paper determinism)."""
+    x = np.random.RandomState(1).randint(-100, 100, 256).astype(np.int32)
+
+    def kern(xc, _):
+        return {"s": jnp.sum(xc)}
+
+    res = []
+    for cores in (1, 4, 16, 64):
+        pim = PimSystem(PimConfig(n_cores=cores))
+        xs = pim.shard_rows(x)
+        res.append(int(pim.map_reduce(kern, (xs,), (0,))["s"]))
+    assert len(set(res)) == 1
+
+
+def test_transfer_stats_track_bytes():
+    pim = PimSystem(PimConfig(n_cores=4))
+    x = np.zeros(16, np.float32)
+    pim.shard_rows(x)
+    assert pim.stats.cpu_to_pim == 16 * 4
+    pim.broadcast((jnp.zeros(3, jnp.float32),))
+    assert pim.stats.cpu_to_pim == 16 * 4 + 4 * 3 * 4
+
+
+def test_map_elementwise_keeps_core_axis():
+    pim = PimSystem(PimConfig(n_cores=4))
+    x = np.arange(8, dtype=np.float32)
+    xs = pim.shard_rows(x)
+    out = pim.map_elementwise(lambda xc, c: xc + c, (xs,),
+                              (jnp.float32(10.0),))
+    assert out.shape == (4, 2)
+    assert np.allclose(np.asarray(out).ravel(), x + 10)
+
+
+def test_map_reduce_custom_minmax():
+    pim = PimSystem(PimConfig(n_cores=4))
+    x = np.random.RandomState(2).uniform(-5, 5, 32).astype(np.float32)
+    xs = pim.shard_rows(x, pad_value=0)
+
+    def kern(xc, _):
+        return {"min": jnp.min(xc), "max": jnp.max(xc)}
+
+    out = pim.map_reduce_custom(kern, (xs,), (0,),
+                                reduce={"min": "min", "max": "max"})
+    assert float(out["min"]) == pytest.approx(x.min())
+    assert float(out["max"]) == pytest.approx(x.max())
+
+
+# ---------------------------------------------------------------------------
+# DPU cost model: reproduces the paper's measured speedup ratios (§5.2).
+# ---------------------------------------------------------------------------
+
+def test_cost_model_pipeline_saturates_at_11_threads():
+    m = DpuCostModel()
+    t = [m.kernel_seconds(1e6, 0, n) for n in range(1, 25)]
+    # monotone non-increasing, flat from 11 on (Fig. 8-10 shape)
+    assert all(a >= b - 1e-12 for a, b in zip(t, t[1:]))
+    assert t[10] == pytest.approx(t[23])
+    assert t[0] / t[10] == pytest.approx(11.0, rel=1e-6)
+
+
+def test_cost_model_version_ratios_match_paper():
+    """Calibration check: modeled ratios within tolerance of paper's
+    measured speedups (§5.2.1-§5.2.2)."""
+    m = DpuCostModel()
+
+    def sec(w, v):
+        return m.workload_seconds(w, v, n_samples=2048, n_features=16,
+                                  n_cores=1, n_threads=16)
+
+    fp32_over_int32 = sec("lin", "fp32") / sec("lin", "int32")
+    assert 7.0 < fp32_over_int32 < 13.0          # "order of magnitude"
+    hyb_gain = sec("lin", "int32") / sec("lin", "hyb")
+    assert 1.2 < hyb_gain < 1.7                   # paper: +41%
+    bui_gain = sec("lin", "hyb") / sec("lin", "bui")
+    assert 1.1 < bui_gain < 1.45                  # paper: +25%
+    lut_gain = sec("log", "int32") / sec("log", "int32_lut_wram")
+    assert lut_gain > 1.5                         # LUT >> Taylor
+    mram_penalty = (sec("log", "int32_lut_mram")
+                    / sec("log", "int32_lut_wram"))
+    assert 1.0 <= mram_penalty < 1.2              # paper: ~3%
+
+
+def test_cost_model_strong_scaling_linear():
+    """PIM kernel time scales ~linearly with cores (paper Fig. 12)."""
+    m = DpuCostModel()
+    t256 = m.workload_seconds("dtr", "fp32", 153_600_000, 16, 256, 16)
+    t2048 = m.workload_seconds("dtr", "fp32", 153_600_000, 16, 2048, 16)
+    assert t256 / t2048 == pytest.approx(8.0, rel=0.05)

@@ -1,0 +1,152 @@
+"""Property-based tests (seeded random sweeps).
+
+`hypothesis` cannot be installed in this offline container; these tests
+randomize shapes/values over seeded draws and assert system invariants —
+the same falsification intent, deterministic by construction.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.fixed_point import from_fixed, fx_dot, to_fixed
+from repro.core.lut import build_sigmoid_lut, lut_sigmoid_fixed
+from repro.core.pim import PimConfig, PimSystem
+from repro.core.quantization import dequantize, symmetric_quantize
+
+N_CASES = 25
+
+
+def _cases(seed, n=N_CASES):
+    return [np.random.RandomState(seed + i) for i in range(n)]
+
+
+def test_quantization_error_bound_property():
+    """|x - dq(q(x))| <= scale/2 for every tensor, any shape/range."""
+    for rng in _cases(0):
+        shape = tuple(rng.randint(1, 24, size=rng.randint(1, 4)))
+        scale = 10.0 ** rng.uniform(-3, 3)
+        x = jnp.asarray(rng.uniform(-scale, scale, shape), jnp.float32)
+        bits = int(rng.choice([8, 16]))
+        q, p = symmetric_quantize(x, bits=bits)
+        err = jnp.abs(dequantize(q, p) - x)
+        # + f32 rounding slack: x/scale and q*scale are f32 ops
+        tol = float(p.scale) * 0.5 + float(jnp.abs(x).max()) * 1e-6
+        assert float(err.max()) <= tol
+
+
+def test_fx_dot_linearity_property():
+    """fx_dot(a*x, w) ~= a*fx_dot(x, w) for integer scalings."""
+    for rng in _cases(10):
+        f = int(rng.choice([8, 10, 12]))
+        n = rng.randint(2, 32)
+        x = rng.uniform(0, 1, n).astype(np.float32)
+        w = rng.uniform(-1, 1, n).astype(np.float32)
+        d1 = float(from_fixed(fx_dot(to_fixed(x, f), to_fixed(w, f), f), f))
+        d2 = float(from_fixed(fx_dot(to_fixed(2 * x, f),
+                                     to_fixed(w, f), f), f))
+        assert abs(d2 - 2 * d1) < n * 2.0 ** -f * 8 + 1e-6
+
+
+def test_lut_sigmoid_monotone_and_bounded_property():
+    lut = build_sigmoid_lut()
+    for rng in _cases(20, 10):
+        x = np.sort(rng.uniform(-30, 30, 64)).astype(np.float32)
+        out = np.asarray(lut_sigmoid_fixed(to_fixed(x, 10), lut))
+        assert (np.diff(out) >= 0).all()          # monotone
+        assert out.min() >= 0 and out.max() <= (1 << 15)
+
+
+def test_pim_partitioning_invariance_property():
+    """Integer map-reduce results are identical for ANY core count."""
+    for rng in _cases(30, 10):
+        n = rng.randint(10, 300)
+        x = rng.randint(-1000, 1000, n).astype(np.int32)
+
+        def kern(xc, mask, _):
+            return {"s": jnp.sum(xc * mask)}
+
+        outs = set()
+        for cores in rng.choice([1, 2, 4, 8, 16], size=3, replace=False):
+            pim = PimSystem(PimConfig(n_cores=int(cores)))
+            xs = pim.shard_rows(x)
+            mask = pim.row_validity_mask(n).astype(jnp.int32)
+            outs.add(int(pim.map_reduce(kern, (xs, mask), (0,))["s"]))
+        assert len(outs) == 1
+
+
+def test_kmeans_assign_labels_are_argmin_property():
+    from repro.kernels.kmeans_assign.ops import assign_and_accumulate
+    for rng in _cases(40, 10):
+        n = int(rng.randint(8, 200))
+        f = int(rng.choice([4, 8, 16]))
+        k = int(rng.choice([2, 4, 8]))
+        x = jnp.asarray(rng.randint(-2047, 2048, (n, f)), jnp.int16)
+        c = jnp.asarray(rng.randint(-2047, 2048, (k, f)), jnp.int16)
+        labels, sums, counts = assign_and_accumulate(
+            x, c, use_pallas=True, block_n=64)
+        d = ((np.asarray(x, np.int64)[:, None, :]
+              - np.asarray(c, np.int64)[None]) ** 2).sum(-1)
+        np.testing.assert_array_equal(np.asarray(labels), d.argmin(1))
+        assert int(counts.sum()) == n
+
+
+def test_attention_cache_invariance_property():
+    """Decode-with-cache == teacher forcing for random small models."""
+    from repro.configs.base import get_config
+    from repro.models.api import Model
+    for i, rng in enumerate(_cases(50, 4)):
+        cfg = get_config("granite-3-8b").reduced(
+            n_layers=int(rng.choice([1, 2])),
+            d_model=int(rng.choice([64, 128])),
+            vocab_size=int(rng.choice([64, 256])))
+        model = Model(cfg)
+        params = model.init(jax.random.PRNGKey(i))
+        S = int(rng.choice([8, 16]))
+        toks = jnp.asarray(rng.randint(0, cfg.vocab_size, (1, S)))
+        _, cache = model.prefill(params, {"tokens": toks[:, :-1]},
+                                 max_seq=S)
+        dec, _ = model.decode_step(params, toks[:, -1:], cache)
+        full = model.forward(params, {"tokens": toks})
+        np.testing.assert_allclose(np.asarray(dec[:, 0]),
+                                   np.asarray(full[:, -1]),
+                                   atol=2e-3, rtol=2e-3)
+
+
+def test_moe_dispatch_equivalence_property():
+    """gather and dense dispatch agree for random dropless specs."""
+    import dataclasses
+    from repro.models.moe import MoeSpec, init_moe, moe_apply
+    for i, rng in enumerate(_cases(60, 8)):
+        e = int(rng.choice([4, 8]))
+        k = int(rng.choice([1, 2]))
+        g = int(rng.choice([1, 2, 4]))
+        spec_d = MoeSpec(d_model=32, n_experts=e, n_experts_real=e - 1,
+                         top_k=k, d_ff=16, capacity_factor=float(4 * e),
+                         dispatch="dense")
+        spec_g = dataclasses.replace(spec_d, dispatch="gather", groups=g)
+        p = init_moe(jax.random.PRNGKey(i), spec_d, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(100 + i), (2, 8, 32))
+        od, _ = moe_apply(p, spec_d, x)
+        og, _ = moe_apply(p, spec_g, x)
+        np.testing.assert_allclose(np.asarray(od), np.asarray(og),
+                                   atol=2e-5)
+
+
+def test_checkpoint_roundtrip_property(tmp_path):
+    """Arbitrary pytrees survive save/restore bit-exactly."""
+    from repro.train import checkpoint as ckpt
+    for i, rng in enumerate(_cases(70, 6)):
+        tree = {
+            "a": jnp.asarray(rng.normal(size=tuple(
+                rng.randint(1, 8, size=2))), jnp.float32),
+            "b": {"c": jnp.asarray(rng.randint(0, 100, 5), jnp.int32),
+                  "d": jnp.asarray(rng.normal(size=3), jnp.bfloat16)},
+        }
+        d = str(tmp_path / f"case{i}")
+        ckpt.save(d, 1, tree)
+        back = ckpt.restore(d, 1, tree)
+        for l1, l2 in zip(jax.tree_util.tree_leaves(tree),
+                          jax.tree_util.tree_leaves(back)):
+            np.testing.assert_array_equal(
+                np.asarray(l1, np.float32), np.asarray(l2, np.float32))

@@ -1,0 +1,155 @@
+"""Training-quality reproduction of paper §4.1 / §5.1.
+
+The paper's quality claims (synthetic datasets, single PIM core semantics):
+  LIN: FP32 error == CPU; INT32/HYB within ~1 pt of FP32 (Fig. 6)
+  LOG: FP32 == CPU; LUT versions <= Taylor-INT32 error (Fig. 7)
+  DTR: PIM accuracy ~~ CPU accuracy (0.90008 vs 0.90175)
+  KME: ARI(PIM, CPU) ~ 0.999; equal Calinski-Harabasz scores (§5.1.4)
+
+Exact error *values* depend on the (unpublished) synthetic data draw, so
+these tests assert the paper's *relationships* with tolerance bands, and
+benchmarks/fig06_07_quality.py reports the actual curves next to the
+paper's numbers.
+"""
+import numpy as np
+import pytest
+
+from repro.core import dtree, kmeans, linreg, logreg
+from repro.core.metrics import (accuracy, adjusted_rand_index,
+                                calinski_harabasz, training_error_rate)
+from repro.core.pim import PimConfig, PimSystem
+from repro.data.synthetic import (make_blobs, make_classification,
+                                  make_linear_dataset)
+
+N_ITERS = 600
+
+
+@pytest.fixture(scope="module")
+def linlog_data():
+    # paper §4.1: 8192 samples, 16 attributes, 4 decimal digits
+    return make_linear_dataset(8192, 16, decimals=4, seed=0)
+
+
+@pytest.fixture(scope="module")
+def pim():
+    return PimSystem(PimConfig(n_cores=16))
+
+
+class TestLinQuality:
+    @pytest.fixture(scope="class")
+    def errors(self, linlog_data, pim):
+        X, y, _ = linlog_data
+        out = {}
+        cpu = linreg.train_cpu_baseline(X, y, n_iters=N_ITERS)
+        out["cpu"] = training_error_rate(cpu.predict(X), y)
+        for ver in linreg.VERSIONS:
+            r = linreg.train(X, y, pim,
+                             linreg.GdConfig(version=ver, n_iters=N_ITERS))
+            out[ver] = training_error_rate(r.predict(X), y)
+        return out
+
+    def test_fp32_matches_cpu(self, errors):
+        """Paper: 'LIN-FP32 ... same as the CPU version'."""
+        assert errors["fp32"] == pytest.approx(errors["cpu"], abs=0.05)
+
+    def test_all_versions_converge(self, errors):
+        for ver in linreg.VERSIONS:
+            assert errors[ver] < 5.0, (ver, errors)
+
+    def test_integer_versions_close_to_fp32(self, errors):
+        """Paper Fig. 6: integer-version error stays within ~1 pt."""
+        assert abs(errors["int32"] - errors["fp32"]) < 1.0
+        assert abs(errors["hyb"] - errors["fp32"]) < 1.5
+
+    def test_hyb_and_bui_identical(self, errors):
+        """Paper: same datatypes -> same behavior."""
+        assert errors["hyb"] == errors["bui"]
+
+
+class TestLogQuality:
+    @pytest.fixture(scope="class")
+    def errors(self, linlog_data, pim):
+        X, y, _ = linlog_data
+        out = {}
+        cpu = logreg.train_cpu_baseline(X, y, n_iters=N_ITERS)
+        out["cpu"] = training_error_rate(cpu.predict(X), y, threshold=0.0)
+        for ver in logreg.VERSIONS:
+            r = logreg.train(
+                X, y, pim,
+                logreg.LogRegConfig(version=ver, n_iters=N_ITERS))
+            out[ver] = training_error_rate(r.predict(X), y, threshold=0.0)
+        return out
+
+    def test_fp32_matches_cpu(self, errors):
+        assert errors["fp32"] == pytest.approx(errors["cpu"], abs=0.3)
+
+    def test_all_versions_converge(self, errors):
+        for ver in logreg.VERSIONS:
+            assert errors[ver] < 8.0, (ver, errors)
+
+    def test_lut_no_worse_than_taylor(self, errors):
+        """Paper §5.1.2: LUT stores exact values, Taylor approximates."""
+        assert errors["int32_lut_wram"] <= errors["int32"] + 0.25
+
+    def test_mram_wram_numerically_identical(self, errors):
+        """Placement changes cost, not values."""
+        assert errors["int32_lut_mram"] == errors["int32_lut_wram"]
+
+    def test_hyb_and_bui_identical(self, errors):
+        assert errors["hyb_lut"] == errors["bui_lut"]
+
+
+class TestLogDecimalsEffect:
+    def test_fewer_decimals_helps_hybrid(self, pim):
+        """Paper Fig. 7(b): with 2-decimal samples the HYB-LUT error drops
+        (8-bit representation is then nearly lossless)."""
+        errs = {}
+        for dec in (4, 2):
+            X, y, _ = make_linear_dataset(4096, 16, decimals=dec, seed=7)
+            r = logreg.train(
+                X, y, pim,
+                logreg.LogRegConfig(version="hyb_lut", n_iters=400))
+            errs[dec] = training_error_rate(r.predict(X), y, threshold=0.0)
+        assert errs[2] <= errs[4] + 0.3
+
+
+class TestDtrQuality:
+    def test_pim_matches_cpu_accuracy(self, pim):
+        """Paper §5.1.3: 0.90008 (PIM) vs 0.90175 (CPU) at depth 10."""
+        X, y = make_classification(60_000, 16, seed=0, class_sep=1.4)
+        accs = []
+        for seed in (0, 1):
+            t_pim = dtree.train(X, y, pim,
+                                dtree.TreeConfig(max_depth=10, seed=seed))
+            t_cpu = dtree.train_cpu_baseline(
+                X, y, dtree.TreeConfig(max_depth=10, seed=seed))
+            accs.append((accuracy(t_pim.predict(X), y),
+                         accuracy(t_cpu.predict(X), y)))
+        pim_acc = np.mean([a for a, _ in accs])
+        cpu_acc = np.mean([b for _, b in accs])
+        assert pim_acc > 0.80
+        assert abs(pim_acc - cpu_acc) < 0.04
+
+    def test_depth_limit_respected(self, pim):
+        X, y = make_classification(10_000, 16, seed=2)
+        t = dtree.train(X, y, pim, dtree.TreeConfig(max_depth=4, seed=0))
+        assert int(t.depth[: t.n_nodes].max()) <= 4
+
+
+class TestKmeQuality:
+    def test_pim_cpu_clusterings_nearly_identical(self, pim):
+        """Paper §5.1.4: ARI ~= 0.999, equal CH scores despite quantization."""
+        X, _, _ = make_blobs(20_000, 16, centers=16, seed=0)
+        cfg = kmeans.KMeansConfig(k=16, seed=3, n_init=2)
+        r_pim = kmeans.train(X, pim, cfg)
+        r_cpu = kmeans.train_cpu_baseline(X, cfg)
+        ari = adjusted_rand_index(r_pim.labels, r_cpu.labels)
+        assert ari > 0.95
+        ch_pim = calinski_harabasz(X, r_pim.labels)
+        ch_cpu = calinski_harabasz(X, r_cpu.labels)
+        assert ch_pim == pytest.approx(ch_cpu, rel=0.02)
+
+    def test_converges_under_max_iters(self, pim):
+        X, _, _ = make_blobs(8_000, 16, centers=16, seed=1)
+        r = kmeans.train(X, pim, kmeans.KMeansConfig(k=16, seed=0))
+        assert r.n_iters < 300  # paper: always < 40 in practice

@@ -1,0 +1,61 @@
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.quantization import (QuantParams, dequantize,
+                                     int_dtype_for_bits, quantize_with,
+                                     quantization_snr_db, symmetric_quantize)
+
+
+def test_int_dtype_selection():
+    assert int_dtype_for_bits(8) == jnp.int8
+    assert int_dtype_for_bits(12) == jnp.int16
+    assert int_dtype_for_bits(32) == jnp.int32
+    with pytest.raises(ValueError):
+        int_dtype_for_bits(64)
+
+
+@pytest.mark.parametrize("bits", [8, 16])
+def test_roundtrip_error_bounded(bits):
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.uniform(-3, 3, size=(64, 16)).astype(np.float32))
+    q, p = symmetric_quantize(x, bits=bits)
+    err = np.abs(np.asarray(dequantize(q, p)) - np.asarray(x))
+    assert err.max() <= float(p.scale) * 0.5 + 1e-6
+
+
+def test_per_channel_scales():
+    rng = np.random.RandomState(1)
+    x = jnp.asarray(rng.uniform(-1, 1, size=(32, 4)).astype(np.float32)
+                    * np.array([1, 10, 100, 1000], np.float32))
+    q, p = symmetric_quantize(x, bits=8, axis=1)
+    assert p.scale.shape == (1, 4)
+    # each column uses its own full dynamic range
+    assert np.abs(np.asarray(q)).max(axis=0).min() >= 100
+
+
+def test_quantize_with_reuses_params():
+    rng = np.random.RandomState(2)
+    x = jnp.asarray(rng.uniform(-1, 1, size=(128,)).astype(np.float32))
+    _, p = symmetric_quantize(x, bits=8)
+    q2 = quantize_with(x, p)
+    assert np.array_equal(np.asarray(q2),
+                          np.asarray(symmetric_quantize(x, 8)[0]))
+
+
+def test_snr_improves_with_bits():
+    rng = np.random.RandomState(3)
+    x = rng.uniform(-1, 1, size=4096).astype(np.float32)
+    snr8 = quantization_snr_db(x, 8)
+    snr16 = quantization_snr_db(x, 16)
+    assert snr8 > 30          # ~6 dB/bit rule of thumb
+    assert snr16 > snr8 + 35
+
+
+def test_quantparams_is_pytree():
+    import jax
+    _, p = symmetric_quantize(jnp.ones(4), bits=8)
+    leaves, treedef = jax.tree_util.tree_flatten(p)
+    assert len(leaves) == 1
+    p2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert p2.bits == p.bits

@@ -1,0 +1,81 @@
+"""Mini-batch SGD variant (paper §2 mentions GD *and* SGD) + data loader."""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import linreg
+from repro.core.metrics import training_error_rate
+from repro.core.pim import PimConfig, PimSystem
+from repro.data.loader import PrefetchLoader
+from repro.data.synthetic import make_linear_dataset
+from repro.data.tokens import MarkovCorpus, UniformTokens
+
+
+def test_sgd_converges_like_gd():
+    X, y, _ = make_linear_dataset(8192, 16, seed=0)
+    pim = PimSystem(PimConfig(n_cores=16))
+    gd = linreg.train(X, y, pim, linreg.GdConfig(version="int32",
+                                                 n_iters=400))
+    sgd = linreg.train(X, y, pim, linreg.GdConfig(
+        version="int32", n_iters=400, minibatch=128, lr=0.05))
+    e_gd = training_error_rate(gd.predict(X), y)
+    e_sgd = training_error_rate(sgd.predict(X), y)
+    assert e_sgd < e_gd + 2.0, (e_gd, e_sgd)
+
+
+def test_sgd_uses_minibatch_counters():
+    """SGD must move fewer PIM->CPU bytes per iteration than full GD? No —
+    partials are same size; what shrinks is the per-iteration *compute*.
+    Assert instead the deterministic seed reproduces the same model."""
+    X, y, _ = make_linear_dataset(2048, 8, seed=1)
+    pim = PimSystem(PimConfig(n_cores=8))
+    cfg = linreg.GdConfig(version="fp32", n_iters=50, minibatch=64, seed=7)
+    r1 = linreg.train(X, y, pim, cfg)
+    r2 = linreg.train(X, y, pim, cfg)
+    np.testing.assert_array_equal(r1.w, r2.w)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_prefetch_loader_delivers_batches():
+    corpus = UniformTokens(128, seed=0)
+    loader = PrefetchLoader(lambda: corpus.batch(4, 16), prefetch=2)
+    try:
+        seen = [next(loader) for _ in range(5)]
+        for b in seen:
+            assert b["tokens"].shape == (4, 16)
+            assert int(jnp.max(b["tokens"])) < 128
+    finally:
+        loader.close()
+
+
+def test_prefetch_loader_overlaps_host_work():
+    """The loader must hide a slow host source behind consumption."""
+    def slow_source():
+        time.sleep(0.05)
+        return {"x": np.zeros(4, np.float32)}
+
+    loader = PrefetchLoader(slow_source, prefetch=2)
+    try:
+        next(loader)          # warm
+        time.sleep(0.12)      # let the worker stage ahead
+        t0 = time.perf_counter()
+        next(loader)
+        dt = time.perf_counter() - t0
+        assert dt < 0.04, dt  # served from the prefetch queue
+    finally:
+        loader.close()
+
+
+def test_markov_corpus_entropy_bound_sane():
+    c = MarkovCorpus(256, seed=0)
+    h = c.entropy_bound()
+    assert 0.0 < h < np.log(256)
+    batch = c.batch(3, 20)
+    assert batch["tokens"].shape == (3, 20)
+    # targets are tokens shifted by one
+    full = c.sample(1, 10)
+    assert full.shape == (1, 11)

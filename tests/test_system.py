@@ -1,0 +1,131 @@
+"""End-to-end behaviour tests for the whole system."""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, get_config
+from repro.configs.shapes import SHAPES, all_cells, shape_for, supports
+from repro.data.tokens import MarkovCorpus
+from repro.models.api import Model, input_specs
+from repro.optim.adam import AdamW
+from repro.train.loop import make_train_step
+
+
+def test_lm_learns_markov_structure():
+    """A small LM must push loss clearly below the uniform bound toward the
+    corpus entropy floor (end-to-end train correctness)."""
+    cfg = get_config("granite-3-8b").reduced(vocab_size=128)
+    model = Model(cfg)
+    corpus = MarkovCorpus(cfg.vocab_size, seed=0)
+    opt = AdamW(lr=3e-3)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    step = jax.jit(make_train_step(model, opt))
+    losses = []
+    for i in range(60):
+        batch = jax.tree_util.tree_map(jnp.asarray, corpus.batch(16, 32))
+        params, opt_state, m = step(params, opt_state, batch)
+        losses.append(float(m["loss"]))
+    uniform = np.log(cfg.vocab_size)
+    assert losses[-1] < uniform - 0.5, (losses[0], losses[-1], uniform)
+
+
+def test_serving_engine_end_to_end():
+    from repro.serve.engine import Request, ServeEngine
+    cfg = get_config("granite-3-8b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, n_slots=2, max_seq=48)
+    rng = np.random.RandomState(0)
+    reqs = [Request(prompt=rng.randint(0, cfg.vocab_size, 8)
+                    .astype(np.int32), max_new_tokens=6) for _ in range(5)]
+    done = engine.run(reqs)
+    assert all(r.done for r in done)
+    assert all(len(r.output) == 6 for r in done)
+    assert all(0 <= t < cfg.vocab_size for r in done for t in r.output)
+
+
+def test_serving_greedy_deterministic():
+    from repro.serve.engine import Request, ServeEngine
+    cfg = get_config("qwen3-8b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    outs = []
+    for _ in range(2):
+        engine = ServeEngine(model, params, n_slots=1, max_seq=32)
+        r = engine.run([Request(
+            prompt=np.arange(8, dtype=np.int32), max_new_tokens=8)])[0]
+        outs.append(tuple(r.output))
+    assert outs[0] == outs[1]
+
+
+# ---------------------------------------------------------------------------
+# Cell/shape matrix sanity.
+# ---------------------------------------------------------------------------
+
+def test_cell_matrix_is_complete():
+    cells = all_cells()
+    assert len(cells) == 40  # 10 archs x 4 shapes
+    skips = [(a, s) for a, s, ok, _ in cells if not ok]
+    # only long_500k skips, only for non-ssm/hybrid archs
+    assert all(s == "long_500k" for _, s in skips)
+    assert len(skips) == 8
+
+
+def test_input_specs_no_allocation():
+    """input_specs must return ShapeDtypeStructs (dry-run contract)."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname in SHAPES:
+            ok, _ = supports(cfg, sname)
+            if not ok:
+                continue
+            spec = input_specs(cfg, shape_for(cfg, sname))
+            for leaf in jax.tree_util.tree_leaves(spec):
+                assert isinstance(leaf, jax.ShapeDtypeStruct), (arch, sname)
+
+
+def test_train_microbatches_divide_batches():
+    from repro.configs.shapes import TRAIN_MICROBATCHES
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        s = shape_for(cfg, "train_4k")
+        assert s.global_batch % s.microbatches == 0, arch
+
+
+# ---------------------------------------------------------------------------
+# Dry-run machinery (unit level; the full sweep runs via the launcher).
+# ---------------------------------------------------------------------------
+
+def test_dryrun_results_exist_and_green():
+    """The committed sweep results must cover all 80 cells with no errors
+    (regenerate with `python -m repro.launch.dryrun`)."""
+    import json
+    import os
+    path = "experiments/dryrun_results.json"
+    if not os.path.exists(path):
+        pytest.skip("dry-run results not generated yet")
+    with open(path) as f:
+        results = json.load(f)
+    # production cells have 3-part keys; --mesh-shape experiments append
+    # a 4th part and live alongside
+    prod = {k: v for k, v in results.items() if len(k.split("|")) == 3}
+    assert len(prod) == 80
+    statuses = {k: v["status"] for k, v in prod.items()}
+    errors = [k for k, s in statuses.items() if s == "error"]
+    assert not errors, errors
+    assert sum(1 for s in statuses.values() if s == "skipped") == 16
+
+
+def test_production_mesh_shapes():
+    """make_production_mesh matches the assignment spec (no device-state
+    dependency beyond host platform)."""
+    import repro.launch.mesh as mesh_mod
+    import inspect
+    src = inspect.getsource(mesh_mod.make_production_mesh)
+    assert "(2, 16, 16)" in src and "(16, 16)" in src
+    assert '"pod", "data", "model"' in src

@@ -1,0 +1,18 @@
+# Developer entry points.  `make check` is the fast gate (<60 s);
+# `make test` is the full tier-1 suite; `make bench` prints the paper
+# figure reproductions as CSV.
+PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: check test bench quickstart
+
+check:
+	./scripts/ci.sh
+
+test:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -q
+
+bench:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run $(ARGS)
+
+quickstart:
+	PYTHONPATH=$(PYTHONPATH) python examples/quickstart.py

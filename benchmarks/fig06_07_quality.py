@@ -7,13 +7,13 @@ the asserted relationships live in tests/test_quality_repro.py.
 """
 from __future__ import annotations
 
-import numpy as np
+import time
 
+from repro.api import PimConfig, PimSystem
 from repro.core import linreg, logreg
 from repro.core.metrics import training_error_rate
-from repro.core.pim import PimConfig, PimSystem
 from repro.data.synthetic import make_linear_dataset
-from .common import row, time_call
+from .common import row
 
 PAPER_LIN = {"fp32": 0.55, "int32": 1.02, "hyb": 1.29, "bui": 1.29}
 PAPER_LOG = {"fp32": 1.20, "int32": 2.42, "int32_lut_mram": 2.14,
@@ -25,33 +25,37 @@ def run():
     rows = []
     X, y, _ = make_linear_dataset(8192, 16, decimals=4, seed=0)
     pim = PimSystem(PimConfig(n_cores=16))
+    # one bank-resident dataset for the whole LIN+LOG version ladder:
+    # ten trainings, one CPU->PIM partition per data precision
+    ds = pim.put(X, y)
 
     for ver in linreg.VERSIONS:
-        import time
         t0 = time.perf_counter()
-        r = linreg.train(X, y, pim,
-                         linreg.GdConfig(version=ver, n_iters=N_ITERS))
+        r = linreg.fit(ds, linreg.GdConfig(version=ver, n_iters=N_ITERS))
         dt = time.perf_counter() - t0
         err = training_error_rate(r.predict(X), y)
         rows.append(row(f"fig6_lin_{ver}_err_pct", err * 1.0,
                         f"paper={PAPER_LIN[ver]};train_s={dt:.1f}"))
 
     for ver in logreg.VERSIONS:
-        import time
         t0 = time.perf_counter()
-        r = logreg.train(X, y, pim,
-                         logreg.LogRegConfig(version=ver, n_iters=N_ITERS))
+        r = logreg.fit(ds, logreg.LogRegConfig(version=ver,
+                                               n_iters=N_ITERS))
         dt = time.perf_counter() - t0
         err = training_error_rate(r.predict(X), y, threshold=0.0)
         rows.append(row(f"fig7a_log_{ver}_err_pct", err,
                         f"paper={PAPER_LOG[ver]};train_s={dt:.1f}"))
 
+    rows.append(row("fig6_7_shard_transfers", pim.stats.shard_transfers,
+                    "one_partition_per_data_precision"))
+
     # Fig 7(b): 2-decimal samples reduce the hybrid versions' error
     X2, y2, _ = make_linear_dataset(8192, 16, decimals=2, seed=0)
-    for dec, (Xd, yd) in (("4dec", (X, y)), ("2dec", (X2, y2))):
-        r = logreg.train(Xd, yd, pim,
-                         logreg.LogRegConfig(version="hyb_lut",
-                                             n_iters=N_ITERS))
+    ds2 = pim.put(X2, y2)
+    for dec, (dsd, Xd, yd) in (("4dec", (ds, X, y)),
+                               ("2dec", (ds2, X2, y2))):
+        r = logreg.fit(dsd, logreg.LogRegConfig(version="hyb_lut",
+                                                n_iters=N_ITERS))
         err = training_error_rate(r.predict(Xd), yd, threshold=0.0)
         rows.append(row(f"fig7b_log_hyb_lut_{dec}_err_pct", err,
                         "paper=14.12_vs_4.49"))

@@ -12,10 +12,8 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
-
-from repro.core import linreg, logreg
-from repro.core.pim import DpuCostModel, PimConfig, PimSystem
+from repro.api import DpuCostModel, PimConfig, PimSystem
+from repro.core import linreg
 from repro.data.synthetic import make_linear_dataset
 from .common import row
 
@@ -32,9 +30,9 @@ def run():
     for cores in WEAK_CORES:
         X, y, _ = make_linear_dataset(cores * PER_CORE, 16, seed=0)
         pim = PimSystem(PimConfig(n_cores=cores))
+        ds = pim.put(X, y)
         t0 = time.perf_counter()
-        linreg.train(X, y, pim, linreg.GdConfig(version="int32",
-                                                n_iters=iters))
+        linreg.fit(ds, linreg.GdConfig(version="int32", n_iters=iters))
         dt = (time.perf_counter() - t0) / iters
         comm_bytes = pim.stats.cpu_to_pim + pim.stats.pim_to_cpu
         rows.append(row(f"fig11_lin_int32_weak_c{cores}_ms", dt * 1e3,

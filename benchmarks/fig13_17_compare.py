@@ -22,10 +22,10 @@ import time
 
 import numpy as np
 
+from repro.api import DpuCostModel, PimConfig, PimSystem
 from repro.core import dtree, kmeans, linreg, logreg
 from repro.core.metrics import (accuracy, adjusted_rand_index,
                                 training_error_rate)
-from repro.core.pim import DpuCostModel, PimConfig, PimSystem
 from repro.data.synthetic import (make_blobs, make_classification,
                                   make_linear_dataset)
 from .common import row
@@ -76,7 +76,7 @@ def run():
     Xh, yh = make_classification(11_000_000 // scale, 28, seed=2)
     pim = PimSystem(PimConfig(n_cores=16))
     t0 = time.perf_counter()
-    tree = dtree.train(Xh, yh, pim, dtree.TreeConfig(max_depth=10))
+    tree = dtree.fit(pim.put(Xh, yh), dtree.TreeConfig(max_depth=10))
     pim_impl_dtr = time.perf_counter() - t0
     t0 = time.perf_counter()
     tcpu = dtree.train_cpu_baseline(Xh, yh, dtree.TreeConfig(max_depth=10))
@@ -97,7 +97,7 @@ def run():
     Xk, _, _ = make_blobs(11_000_000 // scale, 28, centers=16, seed=3)
     cfg = kmeans.KMeansConfig(k=16, seed=0, max_iters=40)
     t0 = time.perf_counter()
-    rk = kmeans.train(Xk, pim, cfg)
+    rk = kmeans.fit(pim.put(Xk), cfg)
     pim_impl_kme = time.perf_counter() - t0
     t0 = time.perf_counter()
     rc = kmeans.train_cpu_baseline(Xk, cfg)
@@ -114,8 +114,8 @@ def run():
                     "paper=0.999985"))
 
     # ---- Table 5: error rates on the real-shaped datasets ------------------
-    r = linreg.train(X, y, PimSystem(PimConfig(n_cores=16)),
-                     linreg.GdConfig(version="int32", n_iters=60))
+    r = linreg.fit(PimSystem(PimConfig(n_cores=16)).put(X, y),
+                   linreg.GdConfig(version="int32", n_iters=60))
     rows.append(row("tab5_lin_int32_err_pct",
                     training_error_rate(r.predict(X), y),
                     "paper=18.68_on_SUSY(real_data)"))

@@ -1,5 +1,9 @@
 """The paper's scikit-learn estimator interface (§4) in action.
 
+Both construction paths are shown: the workload registry
+(``make_estimator``) and the legacy class names, which are now thin
+shims over the same registry.
+
   PYTHONPATH=src python examples/pim_ml_sklearn.py
 """
 import sys
@@ -8,30 +12,32 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.core.estimators import (PimDecisionTreeClassifier, PimKMeans,
-                                   PimLinearRegression,
-                                   PimLogisticRegression)
+from repro.api import make_estimator
+from repro.core.estimators import PimDecisionTreeClassifier, PimKMeans
 from repro.data.synthetic import (make_blobs, make_classification,
                                   make_linear_dataset)
 
 
 def main():
     X, y, _ = make_linear_dataset(4096, 16, task="regression", seed=0)
-    reg = PimLinearRegression(version="bui", n_iters=400).fit(X, y)
-    print(f"PimLinearRegression(bui)        R^2 = {reg.score(X, y):.4f}")
+    reg = make_estimator("linreg", version="bui", n_iters=400).fit(X, y)
+    print(f"make_estimator('linreg', 'bui')  R^2 = {reg.score(X, y):.4f}")
+    print(f"  get_params = {reg.get_params()}")
 
     Xc, yc, _ = make_linear_dataset(4096, 16, seed=1)
-    clf = PimLogisticRegression(version="bui_lut", n_iters=400).fit(Xc, yc)
-    print(f"PimLogisticRegression(bui_lut)  acc = {clf.score(Xc, yc):.4f}")
+    clf = make_estimator("logreg", version="bui_lut",
+                         n_iters=400).fit(Xc, yc)
+    print(f"make_estimator('logreg','bui_lut') acc = {clf.score(Xc, yc):.4f}")
     print(f"  predict_proba[:2] = {np.round(clf.predict_proba(Xc[:2]), 3)}")
 
+    # the legacy class names still work (thin shims over the registry)
     Xt, yt = make_classification(20_000, 16, seed=2, class_sep=1.5)
     tree = PimDecisionTreeClassifier(max_depth=8).fit(Xt, yt)
-    print(f"PimDecisionTreeClassifier       acc = {tree.score(Xt, yt):.4f}")
+    print(f"PimDecisionTreeClassifier        acc = {tree.score(Xt, yt):.4f}")
 
     Xb, _, _ = make_blobs(10_000, 8, centers=8, seed=3)
     km = PimKMeans(n_clusters=8, n_init=2).fit(Xb)
-    print(f"PimKMeans                       inertia = {km.inertia_:.3e}, "
+    print(f"PimKMeans                        inertia = {km.inertia_:.3e}, "
           f"centers {km.cluster_centers_.shape}")
 
 

@@ -1,8 +1,9 @@
-"""Quickstart: the paper's four ML workloads on the PIM system model.
+"""Quickstart: the paper's four ML workloads through the session API.
 
-Trains LIN / LOG / DTR / KME with the paper's quantized versions and
-prints quality next to the float CPU baselines — the 60-second tour of
-the reproduction.
+One PimSystem session, one bank-resident PimDataset per training set,
+every version trained through the workload registry — the 60-second tour
+of the reproduction.  (Background on the execution model, dataset
+lifecycle, and reduction strategies: DESIGN.md §2-§3.)
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,12 +11,10 @@ import sys
 
 sys.path.insert(0, "src")
 
-import numpy as np
-
+from repro.api import PimConfig, PimSystem, get_workload, make_estimator
 from repro.core import dtree, kmeans, linreg, logreg
 from repro.core.metrics import (accuracy, adjusted_rand_index,
                                 training_error_rate)
-from repro.core.pim import PimConfig, PimSystem, ReduceVia
 from repro.data.synthetic import (make_blobs, make_classification,
                                   make_linear_dataset)
 
@@ -25,51 +24,60 @@ def main():
     pim = PimSystem(PimConfig(n_cores=16))
 
     # -- linear regression (paper §3.1, Fig. 6) ------------------------------
+    # The dataset is partitioned across the banks ONCE; the four-version
+    # sweep reuses the resident shards (one transfer per data precision).
     X, y, _ = make_linear_dataset(8192, 16, decimals=4, seed=0)
+    ds = pim.put(X, y)
     print("LIN (8192x16 synthetic, 500 iters)")
     cpu = linreg.train_cpu_baseline(X, y)
     print(f"  CPU float32      : {training_error_rate(cpu.predict(X), y):.2f}% err")
-    for ver in linreg.VERSIONS:
-        r = linreg.train(X, y, pim, linreg.GdConfig(version=ver))
+    for ver in get_workload("linreg").versions:
+        est = make_estimator("linreg", version=ver, pim=pim).fit(ds)
         print(f"  PIM {ver:6s}       : "
-              f"{training_error_rate(r.predict(X), y):.2f}% err")
+              f"{training_error_rate(est.predict(X), y):.2f}% err")
+    print(f"  shard transfers for all 4 versions: "
+          f"{pim.stats.shard_transfers} (3 data precisions x (X, y) + mask"
+          f" reuse)")
 
     # -- logistic regression (paper §3.2, Fig. 7) -----------------------------
-    print("\nLOG (same dataset; LUT sigmoid vs Taylor)")
+    # Same PimDataset: LOG shares LIN's precision views, so no new
+    # CPU->PIM transfer happens here at all.
+    print("\nLOG (same resident dataset; LUT sigmoid vs Taylor)")
     cpu = logreg.train_cpu_baseline(X, y)
     print(f"  CPU float32      : "
           f"{training_error_rate(cpu.predict(X), y, 0.0):.2f}% err")
     for ver in ("int32", "int32_lut_wram", "bui_lut"):
-        r = logreg.train(X, y, pim, logreg.LogRegConfig(version=ver))
+        est = make_estimator("logreg", version=ver, pim=pim).fit(ds)
         print(f"  PIM {ver:15s}: "
-              f"{training_error_rate(r.predict(X), y, 0.0):.2f}% err")
+              f"{training_error_rate(est.decision_function(X), y, 0.0):.2f}% err")
 
     # -- decision tree (paper §3.3) -------------------------------------------
     print("\nDTR (60k x 16, depth 10, extremely randomized)")
     Xc, yc = make_classification(60_000, 16, seed=0, class_sep=1.4)
-    tree = dtree.train(Xc, yc, pim, dtree.TreeConfig(max_depth=10))
+    tree = make_estimator("dtree", max_depth=10, pim=pim).fit(Xc, yc)
     tcpu = dtree.train_cpu_baseline(Xc, yc, dtree.TreeConfig(max_depth=10))
     print(f"  PIM accuracy     : {accuracy(tree.predict(Xc), yc):.4f} "
-          f"({tree.n_nodes} nodes)")
+          f"({tree.n_nodes_} nodes)")
     print(f"  CPU accuracy     : {accuracy(tcpu.predict(Xc), yc):.4f}")
 
     # -- k-means (paper §3.4) --------------------------------------------------
     print("\nKME (20k x 16, k=16, int16-quantized PIM vs float CPU)")
     Xb, _, _ = make_blobs(20_000, 16, centers=16, seed=0)
-    cfg = kmeans.KMeansConfig(k=16, seed=3, n_init=2)
-    rp = kmeans.train(Xb, pim, cfg)
-    rc = kmeans.train_cpu_baseline(Xb, cfg)
+    km = make_estimator("kmeans", n_clusters=16, seed=3, n_init=2,
+                        pim=pim).fit(Xb)
+    rc = kmeans.train_cpu_baseline(
+        Xb, kmeans.KMeansConfig(k=16, seed=3, n_init=2))
     print(f"  adjusted Rand index(PIM, CPU) = "
-          f"{adjusted_rand_index(rp.labels, rc.labels):.4f} "
+          f"{adjusted_rand_index(km.labels_, rc.labels):.4f} "
           f"(paper: 0.999)")
 
-    # -- the PIM execution model is real: host-reduce mode ---------------------
+    # -- the PIM execution model is real: host-reduce strategy ----------------
     print("\nHost-orchestrated reduce (the paper's DPU topology):")
-    pim_host = PimSystem(PimConfig(n_cores=16, reduce=ReduceVia.HOST))
-    r = linreg.train(X, y, pim_host, linreg.GdConfig(version="int32",
-                                                     n_iters=100))
+    pim_host = PimSystem(PimConfig(n_cores=16, reduce="host"))
+    est = make_estimator("linreg", version="int32", n_iters=100,
+                         pim=pim_host).fit(pim_host.put(X, y))
     print(f"  int32 via host round trip: "
-          f"{training_error_rate(r.predict(X), y):.2f}% err;"
+          f"{training_error_rate(est.predict(X), y):.2f}% err;"
           f" bytes host->PIM {pim_host.stats.cpu_to_pim:,},"
           f" PIM->host {pim_host.stats.pim_to_cpu:,}")
 

@@ -1,0 +1,43 @@
+"""The unified workload-session API — the single public surface.
+
+The paper's premise (§2.2, Fig. 3) is that training data is partitioned
+ONCE and stays bank-resident across iterations.  This package makes that
+a first-class object model (DESIGN.md §3):
+
+  PimSystem / PimConfig   execution session over N PIM cores
+  PimDataset              bank-resident dataset handle (PimSystem.put);
+                          quantized views are lazy and cached, so sweeps
+                          and restarts pay one CPU->PIM transfer
+  Workload / registry     the four paper workloads (and any future one)
+                          behind one TrainerSpec -> FitResult shape
+  make_estimator          sklearn-compatible facade over any registered
+                          workload (get_params/set_params, fit/predict)
+  ReduceStrategy          pluggable cross-core reduction, per call
+
+Typical session::
+
+    from repro.api import PimConfig, PimSystem, make_estimator
+
+    pim = PimSystem(PimConfig(n_cores=16))
+    ds = pim.put(X, y)                       # one CPU->PIM partition
+    for lr in (0.05, 0.1, 0.2):              # sweep reuses the banks
+        est = make_estimator("linreg", version="hyb", lr=lr, pim=pim)
+        est.fit(ds)
+"""
+from ..core.pim import (DpuCostModel, FabricReduce, HierarchicalReduce,
+                        HostReduce, PimConfig, PimSystem, ReduceStrategy,
+                        ReduceVia, TransferStats, resolve_reduce_strategy)
+from .dataset import PimDataset
+from .estimator import PimEstimator, make_estimator
+from .registry import (FitResult, TrainerSpec, Workload, get_workload,
+                       list_workloads, register_workload)
+from .workloads import kmeans_sq_distances  # noqa: F401 — also registers
+                                            # the four paper workloads
+
+__all__ = [
+    "DpuCostModel", "FabricReduce", "FitResult", "HierarchicalReduce",
+    "HostReduce", "PimConfig", "PimDataset", "PimEstimator", "PimSystem",
+    "ReduceStrategy", "ReduceVia", "TrainerSpec", "TransferStats",
+    "Workload", "get_workload", "kmeans_sq_distances", "list_workloads",
+    "make_estimator", "register_workload", "resolve_reduce_strategy",
+]

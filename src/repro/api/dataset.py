@@ -1,0 +1,175 @@
+"""Bank-resident dataset handles (DESIGN.md §3.2).
+
+A :class:`PimDataset` is created by ``PimSystem.put(X, y)`` and owns
+
+  * the host-side arrays (for centroid init / host-side prediction),
+  * the padded row-validity mask, and
+  * per-version quantized, sharded device views — lazily materialized
+    and cached, so repeated ``fit``s, ``n_init`` restarts, and
+    hyperparameter sweeps reuse ONE CPU->PIM transfer per view and the
+    ``TransferStats`` counters stop double-counting the partition.
+
+This mirrors the paper's execution model exactly: the training set is
+partitioned across the DRAM banks once and never moves again; only model
+state (weights / centroids / split commands) crosses the host<->PIM
+boundary per iteration.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.fixed_point import to_fixed
+# 12-bit symmetric range stored in int16 — keeps int32 distance and
+# coordinate-sum accumulations exact on TPU; single source of truth in
+# core/kmeans.py (see its docstring for the derivation)
+from ..core.kmeans import QUANT_RANGE as KMEANS_QUANT_RANGE
+
+#: data-precision families; LIN/LOG versions map onto one of these, so
+#: e.g. the "hyb" and "bui" versions share a single cached view.
+GD_DATA_VERSIONS = ("fp32", "int32", "hyb")
+
+_GD_DATA_VERSION = {
+    "fp32": "fp32", "int32": "int32", "hyb": "hyb", "bui": "hyb",
+    "int32_lut_mram": "int32", "int32_lut_wram": "int32",
+    "hyb_lut": "hyb", "bui_lut": "hyb",
+}
+
+
+def gd_data_version(version: str) -> str:
+    """Collapse a LIN/LOG version name to its on-bank data precision."""
+    try:
+        return _GD_DATA_VERSION[version]
+    except KeyError:
+        raise ValueError(f"unknown workload version {version!r}") from None
+
+
+@dataclasses.dataclass(frozen=True)
+class KMeansView:
+    """Quantized K-Means view: device shards + host copy for init."""
+
+    shards: jnp.ndarray      # (n_cores, n_pc, F) int16
+    mask: jnp.ndarray        # (n_cores, n_pc) bool
+    host_q: np.ndarray       # (n, F) int16 — centroid init draws from it
+    scale: np.float32        # dequantization scale
+
+
+class PimDataset:
+    """Handle to a dataset partitioned once across the PIM banks."""
+
+    def __init__(self, system, X, y=None):
+        X = np.asarray(X)
+        if X.ndim == 1:
+            X = X[:, None]
+        self.system = system
+        self.X = X
+        self.y = None if y is None else np.asarray(y)
+        self.n = int(X.shape[0])
+        self.n_features = int(X.shape[1])
+        self._views: dict[tuple, Any] = {}
+
+    # -- caching core --------------------------------------------------------
+
+    def _cached(self, key: tuple, builder):
+        view = self._views.get(key)
+        if view is None:
+            view = builder()
+            self._views[key] = view
+        return view
+
+    @property
+    def n_views(self) -> int:
+        """Number of materialized (transferred) views — diagnostics."""
+        return sum(1 for k in self._views if k[0] != "mask")
+
+    def _require_y(self, who: str) -> np.ndarray:
+        if self.y is None:
+            raise ValueError(
+                f"{who} needs labels/targets; create the dataset with "
+                f"PimSystem.put(X, y)")
+        return self.y
+
+    # -- views ---------------------------------------------------------------
+
+    def mask(self, dtype=None) -> jnp.ndarray:
+        """Row-validity mask, optionally cast (cached per dtype)."""
+        key = ("mask", None if dtype is None else jnp.dtype(dtype).name)
+        return self._cached(key, lambda: (
+            self.system.row_validity_mask(self.n) if dtype is None
+            else self.system.row_validity_mask(self.n).astype(dtype)))
+
+    def gd_view(self, version: str, frac_bits: int = 10, x8_frac: int = 7):
+        """(Xs, ys, mask) for the gradient-descent workloads (LIN/LOG).
+
+        ``version`` may be any LIN/LOG version name; it is collapsed to
+        the data precision family, so HYB and BUI (same datatypes, paper
+        §3.1) share one transfer, as do the LUT placement variants.
+        """
+        y = self._require_y("gd_view")
+        data_ver = gd_data_version(version)
+
+        if data_ver == "fp32":
+            key = ("gd", "fp32")
+
+            def build():
+                return (self.system.shard_rows(self.X.astype(np.float32)),
+                        self.system.shard_rows(y.astype(np.float32)),
+                        self.mask(jnp.float32))
+        elif data_ver == "int32":
+            key = ("gd", "int32", frac_bits)
+
+            def build():
+                Xq = np.asarray(to_fixed(self.X, frac_bits))
+                yq = np.asarray(to_fixed(y, frac_bits))
+                return (self.system.shard_rows(Xq),
+                        self.system.shard_rows(yq),
+                        self.mask(jnp.int32))
+        else:  # hyb: int8 inputs, fixed-point targets at frac_bits
+            key = ("gd", "hyb", x8_frac, frac_bits)
+
+            def build():
+                Xq8 = np.asarray(to_fixed(self.X, x8_frac, dtype=jnp.int8))
+                yq = np.asarray(to_fixed(y, frac_bits))
+                return (self.system.shard_rows(Xq8),
+                        self.system.shard_rows(yq),
+                        self.mask(jnp.int32))
+        return self._cached(key, build)
+
+    def tree_view(self):
+        """(Xs, ys, mask) for the decision-tree workload (float32/int32)."""
+        y = self._require_y("tree_view")
+
+        def build():
+            return (self.system.shard_rows(self.X.astype(np.float32)),
+                    self.system.shard_rows(y.astype(np.int32)),
+                    self.mask())
+        return self._cached(("tree",), build)
+
+    def kmeans_view(self) -> KMeansView:
+        """Symmetric int16 quantization to +-KMEANS_QUANT_RANGE + shards."""
+        def build():
+            X = np.asarray(self.X, np.float32)
+            amax = float(np.abs(X).max())
+            scale = max(amax, 1e-12) / KMEANS_QUANT_RANGE
+            Xq = np.clip(np.round(X / scale),
+                         -KMEANS_QUANT_RANGE, KMEANS_QUANT_RANGE)
+            Xq = Xq.astype(np.int16)
+            return KMeansView(shards=self.system.shard_rows(Xq),
+                              mask=self.mask(),
+                              host_q=Xq,
+                              scale=np.float32(scale))
+        return self._cached(("kmeans",), build)
+
+
+def as_dataset(X, y, system) -> PimDataset:
+    """Coerce (X, y) to a PimDataset on ``system``.
+
+    Passing an existing PimDataset through is the sweep fast path; raw
+    arrays get an ephemeral handle (one transfer, same as the old API).
+    """
+    if isinstance(X, PimDataset):
+        return X
+    return PimDataset(system, X, y)

@@ -1,0 +1,127 @@
+"""Workload protocol + registry (DESIGN.md §3.3).
+
+The four paper workloads (LIN/LOG/DTR/KME) — and any future one — plug in
+behind one ``TrainerSpec -> FitResult`` shape:
+
+  * :class:`TrainerSpec` normalizes the per-workload config dataclasses
+    (``GdConfig``/``LogRegConfig``/``TreeConfig``/``KMeansConfig``) into a
+    (workload, version, params) triple;
+  * :class:`Workload` adapts a trainer to the spec: build the native
+    config, fit on a :class:`~repro.api.dataset.PimDataset`, and serve
+    host-side prediction/scoring off the fitted model;
+  * :func:`register_workload` / :func:`get_workload` is the lookup the
+    estimator facade and the launchers resolve names through (aliases
+    cover the paper's LIN/LOG/DTR/KME abbreviations).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Optional
+
+from .dataset import PimDataset
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerSpec:
+    """Normalized description of one training run."""
+
+    workload: str
+    version: str
+    params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    def replace(self, **updates) -> "TrainerSpec":
+        merged = dict(self.params)
+        version = updates.pop("version", self.version)
+        merged.update(updates)
+        return TrainerSpec(self.workload, version, merged)
+
+
+@dataclasses.dataclass
+class FitResult:
+    """What every workload's ``fit`` returns.
+
+    ``model`` is the workload-native fitted object (``GdResult``,
+    ``Tree``, ``KMeansResult``); ``attributes`` are the sklearn-style
+    learned attributes the estimator facade re-exports (``coef_``,
+    ``cluster_centers_``, ...).
+    """
+
+    spec: TrainerSpec
+    model: Any
+    attributes: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    @property
+    def workload(self) -> str:
+        return self.spec.workload
+
+    @property
+    def version(self) -> str:
+        return self.spec.version
+
+
+class Workload:
+    """Adapter base: one instance per registered workload.
+
+    Subclasses define ``name``, ``versions``, ``defaults`` and implement
+    ``fit``; prediction/scoring run host-side off the FitResult, exactly
+    as the paper's sklearn deployment does (§4).
+    """
+
+    name: str = ""
+    aliases: tuple = ()
+    versions: tuple = ()
+    #: default hyperparameters (the estimator facade's get_params surface)
+    defaults: Mapping[str, Any] = {}
+    #: True when fit consumes (X,) only — no targets (K-Means)
+    unsupervised: bool = False
+
+    def spec(self, version: Optional[str] = None, **params) -> TrainerSpec:
+        version = version or self.versions[0]
+        if self.versions and version not in self.versions:
+            raise ValueError(
+                f"{self.name}: unknown version {version!r}; "
+                f"known: {self.versions}")
+        unknown = set(params) - set(self.defaults)
+        if unknown:
+            raise TypeError(
+                f"{self.name}: unknown hyperparameters {sorted(unknown)}; "
+                f"known: {sorted(self.defaults)}")
+        merged = dict(self.defaults)
+        merged.update(params)
+        return TrainerSpec(self.name, version, merged)
+
+    def fit(self, dataset: PimDataset, spec: TrainerSpec) -> FitResult:
+        raise NotImplementedError
+
+    def predict(self, result: FitResult, X):
+        raise NotImplementedError
+
+    def score(self, result: FitResult, X, y=None) -> float:
+        raise NotImplementedError
+
+
+_REGISTRY: dict[str, Workload] = {}
+
+
+def register_workload(workload: Workload) -> Workload:
+    """Register a workload under its name and aliases (idempotent)."""
+    for key in (workload.name, *workload.aliases):
+        existing = _REGISTRY.get(key)
+        if existing is not None and type(existing) is not type(workload):
+            raise ValueError(f"workload name {key!r} already registered "
+                             f"by {type(existing).__name__}")
+        _REGISTRY[key] = workload
+    return workload
+
+
+def get_workload(name: str) -> Workload:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"no workload registered under {name!r}; "
+                       f"known: {sorted(set(_REGISTRY))}") from None
+
+
+def list_workloads() -> dict[str, Workload]:
+    """Canonical name -> workload (aliases folded away)."""
+    return {w.name: w for w in _REGISTRY.values()}

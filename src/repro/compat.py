@@ -1,0 +1,72 @@
+"""Version-compatibility shims for the jax surface we depend on.
+
+jax moved ``shard_map`` from ``jax.experimental.shard_map`` to the
+top-level namespace (and renamed its replication-check kwarg from
+``check_rep`` to ``check_vma``) across releases.  Every call site in this
+repo goes through :func:`shard_map` below so the rest of the codebase can
+be written against the modern spelling and still run on older jax.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any
+
+import jax
+
+
+def _resolve_shard_map():
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm
+    from jax.experimental.shard_map import shard_map as sm  # noqa: PLC0415
+    return sm
+
+
+_SHARD_MAP = _resolve_shard_map()
+try:
+    _SHARD_MAP_KWARGS = frozenset(
+        inspect.signature(_SHARD_MAP).parameters)
+except (TypeError, ValueError):  # pragma: no cover — exotic wrappers
+    _SHARD_MAP_KWARGS = frozenset()
+
+
+def pcast(x, axis_names, *, to: str = "varying"):
+    """``jax.lax.pcast`` where available, identity otherwise.
+
+    pcast only exists alongside shard_map's varying-axes (VMA) type
+    system; older jax (check_rep era) has no VMA typing, so marking a
+    value as varying is a no-op there.
+    """
+    fn = getattr(jax.lax, "pcast", None)
+    if fn is None:
+        return x
+    return fn(x, axis_names, to=to)
+
+
+def axis_size(axis_name) -> int:
+    """Size of a mapped mesh axis, inside shard_map/pmap tracing.
+
+    ``jax.lax.axis_size`` only exists on newer jax; the portable fallback
+    is the classic ``psum(1, axis)`` constant-folding trick.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+def shard_map(f=None, /, **kwargs: Any):
+    """``jax.shard_map`` with kwarg translation across jax versions.
+
+    Accepts the modern ``check_vma=`` spelling and rewrites it to
+    ``check_rep=`` when the underlying jax only knows the old name (and
+    vice versa).  Usable exactly like the real thing, including the
+    ``shard_map(mesh=..., in_specs=...)(f)`` partial form.
+    """
+    if "check_vma" in kwargs and "check_vma" not in _SHARD_MAP_KWARGS:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    elif "check_rep" in kwargs and "check_rep" not in _SHARD_MAP_KWARGS \
+            and "check_vma" in _SHARD_MAP_KWARGS:
+        kwargs["check_vma"] = kwargs.pop("check_rep")
+    if f is None:
+        return lambda fn: _SHARD_MAP(fn, **kwargs)
+    return _SHARD_MAP(f, **kwargs)

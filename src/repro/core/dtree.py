@@ -158,16 +158,19 @@ def gini_score(below: np.ndarray, total: np.ndarray) -> np.ndarray:
     return (nl * gl + nr * gr) / n
 
 
-def train(X: np.ndarray, y: np.ndarray, pim: PimSystem,
-          cfg: Optional[TreeConfig] = None) -> Tree:
+def fit(dataset, cfg: Optional[TreeConfig] = None) -> Tree:
+    """Grow one extremely randomized tree over a bank-resident PimDataset.
+
+    The float32 point shards stay resident; per-round only the command
+    arguments (thresholds, split decisions) cross the host<->PIM boundary,
+    exactly the paper's three-command protocol."""
     cfg = cfg or TreeConfig()
+    pim = dataset.system
     rng = np.random.RandomState(cfg.seed)
-    n, nf = X.shape
+    n, nf = dataset.n, dataset.n_features
     max_nodes = 2 ** (cfg.max_depth + 2)
 
-    Xs = pim.shard_rows(X.astype(np.float32))
-    ys = pim.shard_rows(y.astype(np.int32))
-    valid = pim.row_validity_mask(n)
+    Xs, ys, valid = dataset.tree_view()
     leaf_id = jnp.zeros(valid.shape, jnp.int32)  # all points in root
 
     feature = np.full(max_nodes, -1, np.int32)
@@ -179,8 +182,12 @@ def train(X: np.ndarray, y: np.ndarray, pim: PimSystem,
     n_nodes = 1
     frontier = [0]
 
-    minmax_k = make_minmax_kernel(max_nodes)
-    eval_k = make_split_eval_kernel(max_nodes, cfg.n_classes)
+    minmax_k = pim.named_kernel(
+        f"dtr.minmax/m{max_nodes}", lambda: make_minmax_kernel(max_nodes))
+    eval_k = pim.named_kernel(
+        f"dtr.eval/m{max_nodes}.c{cfg.n_classes}",
+        lambda: make_split_eval_kernel(max_nodes, cfg.n_classes))
+    commit_k = pim.named_kernel("dtr.commit", lambda: _commit_kernel)
 
     while frontier:
         # ---- min-max command (host draws ERT thresholds) -----------------
@@ -240,12 +247,20 @@ def train(X: np.ndarray, y: np.ndarray, pim: PimSystem,
 
         # ---- split-commit command ----------------------------------------
         leaf_id = pim.map_elementwise(
-            _commit_kernel, (Xs, leaf_id),
+            commit_k, (Xs, leaf_id),
             (jnp.asarray(split_feature), jnp.asarray(split_thresh),
              jnp.asarray(left_id), jnp.asarray(right_id)))
         frontier = new_frontier
 
     return Tree(feature, threshold, left, right, leaf_class, depth, n_nodes)
+
+
+def train(X: np.ndarray, y: np.ndarray, pim: PimSystem,
+          cfg: Optional[TreeConfig] = None) -> Tree:
+    """Deprecated shim: re-partitions (X, y) on every call.  Prefer
+    ``fit(pim.put(X, y), cfg)`` (repro.api)."""
+    from ..api.dataset import as_dataset
+    return fit(as_dataset(X, y, pim), cfg)
 
 
 def train_cpu_baseline(X: np.ndarray, y: np.ndarray,

@@ -1,143 +1,64 @@
-"""Scikit-learn-style estimator facade (paper §4: "we make our
-implementations ... compatible with Scikit-learn ... by deploying them as
-Scikit-learn estimator objects").
+"""Legacy scikit-learn-style estimator classes (paper §4).
 
-sklearn itself is not installable in this offline container, so these
-estimators implement the fit/predict/score protocol directly; they are
-duck-type compatible with sklearn pipelines.
+These are deprecation shims kept for one PR: each class is a thin
+subclass of the generic :class:`repro.api.PimEstimator` facade bound to
+its registered workload — construct new code via
+``repro.api.make_estimator(name, version=...)`` instead.
+
+sklearn itself is not installable in this offline container, so the
+facade implements the fit/predict/score/get_params protocol directly;
+it is duck-type compatible with sklearn pipelines.  Every shim accepts
+``version`` and the full hyperparameter surface of its workload, so the
+sklearn clone round-trip ``cls(**est.get_params())`` reconstructs it.
 """
 from __future__ import annotations
 
 from typing import Optional
 
-import numpy as np
-
-from . import dtree, kmeans, linreg, logreg, metrics
-from .pim import PimConfig, PimSystem
+from ..api.estimator import PimEstimator
+from .pim import PimSystem
 
 
-def _default_pim(n_cores: int = 16) -> PimSystem:
-    return PimSystem(PimConfig(n_cores=n_cores))
-
-
-class PimLinearRegression:
+class PimLinearRegression(PimEstimator):
     """LIN on the PIM system.  ``version`` in {fp32, int32, hyb, bui}."""
 
     def __init__(self, version: str = "fp32", n_iters: int = 500,
                  lr: float = 0.1, n_cores: int = 16,
-                 pim: Optional[PimSystem] = None):
-        self.version, self.n_iters, self.lr = version, n_iters, lr
-        self.pim = pim or _default_pim(n_cores)
-        self.result_ = None
-
-    def fit(self, X, y):
-        cfg = linreg.GdConfig(version=self.version, n_iters=self.n_iters,
-                              lr=self.lr)
-        self.result_ = linreg.train(np.asarray(X), np.asarray(y),
-                                    self.pim, cfg)
-        self.coef_ = self.result_.w
-        self.intercept_ = self.result_.b
-        return self
-
-    def predict(self, X):
-        return self.result_.predict(np.asarray(X))
-
-    def score(self, X, y):
-        """R^2, the sklearn regression convention."""
-        y = np.asarray(y, np.float64)
-        pred = self.predict(X)
-        ss_res = float(((y - pred) ** 2).sum())
-        ss_tot = float(((y - y.mean()) ** 2).sum())
-        return 1.0 - ss_res / max(ss_tot, 1e-12)
+                 pim: Optional[PimSystem] = None, **params):
+        super().__init__("linreg", version=version, n_cores=n_cores,
+                         pim=pim, n_iters=n_iters, lr=lr, **params)
 
 
-class PimLogisticRegression:
+class PimLogisticRegression(PimEstimator):
     """LOG on the PIM system.  ``version`` in logreg.VERSIONS."""
 
     def __init__(self, version: str = "fp32", n_iters: int = 500,
                  lr: float = 5.0, n_cores: int = 16,
-                 pim: Optional[PimSystem] = None):
-        self.version, self.n_iters, self.lr = version, n_iters, lr
-        self.pim = pim or _default_pim(n_cores)
-        self.result_ = None
-
-    def fit(self, X, y):
-        cfg = logreg.LogRegConfig(version=self.version,
-                                  n_iters=self.n_iters, lr=self.lr)
-        self.result_ = logreg.train(np.asarray(X), np.asarray(y),
-                                    self.pim, cfg)
-        self.coef_ = self.result_.w
-        self.intercept_ = self.result_.b
-        return self
-
-    def decision_function(self, X):
-        return self.result_.predict(np.asarray(X))
-
-    def predict_proba(self, X):
-        z = self.decision_function(X)
-        p1 = 1.0 / (1.0 + np.exp(-z))
-        return np.stack([1.0 - p1, p1], axis=1)
-
-    def predict(self, X):
-        return (self.decision_function(X) > 0.0).astype(np.int32)
-
-    def score(self, X, y):
-        return metrics.accuracy(self.predict(X), np.asarray(y) > 0.5)
+                 pim: Optional[PimSystem] = None, **params):
+        super().__init__("logreg", version=version, n_cores=n_cores,
+                         pim=pim, n_iters=n_iters, lr=lr, **params)
 
 
-class PimDecisionTreeClassifier:
+class PimDecisionTreeClassifier(PimEstimator):
     """DTR (extremely randomized tree) on the PIM system."""
 
     def __init__(self, max_depth: int = 10, n_classes: int = 2,
                  seed: int = 0, n_cores: int = 16,
-                 pim: Optional[PimSystem] = None):
-        self.cfg = dtree.TreeConfig(max_depth=max_depth,
-                                    n_classes=n_classes, seed=seed)
-        self.pim = pim or _default_pim(n_cores)
-        self.tree_ = None
-
-    def fit(self, X, y):
-        self.tree_ = dtree.train(np.asarray(X), np.asarray(y),
-                                 self.pim, self.cfg)
-        return self
-
-    def predict(self, X):
-        return self.tree_.predict(np.asarray(X))
-
-    def score(self, X, y):
-        return metrics.accuracy(self.predict(X), np.asarray(y))
+                 pim: Optional[PimSystem] = None,
+                 version: Optional[str] = None, **params):
+        super().__init__("dtree", version=version, n_cores=n_cores,
+                         pim=pim, max_depth=max_depth,
+                         n_classes=n_classes, seed=seed, **params)
 
 
-class PimKMeans:
+class PimKMeans(PimEstimator):
     """KME on the PIM system (quantized Lloyd's with restarts)."""
 
     def __init__(self, n_clusters: int = 16, max_iter: int = 300,
                  tol: float = 1e-4, n_init: int = 1, seed: int = 0,
-                 n_cores: int = 16, pim: Optional[PimSystem] = None):
-        self.cfg = kmeans.KMeansConfig(k=n_clusters, max_iters=max_iter,
-                                       tol=tol, n_init=n_init, seed=seed)
-        self.pim = pim or _default_pim(n_cores)
-        self.result_ = None
-
-    def fit(self, X):
-        self.result_ = kmeans.train(np.asarray(X), self.pim, self.cfg)
-        self.cluster_centers_ = self.result_.centroids
-        self.inertia_ = self.result_.inertia
-        self.labels_ = self.result_.labels
-        return self
-
-    def predict(self, X):
-        X = np.asarray(X, np.float32)
-        C = self.cluster_centers_
-        d = -2.0 * X @ C.T + (C * C).sum(1)[None, :]
-        return d.argmin(1).astype(np.int32)
-
-    def fit_predict(self, X):
-        return self.fit(X).labels_
-
-    def score(self, X):
-        """Negative inertia (sklearn convention)."""
-        X = np.asarray(X, np.float32)
-        C = self.cluster_centers_
-        d = ((X[:, None, :] - C[None, :, :]) ** 2).sum(-1)
-        return -float(d.min(1).sum())
+                 n_cores: int = 16, pim: Optional[PimSystem] = None,
+                 version: Optional[str] = None, **params):
+        super().__init__("kmeans", version=version, n_cores=n_cores,
+                         pim=pim, n_clusters=n_clusters,
+                         max_iter=max_iter, tol=tol, n_init=n_init,
+                         seed=seed, **params)

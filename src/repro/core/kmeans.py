@@ -30,7 +30,10 @@ import numpy as np
 from .metrics import frobenius_shift
 from .pim import PimSystem
 
-QUANT_RANGE = 2047  # 12-bit symmetric range stored in int16 (see docstring)
+# 12-bit symmetric range stored in int16 (see docstring).  The quantizing
+# + sharding path, PimDataset.kmeans_view (repro/api/dataset.py), imports
+# this constant — single source of truth.
+QUANT_RANGE = 2047
 
 
 @dataclasses.dataclass
@@ -48,13 +51,6 @@ class KMeansResult:
     inertia: float
     n_iters: int
     labels: Optional[np.ndarray] = None
-
-
-def _quantize(X: np.ndarray):
-    amax = float(np.abs(X).max())
-    scale = max(amax, 1e-12) / QUANT_RANGE
-    Xq = np.clip(np.round(X / scale), -QUANT_RANGE, QUANT_RANGE)
-    return Xq.astype(np.int16), np.float32(scale)
 
 
 def _assign_kernel_factory(k: int):
@@ -101,19 +97,25 @@ def _labels_kernel_factory(k: int):
     return _kernel
 
 
-def train(X: np.ndarray, pim: PimSystem,
-          cfg: Optional[KMeansConfig] = None,
-          return_labels: bool = True) -> KMeansResult:
+def fit(dataset, cfg: Optional[KMeansConfig] = None,
+        return_labels: bool = True) -> KMeansResult:
+    """Lloyd's over a bank-resident PimDataset.  The int16-quantized view
+    is materialized once; all ``n_init`` restarts — and any later refit
+    with different (k, seed, tol) — reuse the resident shards."""
     cfg = cfg or KMeansConfig()
-    n, nf = X.shape
+    pim = dataset.system
+    n = dataset.n
     rng = np.random.RandomState(cfg.seed)
-    Xq_np, scale = _quantize(np.asarray(X, np.float32))
+    view = dataset.kmeans_view()
+    Xs, valid = view.shards, view.mask
+    Xq_np, scale = view.host_q, view.scale
 
-    Xs = pim.shard_rows(Xq_np)
-    valid = pim.row_validity_mask(n)
-    assign_k = _assign_kernel_factory(cfg.k)
-    inertia_k = _inertia_kernel_factory(cfg.k)
-    labels_k = _labels_kernel_factory(cfg.k)
+    assign_k = pim.named_kernel(
+        f"kme.assign/k{cfg.k}", lambda: _assign_kernel_factory(cfg.k))
+    inertia_k = pim.named_kernel(
+        f"kme.inertia/k{cfg.k}", lambda: _inertia_kernel_factory(cfg.k))
+    labels_k = pim.named_kernel(
+        f"kme.labels/k{cfg.k}", lambda: _labels_kernel_factory(cfg.k))
 
     best: Optional[KMeansResult] = None
     for init in range(cfg.n_init):
@@ -148,6 +150,15 @@ def train(X: np.ndarray, pim: PimSystem,
                     (jnp.asarray(np.round(C).astype(np.int16)),))
                 best.labels = np.asarray(lbl).reshape(-1)[: n]
     return best
+
+
+def train(X: np.ndarray, pim: PimSystem,
+          cfg: Optional[KMeansConfig] = None,
+          return_labels: bool = True) -> KMeansResult:
+    """Deprecated shim: re-quantizes + re-partitions X on every call.
+    Prefer ``fit(pim.put(X), cfg)`` (repro.api)."""
+    from ..api.dataset import as_dataset
+    return fit(as_dataset(X, None, pim), cfg, return_labels)
 
 
 def train_cpu_baseline(X: np.ndarray, cfg: Optional[KMeansConfig] = None

@@ -92,24 +92,6 @@ def make_local_grad_hyb(x8_frac: int, w16_frac: int, out_frac: int):
 # Host-orchestrated training loop (paper §3.1 flow).
 # ---------------------------------------------------------------------------
 
-def _prep(pim: PimSystem, X: np.ndarray, y: np.ndarray, cfg: GdConfig):
-    """Quantize + shard the training set once (it stays core-resident)."""
-    n = X.shape[0]
-    mask = pim.row_validity_mask(n).astype(jnp.float32)
-    if cfg.version == "fp32":
-        Xs = pim.shard_rows(X.astype(np.float32))
-        ys = pim.shard_rows(y.astype(np.float32))
-        return Xs, ys, mask
-    if cfg.version == "int32":
-        Xq = np.asarray(to_fixed(X, cfg.frac_bits))
-        yq = np.asarray(to_fixed(y, cfg.frac_bits))
-        return pim.shard_rows(Xq), pim.shard_rows(yq), mask.astype(jnp.int32)
-    # hyb / bui: int8 inputs, fixed-point targets at out_frac
-    Xq8 = np.asarray(to_fixed(X, cfg.x8_frac, dtype=jnp.int8))
-    yq = np.asarray(to_fixed(y, cfg.frac_bits))
-    return pim.shard_rows(Xq8), pim.shard_rows(yq), mask.astype(jnp.int32)
-
-
 def _quantize_weights(cfg: GdConfig, w: np.ndarray, b: float):
     if cfg.version == "fp32":
         return jnp.asarray(w), jnp.float32(b)
@@ -127,25 +109,38 @@ def _grad_to_float(cfg: GdConfig, partial) -> tuple[np.ndarray, float]:
             float(from_fixed(jnp.asarray(gb), cfg.frac_bits)))
 
 
-def train(X: np.ndarray, y: np.ndarray, pim: PimSystem,
-          cfg: Optional[GdConfig] = None,
-          eval_fn: Optional[Callable] = None,
-          _local_override: Optional[Callable] = None) -> GdResult:
-    """Full PIM training loop: shard once, iterate (kernel -> reduce ->
-    host update -> broadcast) until cfg.n_iters."""
+def _grad_kernel(pim: PimSystem, cfg: GdConfig):
+    """Named per-core gradient kernel for the configured version
+    (registered once per PimSystem; reused across fits and sweeps)."""
+    if cfg.version == "fp32":
+        return pim.named_kernel("lin.grad/fp32", lambda: _local_grad_fp32)
+    if cfg.version == "int32":
+        return pim.named_kernel(
+            f"lin.grad/int32/f{cfg.frac_bits}",
+            lambda: make_local_grad_int32(cfg.frac_bits))
+    return pim.named_kernel(
+        f"lin.grad/hyb/x{cfg.x8_frac}.w{cfg.w16_frac}.f{cfg.frac_bits}",
+        lambda: make_local_grad_hyb(cfg.x8_frac, cfg.w16_frac,
+                                    cfg.frac_bits))
+
+
+def fit(dataset, cfg: Optional[GdConfig] = None,
+        eval_fn: Optional[Callable] = None,
+        _local_override: Optional[Callable] = None) -> GdResult:
+    """Full PIM training loop over a bank-resident PimDataset: iterate
+    (kernel -> reduce -> host update -> broadcast) until cfg.n_iters.
+    The dataset's quantized view is materialized at most once per
+    (version, Q-format) — repeated fits reuse the resident shards."""
     cfg = cfg or GdConfig()
     assert cfg.version in VERSIONS, cfg.version
-    n, f = X.shape
-    Xs, ys, mask = _prep(pim, X, y, cfg)
+    pim = dataset.system
+    n, f = dataset.n, dataset.n_features
+    Xs, ys, mask = dataset.gd_view(cfg.version, cfg.frac_bits, cfg.x8_frac)
 
     if _local_override is not None:
         local = _local_override
-    elif cfg.version == "fp32":
-        local = _local_grad_fp32
-    elif cfg.version == "int32":
-        local = make_local_grad_int32(cfg.frac_bits)
     else:
-        local = make_local_grad_hyb(cfg.x8_frac, cfg.w16_frac, cfg.frac_bits)
+        local = _grad_kernel(pim, cfg)
 
     w = np.zeros(f, np.float32)
     b = 0.0
@@ -174,6 +169,17 @@ def train(X: np.ndarray, y: np.ndarray, pim: PimSystem,
             metric = eval_fn(w, b) if eval_fn else None
             history.append((it + 1, metric))
     return GdResult(w=w, b=float(b), history=history, n_iters=cfg.n_iters)
+
+
+def train(X: np.ndarray, y: np.ndarray, pim: PimSystem,
+          cfg: Optional[GdConfig] = None,
+          eval_fn: Optional[Callable] = None,
+          _local_override: Optional[Callable] = None) -> GdResult:
+    """Deprecated shim: re-partitions (X, y) on every call.  Prefer
+    ``fit(pim.put(X, y), cfg)`` which keeps the shards bank-resident
+    across fits (repro.api)."""
+    from ..api.dataset import as_dataset
+    return fit(as_dataset(X, y, pim), cfg, eval_fn, _local_override)
 
 
 def train_cpu_baseline(X: np.ndarray, y: np.ndarray, n_iters: int = 500,

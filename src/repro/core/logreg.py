@@ -23,8 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .fixed_point import _shift_round, fx_dot, fx_dot_hybrid, to_fixed
-from .linreg import GdConfig, GdResult, _grad_to_float, _prep, \
-    _quantize_weights
+from .linreg import GdConfig, GdResult, _grad_to_float, _quantize_weights
 from .lut import SigmoidLut, build_sigmoid_lut, lut_sigmoid_fixed, \
     taylor_sigmoid_fixed
 from .pim import PimSystem
@@ -117,21 +116,38 @@ def make_local_grad(cfg: LogRegConfig, lut: Optional[SigmoidLut]):
     return _local_hyb_lut
 
 
-def train(X: np.ndarray, y: np.ndarray, pim: PimSystem,
-          cfg: Optional[LogRegConfig] = None,
-          eval_fn: Optional[Callable] = None) -> GdResult:
+def _grad_kernel(pim: PimSystem, cfg: LogRegConfig) -> str:
+    """Named per-core kernel; the name encodes every parameter baked into
+    the closure (version, Q formats, Taylor terms, LUT geometry) so the
+    compiled kernel is reused across fits and never served stale.  The
+    sigmoid LUT is built inside the builder — pay-once like the kernel,
+    not per fit."""
+    name = (f"log.grad/{cfg.version}/f{cfg.frac_bits}"
+            f".x{cfg.x8_frac}.w{cfg.w16_frac}"
+            f".t{cfg.taylor_terms}"
+            f".lb{cfg.lut_boundary}.lf{cfg.lut_frac_bits}")
+
+    def build():
+        lut = (build_sigmoid_lut(cfg.lut_boundary, cfg.lut_frac_bits)
+               if "lut" in cfg.version else None)
+        return make_local_grad(cfg, lut)
+    return pim.named_kernel(name, build)
+
+
+def fit(dataset, cfg: Optional[LogRegConfig] = None,
+        eval_fn: Optional[Callable] = None) -> GdResult:
+    """LOG training over a bank-resident PimDataset.  The data view is
+    shared with LIN (same precision ladder), so a LIN fit followed by a
+    LOG fit on one dataset still transfers the shards once."""
     cfg = cfg or LogRegConfig()
     assert cfg.version in VERSIONS, cfg.version
-    n, nf = X.shape
+    pim = dataset.system
+    n, nf = dataset.n, dataset.n_features
 
-    lut = None
-    if "lut" in cfg.version:
-        lut = build_sigmoid_lut(cfg.lut_boundary, cfg.lut_frac_bits)
-
-    # reuse linreg's data prep / weight quantization via the base version
+    # reuse linreg's weight quantization via the base data version
     base_cfg = dataclasses.replace(cfg, version=_gd_version_of(cfg.version))
-    Xs, ys, mask = _prep(pim, X, y, base_cfg)
-    local = make_local_grad(cfg, lut)
+    Xs, ys, mask = dataset.gd_view(cfg.version, cfg.frac_bits, cfg.x8_frac)
+    local = _grad_kernel(pim, cfg)
 
     w = np.zeros(nf, np.float32)
     b = 0.0
@@ -148,6 +164,15 @@ def train(X: np.ndarray, y: np.ndarray, pim: PimSystem,
             metric = eval_fn(w, b) if eval_fn else None
             history.append((it + 1, metric))
     return GdResult(w=w, b=float(b), history=history, n_iters=cfg.n_iters)
+
+
+def train(X: np.ndarray, y: np.ndarray, pim: PimSystem,
+          cfg: Optional[LogRegConfig] = None,
+          eval_fn: Optional[Callable] = None) -> GdResult:
+    """Deprecated shim: re-partitions (X, y) on every call.  Prefer
+    ``fit(pim.put(X, y), cfg)`` (repro.api)."""
+    from ..api.dataset import as_dataset
+    return fit(as_dataset(X, y, pim), cfg, eval_fn)
 
 
 def train_cpu_baseline(X: np.ndarray, y: np.ndarray, n_iters: int = 500,

@@ -8,9 +8,23 @@ cannot talk to each other) and the updated model is re-broadcast.
 JAX mapping (DESIGN.md §2):
   PIM core            -> one mesh element of a 1-D "cores" axis
   bank-resident shard -> device-resident leading-axis shard of the dataset
-  host reduction      -> jax.lax.psum over "cores" (ReduceVia.FABRIC) or an
+  host reduction      -> jax.lax.psum over "cores" (FabricReduce) or an
                          actual device_get/numpy/device_put round trip
-                         (ReduceVia.HOST — faithful to UPMEM's topology)
+                         (HostReduce — faithful to UPMEM's topology), or a
+                         two-level rank schedule (HierarchicalReduce)
+
+Execution surface (DESIGN.md §3):
+  ``PimSystem.put(X, y)``      -> a bank-resident :class:`PimDataset` handle
+                                  (repro/api/dataset.py); shards transfer to
+                                  the banks ONCE and are reused across fits.
+  ``register_kernel(name,fn)`` -> named kernels; jit caches are keyed by
+                                  (name, generation) or by the function
+                                  object itself — never by ``id(fn)``, which
+                                  can be reused after GC and silently return
+                                  a stale compiled kernel.
+  ``map_reduce(..., strategy=)``-> reduction strategy selectable per call
+                                  ("fabric" | "host" | "hierarchical"),
+                                  defaulting to the system config.
 
 Backends:
   "vmap"      single-device semantic model (cores simulated by vmap) — used
@@ -31,47 +45,212 @@ from __future__ import annotations
 import dataclasses
 import enum
 import functools
-from typing import Any, Callable, Optional, Sequence
+from typing import Any, Callable, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
+from .quantization import storage_bytes
+
 
 class ReduceVia(enum.Enum):
+    """Legacy reduction selector (kept for config compatibility; the
+    per-call ``strategy=`` argument accepts these, their string values,
+    or a :class:`ReduceStrategy` instance)."""
+
     FABRIC = "fabric"   # on-fabric psum (TPU-native; strictly cheaper)
     HOST = "host"       # explicit host round trip (paper-faithful schedule)
+    HIERARCHICAL = "hierarchical"  # rank-level fabric sum + host combine
 
 
 @dataclasses.dataclass
 class TransferStats:
-    """Byte counters mirroring the paper's CPU-PIM / PIM-CPU breakdowns."""
+    """Byte counters mirroring the paper's CPU-PIM / PIM-CPU breakdowns.
+
+    ``cpu_to_pim`` counts every host->bank byte (dataset shards AND model
+    broadcasts).  ``shard_transfers``/``shard_bytes`` count only dataset
+    shard materializations, so callers can assert that a hyperparameter
+    sweep over one :class:`PimDataset` pays for the CPU->PIM partition
+    exactly once (DESIGN.md §3).
+    """
 
     cpu_to_pim: int = 0
     pim_to_cpu: int = 0
     inter_core_via_host: int = 0
+    shard_transfers: int = 0
+    shard_bytes: int = 0
 
     def reset(self) -> None:
         self.cpu_to_pim = self.pim_to_cpu = self.inter_core_via_host = 0
+        self.shard_transfers = self.shard_bytes = 0
+
+
+# ---------------------------------------------------------------------------
+# Reduction strategies (pluggable per map_reduce call).
+# ---------------------------------------------------------------------------
+
+class ReduceStrategy:
+    """How per-core partials are combined into the host-visible result.
+
+    ``device_reduce`` runs inside the compiled step (traced); ``finalize``
+    runs on the host afterwards; ``count_pim_to_cpu`` models the PIM->CPU
+    bytes the schedule moves.  ``cache_token`` namespaces the jit cache.
+    """
+
+    name = "base"
+
+    def device_reduce(self, partials):
+        return partials
+
+    def finalize(self, system: "PimSystem", out):
+        return out
+
+    def count_pim_to_cpu(self, system: "PimSystem", out) -> int:
+        raise NotImplementedError
+
+    def cache_token(self):
+        return self.name
+
+
+def _tree_bytes(tree) -> int:
+    return sum(v.nbytes for v in jax.tree_util.tree_leaves(tree))
+
+
+def _host_sum(tree, axis=0):
+    """Promoted numpy reduction (int64 / float64 accumulators)."""
+    return jax.tree_util.tree_map(
+        lambda v: np.sum(np.asarray(v, np.int64)
+                         if np.issubdtype(np.asarray(v).dtype, np.integer)
+                         else np.asarray(v, np.float64), axis=axis),
+        tree)
+
+
+class FabricReduce(ReduceStrategy):
+    """On-device sum over the cores axis (psum under shard_map)."""
+
+    name = "fabric"
+
+    def device_reduce(self, partials):
+        return jax.tree_util.tree_map(lambda v: jnp.sum(v, axis=0),
+                                      partials)
+
+    def count_pim_to_cpu(self, system, out) -> int:
+        # every core ships its partial of the reduced shape to the host
+        return _tree_bytes(out) * system.config.n_cores
+
+    def finalize(self, system, out):
+        return out
+
+
+class HostReduce(ReduceStrategy):
+    """Paper-faithful schedule: per-core partials are copied to the host
+    and reduced with numpy; the result lives on the host (the caller then
+    ``broadcast``s the updated model, completing the round trip)."""
+
+    name = "host"
+
+    def count_pim_to_cpu(self, system, out) -> int:
+        return _tree_bytes(out)  # stacked (n_cores, ...) leaves
+
+    def finalize(self, system, out):
+        return _host_sum(jax.device_get(out))
+
+
+class HierarchicalReduce(ReduceStrategy):
+    """Two-level schedule: fabric sum inside each rank of ``group_size``
+    cores, then a host combine of the rank partials — the PIM analogue of
+    the multi-pod RS->AR->AG decomposition in distributed/collectives.py
+    (each rank's leader ships 1/group_size of the flat-host bytes over the
+    host link; see ``cross_pod_bytes``)."""
+
+    def __init__(self, group_size: int = 8):
+        self.group_size = group_size
+        self.name = f"hier{group_size}"
+
+    def cache_token(self):
+        return ("hier", self.group_size)
+
+    def _groups(self, n_cores: int) -> int:
+        g = self.group_size
+        return n_cores // g if g > 1 and n_cores % g == 0 else 0
+
+    def device_reduce(self, partials):
+        def _grouped(v):
+            n_cores = v.shape[0]
+            n_groups = self._groups(n_cores)
+            if not n_groups:        # awkward core count: flat host schedule
+                return v
+            return jnp.sum(
+                v.reshape(n_groups, self.group_size, *v.shape[1:]), axis=1)
+        return jax.tree_util.tree_map(_grouped, partials)
+
+    def count_pim_to_cpu(self, system, out) -> int:
+        return _tree_bytes(out)  # (n_groups, ...) rank partials
+
+    def finalize(self, system, out):
+        # intra-rank movement happened "on fabric"; record the rank->host
+        # leg separately so the hierarchy's saving is visible in the
+        # stats (1/group_size of the flat-host bytes, same napkin as
+        # collectives.cross_pod_bytes).  If the core count forced the
+        # flat fallback, no rank-level reduction occurred — record none.
+        if self._groups(system.config.n_cores):
+            system.stats.inter_core_via_host += _tree_bytes(out)
+        return _host_sum(jax.device_get(out))
+
+
+_STRATEGIES: dict[str, Callable[[], ReduceStrategy]] = {
+    "fabric": FabricReduce,
+    "host": HostReduce,
+    "hierarchical": HierarchicalReduce,
+}
+
+StrategyLike = Union[None, str, ReduceVia, ReduceStrategy]
+
+
+def resolve_reduce_strategy(spec: StrategyLike,
+                            default: StrategyLike = None) -> ReduceStrategy:
+    if spec is None:
+        spec = default if default is not None else "fabric"
+    if isinstance(spec, ReduceStrategy):
+        return spec
+    if isinstance(spec, ReduceVia):
+        spec = spec.value
+    if isinstance(spec, str) and spec in _STRATEGIES:
+        return _STRATEGIES[spec]()
+    raise ValueError(f"unknown reduce strategy {spec!r}; "
+                     f"known: {sorted(_STRATEGIES)}")
 
 
 @dataclasses.dataclass
 class PimConfig:
     n_cores: int = 64
     n_threads: int = 16          # tasklets per core (cost model + layouts)
-    reduce: ReduceVia = ReduceVia.FABRIC
+    reduce: ReduceVia = ReduceVia.FABRIC   # default strategy for map_reduce
     backend: str = "vmap"        # "vmap" | "shard_map"
 
 
 class PimSystem:
-    """Host-orchestrated data-parallel execution over PIM cores."""
+    """Host-orchestrated data-parallel execution over PIM cores.
+
+    The redesigned surface (DESIGN.md §3):
+      put(X, y)                 -> PimDataset (bank-resident, view-cached)
+      register_kernel(name, fn) -> kernel name usable with map_* calls
+      named_kernel(name, build) -> register-once helper for kernel factories
+      map_reduce(kernel, ...)   -> kernel may be a registered name or a
+                                   callable; ``strategy=`` picks the
+                                   reduction per call
+    """
 
     def __init__(self, config: PimConfig, devices: Optional[Sequence] = None):
         self.config = config
         self.stats = TransferStats()
         self._mesh = None
         self._jit_cache: dict = {}
+        self._kernels: dict[str, Callable] = {}
+        self._kernel_gen: dict[str, int] = {}
         if config.backend == "shard_map":
             devices = list(devices if devices is not None else jax.devices())
             if len(devices) < config.n_cores:
@@ -83,13 +262,25 @@ class PimSystem:
 
     # -- data placement ------------------------------------------------------
 
+    def put(self, X, y=None) -> "Any":
+        """Partition a dataset across the PIM banks ONCE and return a
+        :class:`repro.api.dataset.PimDataset` handle.
+
+        The handle owns the sharded device arrays, the validity mask, and
+        per-version quantized views (lazily materialized, cached), so
+        repeated fits / n_init restarts / hyperparameter sweeps reuse one
+        CPU->PIM transfer per view (paper §2.2: data is partitioned once
+        and stays bank-resident)."""
+        from ..api.dataset import PimDataset  # local import: api -> core
+        return PimDataset(self, X, y)
+
     def shard_rows(self, x: np.ndarray, pad_value=0) -> jnp.ndarray:
         """Partition rows across cores: (n, ...) -> (n_cores, n_pc, ...).
 
         Equal-size shards (padding as needed) mirror the paper's requirement
         that parallel CPU->PIM transfers need equal buffer sizes per bank.
-        Counts the modeled CPU->PIM transfer bytes.
-        """
+        Counts the modeled CPU->PIM transfer bytes (and the dedicated
+        shard_transfers/shard_bytes counters — see TransferStats)."""
         c = self.config.n_cores
         n = x.shape[0]
         n_pc = -(-n // c)
@@ -99,6 +290,8 @@ class PimSystem:
                 [x, np.full((pad,) + x.shape[1:], pad_value, x.dtype)], 0)
         out = x.reshape(c, n_pc, *x.shape[1:])
         self.stats.cpu_to_pim += out.nbytes
+        self.stats.shard_transfers += 1
+        self.stats.shard_bytes += out.nbytes
         arr = jnp.asarray(out)
         if self._mesh is not None:
             arr = jax.device_put(
@@ -124,76 +317,108 @@ class PimSystem:
                 tree, NamedSharding(self._mesh, P()))  # replicated
         return tree
 
+    # -- kernel registry -----------------------------------------------------
+
+    def register_kernel(self, name: str, fn: Callable) -> str:
+        """Register (or replace) a named per-core kernel.
+
+        Re-registering a name with a different function bumps a generation
+        counter, orphaning any compiled entries for the old function — a
+        stale kernel can never be served for a new registration."""
+        if self._kernels.get(name) is not fn:
+            self._kernel_gen[name] = self._kernel_gen.get(name, -1) + 1
+            self._kernels[name] = fn
+        return name
+
+    def named_kernel(self, name: str, builder: Callable[[], Callable]) -> str:
+        """Register ``builder()`` under ``name`` unless already present.
+
+        The idiom for parameterized kernel factories: encode the factory
+        parameters in the name (e.g. ``"kme.assign/k=16"``) and the
+        compiled kernel is reused across fits and restarts."""
+        if name not in self._kernels:
+            self.register_kernel(name, builder())
+        return name
+
+    def _resolve_kernel(self, kernel) -> tuple[tuple, Callable]:
+        """Map a kernel reference to (stable cache key, callable).
+
+        Named kernels key by (name, generation).  Raw callables key by the
+        function object itself — the cache then holds a strong reference,
+        so the function cannot be collected and its identity can never be
+        recycled for a different kernel (the id()-reuse bug this replaced).
+        """
+        if isinstance(kernel, str):
+            fn = self._kernels.get(kernel)
+            if fn is None:
+                raise KeyError(
+                    f"no kernel registered under {kernel!r}; "
+                    f"known: {sorted(self._kernels)}")
+            return ("named", kernel, self._kernel_gen[kernel]), fn
+        if not callable(kernel):
+            raise TypeError(f"kernel must be a registered name or a "
+                            f"callable, got {type(kernel).__name__}")
+        return ("fn", kernel), kernel
+
     # -- execution ------------------------------------------------------------
 
-    def map_reduce(self, local_fn: Callable, sharded: tuple, replicated: tuple):
-        """Run ``local_fn(*shard_args, *replicated)`` on every core and
-        sum-reduce the resulting pytree across cores.
+    def map_reduce(self, kernel, sharded: tuple, replicated: tuple,
+                   strategy: StrategyLike = None):
+        """Run ``kernel(*shard_args, *replicated)`` on every core and
+        reduce the resulting pytree across cores.
 
-        FABRIC: reduction happens on-device (psum / vmap-sum).
-        HOST:   per-core partials are copied to the host, reduced with
-                numpy, and the result lives on the host (the caller then
-                ``broadcast``s the updated model, completing the paper's
-                round trip).  Transfer bytes are tracked either way.
-        """
-        fabric = self.config.reduce is ReduceVia.FABRIC
-        key = (id(local_fn), len(sharded), len(replicated), fabric)
-        fn = self._jit_cache.get(key)
-        if fn is None:
-            fn = self._build_step(local_fn, fabric)
-            self._jit_cache[key] = fn
-        out = fn(tuple(sharded), tuple(replicated))
+        ``kernel`` is a registered name or a callable.  ``strategy`` picks
+        the reduction schedule per call ("fabric" | "host" |
+        "hierarchical" | a ReduceStrategy); default is the system config.
+        Transfer bytes are tracked for every schedule."""
+        strat = resolve_reduce_strategy(strategy, self.config.reduce)
+        kkey, fn = self._resolve_kernel(kernel)
+        key = ("map_reduce", kkey, len(sharded), len(replicated),
+               strat.cache_token())
+        step = self._jit_cache.get(key)
+        if step is None:
+            step = self._build_step(fn, strat)
+            self._jit_cache[key] = step
+        out = step(tuple(sharded), tuple(replicated))
+        self.stats.pim_to_cpu += strat.count_pim_to_cpu(self, out)
+        return strat.finalize(self, out)
 
-        out_bytes = sum(v.nbytes for v in jax.tree_util.tree_leaves(out))
-        # every core ships its partial of the same shape to the host
-        self.stats.pim_to_cpu += out_bytes * (
-            self.config.n_cores if fabric else 1)
-
-        if self.config.reduce is ReduceVia.HOST:
-            host_partials = jax.device_get(out)  # (n_cores, ...) leaves
-            return jax.tree_util.tree_map(
-                lambda v: np.sum(np.asarray(v, np.int64)
-                                 if np.issubdtype(v.dtype, np.integer)
-                                 else np.asarray(v, np.float64), axis=0),
-                host_partials)
-        return out
-
-    def map_reduce_custom(self, local_fn: Callable, sharded: tuple,
+    def map_reduce_custom(self, kernel, sharded: tuple,
                           replicated: tuple, reduce: dict):
         """Like map_reduce but with per-key reduce ops ("sum"|"min"|"max").
 
         Used by DTR's min-max command (the host reduces per-core extrema).
         """
-        key = ("custom", id(local_fn), tuple(sorted(reduce.items())))
-        fn = self._jit_cache.get(key)
-        if fn is None:
-            def step(sharded_, replicated_):
-                partials = self._per_core(local_fn, sharded_, replicated_)
+        kkey, fn = self._resolve_kernel(kernel)
+        key = ("custom", kkey, tuple(sorted(reduce.items())))
+        step = self._jit_cache.get(key)
+        if step is None:
+            def _step(sharded_, replicated_, _fn=fn):
+                partials = self._per_core(_fn, sharded_, replicated_)
                 return {k: (jnp.sum(v, axis=0) if reduce[k] == "sum"
                             else jnp.min(v, axis=0) if reduce[k] == "min"
                             else jnp.max(v, axis=0))
                         for k, v in partials.items()}
-            fn = jax.jit(step)
-            self._jit_cache[key] = fn
-        out = fn(tuple(sharded), tuple(replicated))
-        self.stats.pim_to_cpu += sum(
-            v.nbytes for v in jax.tree_util.tree_leaves(out)
-        ) * self.config.n_cores
+            step = jax.jit(_step)
+            self._jit_cache[key] = step
+        out = step(tuple(sharded), tuple(replicated))
+        self.stats.pim_to_cpu += _tree_bytes(out) * self.config.n_cores
         return out
 
-    def map_elementwise(self, local_fn: Callable, sharded: tuple,
-                        replicated: tuple):
+    def map_elementwise(self, kernel, sharded: tuple, replicated: tuple):
         """Per-core kernel with *no* reduction: output stays core-resident
         (DTR's split-commit).  Only the replicated command arguments cross
         the host<->PIM boundary; counted accordingly."""
-        key = ("elem", id(local_fn))
-        fn = self._jit_cache.get(key)
-        if fn is None:
-            fn = jax.jit(lambda s, r: self._per_core(local_fn, s, r))
-            self._jit_cache[key] = fn
+        kkey, fn = self._resolve_kernel(kernel)
+        key = ("elem", kkey)
+        step = self._jit_cache.get(key)
+        if step is None:
+            step = jax.jit(
+                lambda s, r, _fn=fn: self._per_core(_fn, s, r))
+            self._jit_cache[key] = step
         self.stats.cpu_to_pim += sum(
             np.asarray(v).nbytes for v in replicated) * self.config.n_cores
-        return fn(tuple(sharded), tuple(replicated))
+        return step(tuple(sharded), tuple(replicated))
 
     def _per_core(self, local_fn, sharded, replicated):
         """Trace the per-core kernel under vmap or shard_map."""
@@ -202,7 +427,7 @@ class PimSystem:
         mesh = self._mesh
 
         @functools.partial(
-            jax.shard_map, mesh=mesh,
+            shard_map, mesh=mesh,
             in_specs=(tuple(P("cores") for _ in sharded), P()),
             out_specs=P("cores"))
         def _shmap(shard_args, rep):
@@ -211,14 +436,11 @@ class PimSystem:
             return jax.tree_util.tree_map(lambda v: v[None], out)
         return _shmap(sharded, replicated)
 
-    def _build_step(self, local_fn, fabric: bool):
-        """Compile one PIM step: per-core kernel (+ on-fabric sum reduce)."""
+    def _build_step(self, local_fn, strat: ReduceStrategy):
+        """Compile one PIM step: per-core kernel + on-device reduce stage."""
         def step(sharded, replicated):
             partials = self._per_core(local_fn, sharded, replicated)
-            if fabric:
-                return jax.tree_util.tree_map(
-                    lambda v: jnp.sum(v, axis=0), partials)
-            return partials
+            return strat.device_reduce(partials)
         return jax.jit(step)
 
 
@@ -251,6 +473,36 @@ DPU_OP_CYCLES: dict[str, float] = {
 DPU_MRAM_BYTES_PER_CYCLE = 1.6
 DPU_FREQ_HZ = 425e6
 DPU_PIPELINE_SATURATION_THREADS = 11
+
+#: on-bank storage dtype of the training data per (workload, version) —
+#: the explicit table the cost model's MRAM byte counting reads, with the
+#: per-dtype widths shared with quantization.STORAGE_BYTES.  Mirrors the
+#: quantized views PimDataset materializes (repro/api/dataset.py).
+WORKLOAD_STORAGE_DTYPE: dict[tuple[str, str], str] = {
+    ("lin", "fp32"): "fp32",
+    ("lin", "int32"): "int32",
+    ("lin", "hyb"): "int8",
+    ("lin", "bui"): "int8",
+    ("log", "fp32"): "fp32",
+    ("log", "int32"): "int32",
+    ("log", "int32_lut_mram"): "int32",
+    ("log", "int32_lut_wram"): "int32",
+    ("log", "hyb_lut"): "int8",
+    ("log", "bui_lut"): "int8",
+    ("dtr", "fp32"): "fp32",
+    ("kme", "int16"): "int16",
+}
+
+
+def workload_element_bytes(workload: str, version: str) -> int:
+    """Bytes per stored feature value for a workload version."""
+    try:
+        name = WORKLOAD_STORAGE_DTYPE[(workload, version)]
+    except KeyError:
+        raise ValueError(
+            f"no storage dtype recorded for {workload}/{version}; "
+            f"add it to WORKLOAD_STORAGE_DTYPE") from None
+    return storage_bytes(name)
 
 
 @dataclasses.dataclass
@@ -328,18 +580,16 @@ class DpuCostModel:
                          n_features: int, n_cores: int, n_threads: int,
                          k: int = 16) -> float:
         n_pc = -(-n_samples // n_cores)
+        elem_bytes = workload_element_bytes(workload, version)
+        bytes_ = n_pc * n_features * elem_bytes
         if workload == "lin":
             instr = n_pc * self.lin_instr(version, n_features)
-            bytes_ = n_pc * n_features * (4 if "32" in version or version == "fp32" else 1)
         elif workload == "log":
             instr = n_pc * self.log_instr(version, n_features)
-            bytes_ = n_pc * n_features * (4 if "int32" in version or version == "fp32" else 1)
         elif workload == "dtr":
             instr = self.dtr_split_evaluate_instr(n_pc) * n_features
-            bytes_ = n_pc * n_features * 4
         elif workload == "kme":
             instr = self.kme_instr(n_pc, n_features, k)
-            bytes_ = n_pc * n_features * 2
         else:
             raise ValueError(workload)
         return self.kernel_seconds(instr, bytes_, n_threads)

@@ -19,6 +19,22 @@ import numpy as np
 
 _INT_DTYPES = {8: jnp.int8, 16: jnp.int16, 32: jnp.int32}
 
+#: storage width in bytes of every on-bank dtype used by the workloads.
+#: This is THE dtype-width table: core/pim.py's DpuCostModel derives its
+#: per-element MRAM byte counts from it instead of string-matching on
+#: version names, so cost model and quantizer cannot drift.
+STORAGE_BYTES = {"fp32": 4, "int32": 4, "int16": 2, "int8": 1}
+
+
+def storage_bytes(dtype_name: str) -> int:
+    """Bytes per element for a named storage dtype (see STORAGE_BYTES)."""
+    try:
+        return STORAGE_BYTES[dtype_name]
+    except KeyError:
+        raise ValueError(
+            f"unknown storage dtype {dtype_name!r}; "
+            f"known: {sorted(STORAGE_BYTES)}") from None
+
 
 def int_dtype_for_bits(bits: int):
     """Smallest signed integer dtype that stores `bits`-bit values."""

@@ -1,0 +1,113 @@
+"""Workload-session launcher: train any registered PIM-ML workload.
+
+The CLI face of the unified API (repro/api): one PimSystem session, one
+bank-resident PimDataset, N fits over it — version ladders and
+hyperparameter sweeps pay the CPU->PIM partition once, which is the
+paper's execution model (§2.2) and the enabler for serving many
+training/scoring requests over resident data (ROADMAP north star).
+
+  PYTHONPATH=src python -m repro.launch.pim_ml --workload linreg \
+      --versions int32,hyb --samples 8192 --features 16 --iters 300 \
+      --sweep lr=0.05,0.1,0.2 --reduce fabric
+
+  PYTHONPATH=src python -m repro.launch.pim_ml --workload kmeans \
+      --samples 20000 --param n_clusters=16 --param n_init=2
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+from repro.api import (PimConfig, PimSystem, get_workload, list_workloads,
+                       make_estimator)
+from repro.data.synthetic import (make_blobs, make_classification,
+                                  make_linear_dataset)
+
+
+def _parse_value(text: str):
+    for cast in (int, float):
+        try:
+            return cast(text)
+        except ValueError:
+            continue
+    return text
+
+
+def _make_data(workload: str, n: int, f: int, seed: int):
+    if workload == "kmeans":
+        X, _, _ = make_blobs(n, f, centers=16, seed=seed)
+        return X, None
+    if workload == "dtree":
+        return make_classification(n, f, seed=seed, class_sep=1.4)
+    X, y, _ = make_linear_dataset(n, f, seed=seed)
+    return X, y
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--workload", default="linreg",
+                    choices=sorted(list_workloads()))
+    ap.add_argument("--versions", default="",
+                    help="comma list; default = all versions")
+    ap.add_argument("--samples", type=int, default=8192)
+    ap.add_argument("--features", type=int, default=16)
+    ap.add_argument("--cores", type=int, default=16)
+    ap.add_argument("--iters", type=int, default=0,
+                    help="override n_iters/max_iter when > 0")
+    ap.add_argument("--reduce", default="fabric",
+                    choices=("fabric", "host", "hierarchical"))
+    ap.add_argument("--sweep", default="",
+                    help="hyper sweep, e.g. lr=0.05,0.1,0.2")
+    ap.add_argument("--param", action="append", default=[],
+                    help="extra hyperparameter, e.g. n_clusters=8")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    wl = get_workload(args.workload)
+    versions = ([v for v in args.versions.split(",") if v]
+                or list(wl.versions))
+    params = dict(p.split("=", 1) for p in args.param)
+    params = {k: _parse_value(v) for k, v in params.items()}
+    if args.iters > 0:
+        iter_key = next((k for k in ("max_iter", "n_iters")
+                         if k in wl.defaults), None)
+        if iter_key is None:
+            ap.error(f"--iters does not apply to {wl.name} "
+                     f"(no iteration hyperparameter; try --param "
+                     f"max_depth=N)")
+        params[iter_key] = args.iters
+
+    sweep = [("", None)]
+    if args.sweep:
+        key, _, vals = args.sweep.partition("=")
+        sweep = [(key, _parse_value(v)) for v in vals.split(",")]
+
+    pim = PimSystem(PimConfig(n_cores=args.cores, reduce=args.reduce))
+    X, y = _make_data(wl.name, args.samples, args.features, args.seed)
+    ds = pim.put(X, y)
+    print(f"session: {wl.name} on {args.cores} cores, reduce={args.reduce}, "
+          f"dataset {args.samples}x{args.features} (bank-resident)")
+
+    for ver in versions:
+        for skey, sval in sweep:
+            p = dict(params)
+            if skey:
+                p[skey] = sval
+            t0 = time.perf_counter()
+            est = make_estimator(wl.name, version=ver, pim=pim, **p).fit(ds)
+            dt = time.perf_counter() - t0
+            score = (est.score(X) if wl.unsupervised else est.score(X, y))
+            tag = f" {skey}={sval}" if skey else ""
+            print(f"  {ver:16s}{tag:14s} score={score:9.4f}  "
+                  f"fit={dt:6.2f}s  shard_transfers="
+                  f"{pim.stats.shard_transfers}")
+
+    s = pim.stats
+    print(f"transfers: cpu->pim {s.cpu_to_pim:,} B "
+          f"(dataset shards {s.shard_bytes:,} B in {s.shard_transfers} "
+          f"transfers), pim->cpu {s.pim_to_cpu:,} B, "
+          f"inter-core via host {s.inter_core_via_host:,} B")
+
+
+if __name__ == "__main__":
+    main()

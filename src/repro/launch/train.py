@@ -1,4 +1,4 @@
-"""End-to-end training launcher.
+"""End-to-end LM training launcher.
 
 CPU-runnable for reduced configs (examples/train_lm.py drives a ~100M
 model for a few hundred steps); on a real pod the same code path uses the
@@ -6,6 +6,10 @@ production mesh and full configs.
 
   PYTHONPATH=src python -m repro.launch.train --arch granite-3-8b \
       --reduced --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+
+The paper's PIM-ML workloads (LIN/LOG/DTR/KME) launch through the
+workload-session CLI instead: ``python -m repro.launch.pim_ml`` (built on
+the unified repro.api surface — registry, PimDataset, ReduceStrategy).
 """
 from __future__ import annotations
 

@@ -10,6 +10,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ..compat import shard_map
+
 from repro.optim.adam import AdamW
 from repro.optim.grad_compression import ef_compress_psum
 
@@ -107,7 +109,7 @@ def _dp_call(mesh, axis, model, params, err, batch, compress, world):
     err_specs = jax.tree_util.tree_map(lambda _: P(), err)
 
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        shard_map, mesh=mesh,
         in_specs=(rep, err_specs, batch_specs),
         out_specs=((P(), rep), err_specs), check_vma=False)
     def run(params_, err_, batch_):

@@ -1,0 +1,274 @@
+"""The unified workload-session API (repro/api): registry round-trips,
+bank-resident dataset reuse, per-call reduce strategies, and jit-cache
+correctness under kernel garbage collection."""
+import gc
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (PimConfig, PimDataset, PimEstimator, PimSystem,
+                       get_workload, kmeans_sq_distances, list_workloads,
+                       make_estimator)
+from repro.core.estimators import (PimDecisionTreeClassifier, PimKMeans,
+                                   PimLinearRegression,
+                                   PimLogisticRegression)
+from repro.data.synthetic import (make_blobs, make_classification,
+                                  make_linear_dataset)
+
+
+def _pim(n_cores=8):
+    return PimSystem(PimConfig(n_cores=n_cores))
+
+
+# ---------------------------------------------------------------------------
+# Workload registry round-trip: every workload x version constructs and
+# fits through make_estimator.
+# ---------------------------------------------------------------------------
+
+def _tiny_fit(name, version, pim):
+    if name == "kmeans":
+        X, _, _ = make_blobs(256, 4, centers=4, seed=0)
+        est = make_estimator(name, version=version, n_clusters=4,
+                             max_iter=10, pim=pim).fit(X)
+        return est, X, None
+    if name == "dtree":
+        X, y = make_classification(512, 16, seed=0)
+        est = make_estimator(name, version=version, max_depth=3,
+                             pim=pim).fit(X, y)
+        return est, X, y
+    X, y, _ = make_linear_dataset(512, 4, seed=0)
+    est = make_estimator(name, version=version, n_iters=5,
+                         pim=pim).fit(X, y)
+    return est, X, y
+
+
+def test_registry_lists_all_four_workloads():
+    assert set(list_workloads()) == {"linreg", "logreg", "dtree", "kmeans"}
+
+
+@pytest.mark.parametrize("name", ["linreg", "logreg", "dtree", "kmeans"])
+def test_registry_round_trip_all_versions(name):
+    wl = get_workload(name)
+    pim = _pim()
+    for version in wl.versions:
+        est, X, y = _tiny_fit(name, version, pim)
+        assert est.result_ is not None
+        assert est.result_.workload == name
+        assert est.result_.version == version
+        pred = est.predict(X)
+        assert pred.shape[0] == X.shape[0]
+        score = est.score(X) if wl.unsupervised else est.score(X, y)
+        assert np.isfinite(score)
+
+
+def test_workload_aliases_resolve():
+    for alias, name in (("lin", "linreg"), ("log", "logreg"),
+                        ("dtr", "dtree"), ("kme", "kmeans")):
+        assert get_workload(alias) is get_workload(name)
+
+
+def test_spec_validation():
+    wl = get_workload("linreg")
+    with pytest.raises(ValueError):
+        wl.spec("int64")                        # unknown version
+    with pytest.raises(TypeError):
+        wl.spec("int32", bogus_hyper=3)         # unknown hyperparameter
+    with pytest.raises(TypeError):
+        make_estimator("kmeans", k=4)           # native name is n_clusters
+
+
+def test_get_set_params_protocol():
+    est = make_estimator("linreg", version="int32", n_iters=7)
+    p = est.get_params()
+    assert p["version"] == "int32" and p["n_iters"] == 7
+    est.set_params(lr=0.5, version="hyb")
+    assert est.get_params()["lr"] == 0.5
+    assert est.version == "hyb"
+    with pytest.raises(ValueError):
+        est.set_params(nonsense=1)
+
+
+def test_legacy_estimators_delegate_to_registry():
+    """The legacy classes are thin shims over the generic facade."""
+    for cls, name in ((PimLinearRegression, "linreg"),
+                      (PimLogisticRegression, "logreg"),
+                      (PimDecisionTreeClassifier, "dtree"),
+                      (PimKMeans, "kmeans")):
+        est = cls()
+        assert isinstance(est, PimEstimator)
+        assert est.workload is get_workload(name)
+
+
+# ---------------------------------------------------------------------------
+# Bank-resident dataset reuse (the acceptance criterion): two fits on one
+# PimDataset pay for exactly one CPU->PIM shard transfer.
+# ---------------------------------------------------------------------------
+
+def test_dataset_reuse_single_shard_transfer():
+    pim = _pim()
+    X, y, _ = make_linear_dataset(1024, 8, seed=0)
+    ds = pim.put(X, y)
+    assert pim.stats.shard_transfers == 0     # lazy: nothing moved yet
+
+    make_estimator("linreg", version="int32", n_iters=5, pim=pim).fit(ds)
+    t1, b1 = pim.stats.shard_transfers, pim.stats.shard_bytes
+    assert t1 == 2                            # X and y, one partition each
+
+    # hyperparameter sweep: second fit must add ZERO shard bytes
+    make_estimator("linreg", version="int32", n_iters=9, lr=0.3,
+                   pim=pim).fit(ds)
+    assert (pim.stats.shard_transfers, pim.stats.shard_bytes) == (t1, b1)
+
+
+def test_dataset_view_shared_across_workloads():
+    """LOG reuses LIN's data view (same precision ladder)."""
+    pim = _pim()
+    X, y, _ = make_linear_dataset(512, 4, seed=1)
+    ds = pim.put(X, y)
+    make_estimator("linreg", version="int32", n_iters=3, pim=pim).fit(ds)
+    t1 = pim.stats.shard_transfers
+    make_estimator("logreg", version="int32_lut_wram", n_iters=3,
+                   pim=pim).fit(ds)
+    assert pim.stats.shard_transfers == t1
+
+
+def test_dataset_versions_materialize_distinct_views():
+    pim = _pim()
+    X, y, _ = make_linear_dataset(512, 4, seed=2)
+    ds = pim.put(X, y)
+    ds.gd_view("fp32")
+    t_fp32 = pim.stats.shard_transfers
+    ds.gd_view("int32")
+    assert pim.stats.shard_transfers > t_fp32   # new precision, new view
+    t_int32 = pim.stats.shard_transfers
+    ds.gd_view("hyb")
+    ds.gd_view("bui")                           # same datatypes as hyb
+    assert pim.stats.shard_transfers == t_int32 + 2
+
+
+def test_kmeans_restarts_share_one_transfer():
+    pim = _pim()
+    X, _, _ = make_blobs(512, 4, centers=4, seed=0)
+    ds = pim.put(X)
+    make_estimator("kmeans", n_clusters=4, n_init=3, max_iter=10,
+                   pim=pim).fit(ds)
+    assert pim.stats.shard_transfers == 1
+
+
+def test_estimator_accepts_dataset_or_arrays():
+    pim = _pim()
+    X, y, _ = make_linear_dataset(256, 4, seed=3)
+    e1 = make_estimator("linreg", n_iters=10, pim=pim).fit(X, y)
+    e2 = make_estimator("linreg", n_iters=10, pim=pim).fit(pim.put(X, y))
+    np.testing.assert_array_equal(e1.coef_, e2.coef_)
+
+
+# ---------------------------------------------------------------------------
+# jit-cache correctness: the old id(fn)-keyed cache could serve a stale
+# compiled kernel when a collected function's id was recycled.
+# ---------------------------------------------------------------------------
+
+def test_jit_cache_correct_under_kernel_gc():
+    pim = _pim(4)
+    x = np.arange(16, dtype=np.float32)
+    xs = pim.shard_rows(x)
+    for c in range(24):
+        def kern(xc, _unused, _c=float(c)):
+            return {"s": jnp.sum(xc) * _c}
+        out = pim.map_reduce(kern, (xs,), (0,))
+        del kern
+        gc.collect()   # invite id reuse for the next closure
+        assert float(out["s"]) == pytest.approx(x.sum() * c), c
+
+
+def test_named_kernel_reregistration_not_stale():
+    pim = _pim(4)
+    xs = pim.shard_rows(np.arange(8, dtype=np.float32))
+    pim.register_kernel("k", lambda xc, _: {"s": jnp.sum(xc)})
+    a = float(pim.map_reduce("k", (xs,), (0,))["s"])
+    pim.register_kernel("k", lambda xc, _: {"s": 2 * jnp.sum(xc)})
+    b = float(pim.map_reduce("k", (xs,), (0,))["s"])
+    assert b == pytest.approx(2 * a)
+
+
+def test_named_kernel_builder_runs_once():
+    pim = _pim(4)
+    calls = []
+    for _ in range(3):
+        pim.named_kernel("only.once", lambda: calls.append(1) or (
+            lambda xc, _: {"s": jnp.sum(xc)}))
+    assert len(calls) == 1
+
+
+def test_unknown_kernel_name_raises():
+    pim = _pim(4)
+    with pytest.raises(KeyError):
+        pim.map_reduce("never.registered", (jnp.zeros((4, 1)),), (0,))
+
+
+# ---------------------------------------------------------------------------
+# Reduce strategies: selectable per call, numerically consistent.
+# ---------------------------------------------------------------------------
+
+def test_reduce_strategies_agree():
+    x = np.random.RandomState(0).randint(-50, 50, 64).astype(np.int32)
+    pim = _pim(8)
+    xs = pim.shard_rows(x)
+
+    def kern(xc, _):
+        return {"s": jnp.sum(xc)}
+
+    outs = {s: int(pim.map_reduce(kern, (xs,), (0,), strategy=s)["s"])
+            for s in ("fabric", "host", "hierarchical")}
+    assert outs["fabric"] == outs["host"] == outs["hierarchical"] == x.sum()
+
+
+def test_hierarchical_reduce_counts_intercore_bytes():
+    pim = _pim(8)
+    xs = pim.shard_rows(np.ones(32, np.float32))
+    pim.map_reduce(lambda xc, _: {"s": jnp.sum(xc)}, (xs,), (0,),
+                   strategy="hierarchical")
+    assert pim.stats.inter_core_via_host > 0
+
+
+# ---------------------------------------------------------------------------
+# K-Means scoring goes through the single shared distance helper.
+# ---------------------------------------------------------------------------
+
+def test_kmeans_distances_are_true_distances():
+    rng = np.random.RandomState(0)
+    X = rng.normal(size=(50, 6)).astype(np.float32)
+    C = rng.normal(size=(4, 6)).astype(np.float32)
+    d = kmeans_sq_distances(X, C)
+    ref = ((X[:, None, :] - C[None, :, :]) ** 2).sum(-1)
+    np.testing.assert_allclose(d, ref, atol=1e-3)
+    assert (d > -1e-3).all()   # a dropped ||x||^2 term would go negative
+
+
+def test_kmeans_score_and_predict_consistent():
+    X, _, _ = make_blobs(600, 6, centers=4, seed=5)
+    km = make_estimator("kmeans", n_clusters=4, seed=0, max_iter=20).fit(X)
+    pred = km.predict(X)
+    np.testing.assert_array_equal(pred, km.labels_)
+    d = kmeans_sq_distances(X, km.cluster_centers_)
+    assert km.score(X) == pytest.approx(-float(d.min(1).sum()), rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Dataset handle basics.
+# ---------------------------------------------------------------------------
+
+def test_put_returns_dataset_handle():
+    pim = _pim()
+    X, y, _ = make_linear_dataset(100, 3, seed=0)
+    ds = pim.put(X, y)
+    assert isinstance(ds, PimDataset)
+    assert (ds.n, ds.n_features) == (100, 3)
+
+
+def test_gd_view_requires_targets():
+    pim = _pim()
+    ds = pim.put(np.zeros((10, 2), np.float32))
+    with pytest.raises(ValueError):
+        ds.gd_view("fp32")

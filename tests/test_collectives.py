@@ -1,5 +1,7 @@
 """Hierarchical two-level all-reduce == flat psum (multi-pod schedule)."""
 import subprocess
+
+import pytest
 import sys
 
 from repro.distributed.collectives import cross_pod_bytes
@@ -10,6 +12,7 @@ def test_cross_pod_bytes_napkin():
     assert hier * 16 == flat
 
 
+@pytest.mark.slow
 def test_hierarchical_psum_matches_flat_subprocess():
     code = r"""
 import os
@@ -18,18 +21,20 @@ import sys; sys.path.insert(0, "src")
 import functools
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 from repro.distributed.collectives import hierarchical_psum
 
 mesh = jax.make_mesh((2, 4), ("pod", "data"))
 
-@functools.partial(jax.shard_map, mesh=mesh,
+@functools.partial(shard_map, mesh=mesh,
                    in_specs=P(("pod", "data")), out_specs=P())
 def flat(x):
     return jax.lax.psum(x, ("pod", "data"))
 
 # check_vma=False: the RS -> inter-AR -> AG composition is replicated in
-# value, but shard_map's varying-axes type system cannot infer that.
-@functools.partial(jax.shard_map, mesh=mesh,
+# value, but shard_map's varying-axes type system cannot infer that
+# (repro.compat translates the kwarg for older jax).
+@functools.partial(shard_map, mesh=mesh,
                    in_specs=P(("pod", "data")), out_specs=P(),
                    check_vma=False)
 def hier(x):
@@ -53,6 +58,7 @@ print("OK")
     assert "OK" in r.stdout, r.stdout + r.stderr
 
 
+@pytest.mark.slow
 def test_multipod_dp_trainer_matches_flat_subprocess():
     """The hierarchical (pod,data) DP trainer must produce the same losses
     as the flat data-parallel reduction."""

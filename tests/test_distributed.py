@@ -202,6 +202,7 @@ def test_compressed_bytes_saved():
     assert f32 == 4 * int8
 
 
+@pytest.mark.slow
 def test_dp_compressed_training_subprocess():
     """int8-compressed DP all-reduce trains within noise of the exact one
     (runs in a subprocess to force 8 host devices)."""
@@ -246,6 +247,7 @@ print("OK")
     assert "OK" in r.stdout, r.stdout + r.stderr
 
 
+@pytest.mark.slow
 def test_elastic_rescale_subprocess():
     """Train on 8 devices, checkpoint, 'lose' 4, restore onto a 4-device
     mesh, keep training — the elastic-rescale path end to end."""

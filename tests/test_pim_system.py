@@ -36,8 +36,12 @@ def test_host_reduce_matches_fabric():
         xs = pim.shard_rows(x)
         outs[mode] = float(pim.map_reduce(
             _sum_kernel, (xs,), (jnp.float32(1.0),))["s"])
+    # fabric sums the per-core partials in f32 on device; host promotes to
+    # f64.  The 64 uniform(-1,1) values cancel to ~0.097, so the f32 path
+    # carries ~1e-6 absolute rounding noise — compare absolutely, not at
+    # f64-tight relative precision.
     assert outs[ReduceVia.FABRIC] == pytest.approx(outs[ReduceVia.HOST],
-                                                   rel=1e-6)
+                                                   abs=1e-5)
 
 
 def test_result_independent_of_core_count_int():

@@ -5,6 +5,8 @@ Runs in a subprocess with 4 forced host devices (stage axis of 4).
 import subprocess
 import sys
 
+import pytest
+
 from repro.distributed.pipeline import bubble_fraction, split_stages
 
 
@@ -20,6 +22,7 @@ def test_bubble_fraction():
     assert bubble_fraction(1, 8) == 0.0
 
 
+@pytest.mark.slow
 def test_pipeline_matches_sequential_subprocess():
     code = r"""
 import os

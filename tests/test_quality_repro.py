@@ -15,6 +15,10 @@ import numpy as np
 import pytest
 
 from repro.core import dtree, kmeans, linreg, logreg
+
+# full quality reproduction: 600-iteration trainings over every version —
+# minutes of wall time, excluded from the fast tier (scripts/ci.sh)
+pytestmark = pytest.mark.slow
 from repro.core.metrics import (accuracy, adjusted_rand_index,
                                 calinski_harabasz, training_error_rate)
 from repro.core.pim import PimConfig, PimSystem

@@ -1,6 +1,10 @@
 """Pallas-kernel micro-benchmarks (interpret mode on CPU = correctness
 path; wall times are indicative only — real perf numbers come from the
-roofline terms of the dry-run HLO, see §Roofline)."""
+roofline terms of the dry-run HLO, see §Roofline).
+
+All calls go through the family ``ops`` wrappers with the legacy
+``use_pallas`` flags, which route through repro.kernels.dispatch — the
+same code path the trainers use."""
 from __future__ import annotations
 
 import numpy as np
@@ -12,7 +16,6 @@ from repro.kernels.flash_attention.ops import mha
 from repro.kernels.kmeans_assign.ops import assign_and_accumulate
 from repro.kernels.lut_activation.ops import lut_sigmoid
 from repro.kernels.quant_matmul.ops import quant_matmul
-from repro.kernels.quant_matmul.ref import quant_matmul_ref
 from .common import row, time_call
 
 

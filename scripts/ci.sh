@@ -1,17 +1,21 @@
 #!/usr/bin/env bash
 # Fast CI tier (<60 s): the PIM-ML core — session/dataset/registry API,
-# execution model, numerics, metrics — minus anything marked @slow.
-# The LM-stack breadth (arch smoke matrix, interpret-mode Pallas kernels,
-# serving, multi-device subprocess equivalence) and the quality
-# reproduction run in the full tier-1 suite: `make test` / plain pytest.
+# execution model, numerics, metrics — plus the kernel tier's dispatch
+# parity (interpret-mode Pallas vs jnp-ref) and the small-shape kernel
+# cases; large-shape kernel cases are marked @slow.  The LM-stack
+# breadth (arch smoke matrix, serving, multi-device subprocess
+# equivalence) and the quality reproduction run in the full tier-1
+# suite: `make test` / plain pytest.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 exec python -m pytest -q -m "not slow" \
     tests/test_api.py \
     tests/test_collectives.py \
+    tests/test_dispatch.py \
     tests/test_estimators.py \
     tests/test_fixed_point.py \
+    tests/test_kernels.py \
     tests/test_lut.py \
     tests/test_metrics.py \
     tests/test_pim_system.py \

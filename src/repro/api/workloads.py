@@ -7,6 +7,12 @@ serves host-side prediction exactly as the paper's sklearn deployment
 does (§4).  ``make_estimator("kmeans", version="int16", n_clusters=8)``
 is the one construction path; the legacy classes in core/estimators.py
 are thin shims over it.
+
+Every workload exposes a ``kernel_backend`` hyperparameter (None =
+per-platform auto-selection) that flows into the trainers' kernel
+dispatch (repro.kernels.dispatch): ``make_estimator("kmeans",
+kernel_backend="pallas_interpret")`` runs the assignment hot path
+through the Pallas interpreter, etc.
 """
 from __future__ import annotations
 
@@ -38,7 +44,8 @@ class LinRegWorkload(Workload):
     aliases = ("lin", "linear_regression")
     versions = linreg.VERSIONS
     defaults = {"n_iters": 500, "lr": 0.1, "frac_bits": 10, "x8_frac": 7,
-                "w16_frac": 8, "record_every": 0, "minibatch": 0, "seed": 0}
+                "w16_frac": 8, "record_every": 0, "minibatch": 0, "seed": 0,
+                "kernel_backend": None}
 
     def _config(self, spec: TrainerSpec) -> linreg.GdConfig:
         return linreg.GdConfig(version=spec.version, **spec.params)
@@ -67,7 +74,8 @@ class LogRegWorkload(Workload):
     versions = logreg.VERSIONS
     defaults = {"n_iters": 500, "lr": 5.0, "frac_bits": 10, "x8_frac": 7,
                 "w16_frac": 8, "record_every": 0, "minibatch": 0, "seed": 0,
-                "taylor_terms": 8, "lut_boundary": 20, "lut_frac_bits": 10}
+                "taylor_terms": 8, "lut_boundary": 20, "lut_frac_bits": 10,
+                "kernel_backend": None}
 
     def _config(self, spec: TrainerSpec) -> logreg.LogRegConfig:
         return logreg.LogRegConfig(version=spec.version, **spec.params)
@@ -99,7 +107,7 @@ class DecisionTreeWorkload(Workload):
     aliases = ("dtr", "decision_tree")
     versions = ("fp32",)
     defaults = {"max_depth": 10, "n_classes": 2, "min_samples_split": 2,
-                "seed": 0}
+                "seed": 0, "kernel_backend": None}
 
     def _config(self, spec: TrainerSpec) -> dtree.TreeConfig:
         return dtree.TreeConfig(**spec.params)
@@ -124,13 +132,14 @@ class KMeansWorkload(Workload):
     versions = ("int16",)
     unsupervised = True
     defaults = {"n_clusters": 16, "max_iter": 300, "tol": 1e-4,
-                "n_init": 1, "seed": 0}
+                "n_init": 1, "seed": 0, "kernel_backend": None}
 
     def _config(self, spec: TrainerSpec) -> kmeans.KMeansConfig:
         p = spec.params
         return kmeans.KMeansConfig(k=p["n_clusters"],
                                    max_iters=p["max_iter"], tol=p["tol"],
-                                   n_init=p["n_init"], seed=p["seed"])
+                                   n_init=p["n_init"], seed=p["seed"],
+                                   kernel_backend=p["kernel_backend"])
 
     def fit(self, dataset, spec: TrainerSpec) -> FitResult:
         r = kmeans.fit(dataset, self._config(spec))

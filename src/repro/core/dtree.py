@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import dispatch
 from .pim import PimSystem
 
 
@@ -40,6 +41,10 @@ class TreeConfig:
     n_classes: int = 2
     min_samples_split: int = 2
     seed: int = 0
+    #: kernel backend for split-evaluate (None = auto-select; see
+    #: repro.kernels.dispatch) — integer counts, so every backend is
+    #: bit-identical (asserted by the parity tests)
+    kernel_backend: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -97,24 +102,34 @@ def make_minmax_kernel(max_nodes: int):
     return _kernel
 
 
-def make_split_eval_kernel(max_nodes: int, n_classes: int):
+_BIG = np.float32(3.4e38)  # sentinel larger than any real feature value
+
+
+def make_split_eval_kernel(max_nodes: int, n_classes: int, backend=None):
     """split-evaluate: per (leaf, feature, class) below-threshold counts +
-    per (leaf, class) totals.  One random threshold per feature (ERT)."""
+    per (leaf, class) totals.  One random threshold per feature (ERT).
+
+    Routed through the kernel-dispatch layer (op ``gini_split``: Pallas
+    on TPU, jnp segment-sum oracle elsewhere).  The dispatch op has no
+    validity-mask concept, so invalid rows are pre-routed to a spill
+    slot — leaf ``max_nodes - 1``, class ``n_classes - 1`` — with
+    their feature values forced above every finite threshold (zero
+    below-counts), and their spurious total is subtracted afterwards
+    so the spill slot stays usable as a real leaf (the in-line kernel
+    this replaced masked totals to zero for invalid rows).
+    """
+    be = dispatch.resolve_backend(backend)
 
     def _kernel(Xc, yc, leaf_id, valid, thresholds):
         # thresholds: (max_nodes, F) candidate per leaf x feature
-        t = thresholds[leaf_id]                       # (n_pc, F)
-        below = (Xc <= t).astype(jnp.int32)           # (n_pc, F)
-        seg = leaf_id * n_classes + yc                # (n_pc,)
-        seg = jnp.where(valid, seg, max_nodes * n_classes - 1)
-        below = jnp.where(valid[:, None], below, 0)
-        counts = jax.ops.segment_sum(
-            below, seg, num_segments=max_nodes * n_classes)
-        totals = jax.ops.segment_sum(
-            jnp.where(valid, 1, 0), seg,
-            num_segments=max_nodes * n_classes)
-        return {"below": counts.reshape(max_nodes, n_classes, -1),
-                "total": totals.reshape(max_nodes, n_classes)}
+        x = jnp.where(valid[:, None], Xc, _BIG)       # below = 0 for pad
+        y = jnp.where(valid, yc, n_classes - 1)
+        leaf = jnp.where(valid, leaf_id, max_nodes - 1)
+        below, total = dispatch.launch(
+            "gini_split", x, y, leaf, thresholds, n_classes, backend=be)
+        n_pad = jnp.sum((~valid).astype(jnp.int32))
+        total = total.at[max_nodes - 1, n_classes - 1].add(-n_pad)
+        return {"below": below, "total": total}
     return _kernel
 
 
@@ -182,11 +197,12 @@ def fit(dataset, cfg: Optional[TreeConfig] = None) -> Tree:
     n_nodes = 1
     frontier = [0]
 
+    be = dispatch.resolve_backend(cfg.kernel_backend)
     minmax_k = pim.named_kernel(
         f"dtr.minmax/m{max_nodes}", lambda: make_minmax_kernel(max_nodes))
     eval_k = pim.named_kernel(
-        f"dtr.eval/m{max_nodes}.c{cfg.n_classes}",
-        lambda: make_split_eval_kernel(max_nodes, cfg.n_classes))
+        f"dtr.eval/m{max_nodes}.c{cfg.n_classes}/{dispatch.backend_tag(be)}",
+        lambda: make_split_eval_kernel(max_nodes, cfg.n_classes, be))
     commit_k = pim.named_kernel("dtr.commit", lambda: _commit_kernel)
 
     while frontier:

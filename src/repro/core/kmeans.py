@@ -23,10 +23,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import dispatch
 from .metrics import frobenius_shift
 from .pim import PimSystem
 
@@ -43,6 +43,10 @@ class KMeansConfig:
     tol: float = 1e-4           # relative Frobenius norm (paper §5.1.4)
     n_init: int = 1
     seed: int = 0
+    #: kernel backend for the assignment hot path (None = auto-select;
+    #: see repro.kernels.dispatch) — all backends are numerically
+    #: identical (integer ops, asserted by the parity tests)
+    kernel_backend: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -53,22 +57,25 @@ class KMeansResult:
     labels: Optional[np.ndarray] = None
 
 
-def _assign_kernel_factory(k: int):
+def _assign_kernel_factory(k: int, backend=None):
+    """Assignment + accumulation routed through the kernel-dispatch
+    layer (op ``kmeans_assign``: Pallas on TPU, jnp oracle elsewhere).
+
+    The dispatch op has no validity-mask concept, so padding is
+    corrected here: shard padding rows are all-zero vectors (see
+    ``PimSystem.shard_rows``), which contribute nothing to ``sums`` and
+    exactly one spurious count at their assigned label — subtracted via
+    a masked one-hot.
+    """
+    be = dispatch.resolve_backend(backend)
+
     def _kernel(Xq, valid, Cq):
-        """Nearest centroid by squared L2 in int32 (exact, see docstring)."""
-        x = Xq.astype(jnp.int32)                        # (n_pc, F)
-        c = Cq.astype(jnp.int32)                        # (k, F)
-        # ||x-c||^2 = ||x||^2 - 2 x.c + ||c||^2 ; ||x||^2 constant in argmin
-        cross = x @ c.T                                 # (n_pc, k) int32
-        cnorm = jnp.sum(c * c, axis=1)                  # (k,)
-        dist = cnorm[None, :] - 2 * cross
-        label = jnp.argmin(dist, axis=1).astype(jnp.int32)
-        lbl = jnp.where(valid, label, k)                # invalid -> spill row
-        sums = jax.ops.segment_sum(
-            jnp.where(valid[:, None], x, 0), lbl, num_segments=k + 1)
-        counts = jax.ops.segment_sum(
-            jnp.where(valid, 1, 0), lbl, num_segments=k + 1)
-        return {"sums": sums[:k], "counts": counts[:k]}
+        labels, sums, counts = dispatch.launch(
+            "kmeans_assign", Xq, Cq, backend=be)
+        pad_oh = ((labels[:, None] ==
+                   jnp.arange(k, dtype=jnp.int32)[None, :])
+                  & ~valid[:, None]).astype(jnp.int32)
+        return {"sums": sums, "counts": counts - jnp.sum(pad_oh, axis=0)}
     return _kernel
 
 
@@ -89,6 +96,11 @@ def _inertia_kernel_factory(k: int):
 
 
 def _labels_kernel_factory(k: int):
+    """Labels-only predict path: a plain argmin over the same distance
+    expression the ``kmeans_assign`` op uses (identical tie-breaking),
+    WITHOUT routing through the full assign+accumulate kernel — a
+    Pallas kernel computes every declared output, so the dispatch op
+    would materialize (K, F) sums nobody reads on the inference path."""
     def _kernel(Xq, valid, Cq):
         x = Xq.astype(jnp.int32)
         c = Cq.astype(jnp.int32)
@@ -110,8 +122,11 @@ def fit(dataset, cfg: Optional[KMeansConfig] = None,
     Xs, valid = view.shards, view.mask
     Xq_np, scale = view.host_q, view.scale
 
+    be = dispatch.resolve_backend(cfg.kernel_backend)
+    tag = dispatch.backend_tag(be)
     assign_k = pim.named_kernel(
-        f"kme.assign/k{cfg.k}", lambda: _assign_kernel_factory(cfg.k))
+        f"kme.assign/k{cfg.k}/{tag}",
+        lambda: _assign_kernel_factory(cfg.k, be))
     inertia_k = pim.named_kernel(
         f"kme.inertia/k{cfg.k}", lambda: _inertia_kernel_factory(cfg.k))
     labels_k = pim.named_kernel(

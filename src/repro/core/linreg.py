@@ -23,7 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .fixed_point import (_shift_round, fx_dot, fx_dot_hybrid, from_fixed,
+from ..kernels import dispatch
+from .fixed_point import (_shift_round, fx_dot_hybrid, from_fixed,
                           to_fixed)
 from .pim import PimSystem
 
@@ -44,6 +45,13 @@ class GdConfig:
     #                          (paper §2: "gradient descent or stochastic
     #                          gradient descent")
     seed: int = 0
+    #: kernel backend for the dispatch-routed pieces of the per-core
+    #: gradient kernel (None = auto-select; repro.kernels.dispatch).
+    #: INT32 versions route their Q-format matvec through the
+    #: ``fx_matvec`` op; HYB/BUI keep the inline saturating 16-bit
+    #: accumulation (a sequential-clip semantic no matmul kernel can
+    #: express — DESIGN.md §6.3).
+    kernel_backend: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -67,9 +75,14 @@ def _local_grad_fp32(Xc, yc, mask, w, b):
     return {"gw": Xc.T @ err, "gb": jnp.sum(err)}
 
 
-def make_local_grad_int32(frac_bits: int):
+def make_local_grad_int32(frac_bits: int, backend=None):
+    be = dispatch.resolve_backend(backend)
+
     def _local(Xq, yq, mask, wq, bq):
-        dot = fx_dot(Xq, wq, frac_bits) + bq            # Q(f)
+        # Q-format matvec through the kernel-dispatch layer (op
+        # ``fx_matvec``; bit-identical to fixed_point.fx_dot)
+        dot = dispatch.launch("fx_matvec", Xq, wq, frac_bits,
+                              backend=be) + bq          # Q(f)
         err = (dot - yq) * mask                         # Q(f)
         prod = err[:, None] * Xq.astype(jnp.int32)      # Q(2f)
         gw = jnp.sum(_shift_round(prod, frac_bits), 0)  # Q(f)
@@ -115,9 +128,10 @@ def _grad_kernel(pim: PimSystem, cfg: GdConfig):
     if cfg.version == "fp32":
         return pim.named_kernel("lin.grad/fp32", lambda: _local_grad_fp32)
     if cfg.version == "int32":
+        be = dispatch.resolve_backend(cfg.kernel_backend)
         return pim.named_kernel(
-            f"lin.grad/int32/f{cfg.frac_bits}",
-            lambda: make_local_grad_int32(cfg.frac_bits))
+            f"lin.grad/int32/f{cfg.frac_bits}/{dispatch.backend_tag(be)}",
+            lambda: make_local_grad_int32(cfg.frac_bits, be))
     return pim.named_kernel(
         f"lin.grad/hyb/x{cfg.x8_frac}.w{cfg.w16_frac}.f{cfg.frac_bits}",
         lambda: make_local_grad_hyb(cfg.x8_frac, cfg.w16_frac,

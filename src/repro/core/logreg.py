@@ -22,10 +22,10 @@ from typing import Callable, Optional
 import jax.numpy as jnp
 import numpy as np
 
-from .fixed_point import _shift_round, fx_dot, fx_dot_hybrid, to_fixed
+from ..kernels import dispatch
+from .fixed_point import _shift_round, fx_dot_hybrid
 from .linreg import GdConfig, GdResult, _grad_to_float, _quantize_weights
-from .lut import SigmoidLut, build_sigmoid_lut, lut_sigmoid_fixed, \
-    taylor_sigmoid_fixed
+from .lut import SigmoidLut, build_sigmoid_lut, taylor_sigmoid_fixed
 from .pim import PimSystem
 
 VERSIONS = ("fp32", "int32", "int32_lut_mram", "int32_lut_wram",
@@ -64,8 +64,21 @@ def _gd_version_of(version: str) -> str:
 
 
 def make_local_grad(cfg: LogRegConfig, lut: Optional[SigmoidLut]):
-    """Build the per-core kernel for the configured version."""
+    """Build the per-core kernel for the configured version.
+
+    The two kernel-dispatch hooks (repro.kernels.dispatch):
+
+      * the INT32 Q-format matvec routes through op ``fx_matvec``;
+      * the LUT sigmoid routes through op ``lut_sigmoid`` — but the
+        paper's MRAM variant *is* the HBM-gather ref path, so
+        ``int32_lut_mram`` pins ``jnp_ref`` while the WRAM/HYB/BUI
+        variants follow the configured backend (VMEM kernel on TPU).
+    """
     f = cfg.frac_bits
+    be = dispatch.resolve_backend(cfg.kernel_backend)
+    # MRAM placement == HBM gather == the ref path, by definition
+    lut_be = (dispatch.KernelBackend.JNP_REF
+              if cfg.version == "int32_lut_mram" else be)
 
     if cfg.version == "fp32":
         terms = cfg.taylor_terms
@@ -80,7 +93,8 @@ def make_local_grad(cfg: LogRegConfig, lut: Optional[SigmoidLut]):
         terms = cfg.taylor_terms
 
         def _local_int32_taylor(Xq, yq, mask, wq, bq):
-            z = fx_dot(Xq, wq, f) + bq                    # Q(f)
+            z = dispatch.launch("fx_matvec", Xq, wq, f,
+                                backend=be) + bq          # Q(f)
             p = taylor_sigmoid_fixed(z, f, terms=terms)   # Q(f)
             err = (p - yq) * mask
             prod = err[:, None] * Xq.astype(jnp.int32)
@@ -92,8 +106,10 @@ def make_local_grad(cfg: LogRegConfig, lut: Optional[SigmoidLut]):
         assert lut is not None
 
         def _local_int32_lut(Xq, yq, mask, wq, bq):
-            z = fx_dot(Xq, wq, f) + bq                    # Q(f)
-            p15 = lut_sigmoid_fixed(z, lut)               # Q(value_frac)
+            z = dispatch.launch("fx_matvec", Xq, wq, f,
+                                backend=be) + bq          # Q(f)
+            p15 = dispatch.launch("lut_sigmoid", z, lut,
+                                  backend=lut_be)         # Q(value_frac)
             p = _shift_round(p15, lut.value_frac - f)     # -> Q(f)
             err = (p - yq) * mask
             prod = err[:, None] * Xq.astype(jnp.int32)
@@ -101,13 +117,15 @@ def make_local_grad(cfg: LogRegConfig, lut: Optional[SigmoidLut]):
             return {"gw": gw, "gb": jnp.sum(err)}
         return _local_int32_lut
 
-    # hyb_lut / bui_lut — identical numerics (paper §3.1/§3.2)
+    # hyb_lut / bui_lut — identical numerics (paper §3.1/§3.2); the
+    # saturating 16-bit dot stays inline (sequential clip semantic —
+    # DESIGN.md §6.3), the sigmoid is dispatch-routed
     assert lut is not None
     x8, w16 = cfg.x8_frac, cfg.w16_frac
 
     def _local_hyb_lut(Xq8, yq, mask, wq16, bq):
         z = fx_dot_hybrid(Xq8, wq16, x8, w16, f) + bq     # Q(f), 16-bit acc
-        p15 = lut_sigmoid_fixed(z, lut)
+        p15 = dispatch.launch("lut_sigmoid", z, lut, backend=lut_be)
         p = _shift_round(p15, lut.value_frac - f)
         err = (p - yq) * mask
         prod = err[:, None] * Xq8.astype(jnp.int32)
@@ -125,7 +143,8 @@ def _grad_kernel(pim: PimSystem, cfg: LogRegConfig) -> str:
     name = (f"log.grad/{cfg.version}/f{cfg.frac_bits}"
             f".x{cfg.x8_frac}.w{cfg.w16_frac}"
             f".t{cfg.taylor_terms}"
-            f".lb{cfg.lut_boundary}.lf{cfg.lut_frac_bits}")
+            f".lb{cfg.lut_boundary}.lf{cfg.lut_frac_bits}"
+            f"/{dispatch.backend_tag(cfg.kernel_backend)}")
 
     def build():
         lut = (build_sigmoid_lut(cfg.lut_boundary, cfg.lut_frac_bits)

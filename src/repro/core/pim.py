@@ -340,6 +340,14 @@ class PimSystem:
             self.register_kernel(name, builder())
         return name
 
+    def registered_kernels(self) -> tuple:
+        """Sorted names of all registered kernels (diagnostics/tests).
+
+        Trainer kernel names encode their dispatch routing — e.g.
+        ``"kme.assign/k16/be=pallas_tpu"`` — so this is also how tests
+        assert that a fit actually went through the kernel tier."""
+        return tuple(sorted(self._kernels))
+
     def _resolve_kernel(self, kernel) -> tuple[tuple, Callable]:
         """Map a kernel reference to (stable cache key, callable).
 

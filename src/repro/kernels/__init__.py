@@ -1,3 +1,15 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Kernel tier: the Pallas realizations of the paper's physical-layout
+tricks, behind a swappable backend-dispatch layer (DESIGN.md §6).
+
+Layout per family: ``kernel.py`` (Pallas TPU kernel), ``ref.py``
+(pure-jnp oracle), ``ops.py`` (public wrapper + dispatch registration).
+``pallas_compat.py`` resolves drifted Pallas APIs once for every
+family; ``dispatch.py`` is the uniform ``launch(op, *args,
+backend=...)`` entry with per-platform auto-selection and ref fallback.
+"""
+from .dispatch import (BACKEND_ENV_VAR, KernelBackend, available_ops,
+                       backend_tag, default_backend, launch,
+                       resolve_backend)
+
+__all__ = ["BACKEND_ENV_VAR", "KernelBackend", "available_ops",
+           "backend_tag", "default_backend", "launch", "resolve_backend"]

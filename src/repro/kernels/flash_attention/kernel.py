@@ -16,8 +16,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from ..pallas_compat import pallas_call, pl, vmem_scratch
 
 NEG_INF = -1e30
 
@@ -96,7 +96,7 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     n_kv = skv // bk
     scale = 1.0 / (d ** 0.5)
     grid = (bh, sq // bq, n_kv)
-    return pl.pallas_call(
+    return pallas_call(
         functools.partial(_flash_kernel, scale=scale, causal=causal,
                           n_kv=n_kv, bq=bq, bk=bk, q_offset=q_offset,
                           window=window),
@@ -109,11 +109,10 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
         out_specs=pl.BlockSpec((1, bq, d), lambda h, i, j: (h, i, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((bq,), jnp.float32),
-            pltpu.VMEM((bq,), jnp.float32),
-            pltpu.VMEM((bq, d), jnp.float32),
+            vmem_scratch((bq,), jnp.float32),
+            vmem_scratch((bq,), jnp.float32),
+            vmem_scratch((bq, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
         interpret=interpret,
     )(q, k, v)

@@ -1,31 +1,60 @@
-"""jit'd wrapper: batched/GQA attention with kernel or XLA-ref routing."""
+"""Dispatchable wrapper: batched/GQA attention (op ``mha``)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from ..dispatch import legacy_launch, register_op
 from .kernel import flash_attention
 from .ref import attention_ref
 
 
-def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
-        causal: bool = True, q_offset: int = 0, window: int = 0,
-        use_pallas: bool = False, interpret: bool = True, bq: int = 128,
-        bk: int = 128) -> jnp.ndarray:
-    """q [B, Hq, Sq, D]; k,v [B, Hkv, Skv, D] (GQA: Hq multiple of Hkv).
-    ``window`` > 0: sliding-window attention."""
-    b, hq, sq, d = q.shape
-    _, hkv, skv, _ = k.shape
+def _gqa_repeat(q, k, v):
+    hq, hkv = q.shape[1], k.shape[1]
     if hq != hkv:
         assert hq % hkv == 0, (hq, hkv)
         rep = hq // hkv
         k = jnp.repeat(k, rep, axis=1)
         v = jnp.repeat(v, rep, axis=1)
-    if not use_pallas:
-        return attention_ref(q, k, v, causal=causal, q_offset=q_offset,
-                             window=window)
+    return k, v
+
+
+def _mha_pallas(q, k, v, *, causal: bool = True, q_offset: int = 0,
+                window: int = 0, interpret: bool = True, bq: int = 128,
+                bk: int = 128) -> jnp.ndarray:
+    k, v = _gqa_repeat(q, k, v)
+    b, hq, sq, d = q.shape
+    _, _, skv, _ = k.shape
     out = flash_attention(q.reshape(b * hq, sq, d),
                           k.reshape(b * hq, skv, d),
                           v.reshape(b * hq, skv, d),
                           causal=causal, q_offset=q_offset, window=window,
                           bq=bq, bk=bk, interpret=interpret)
     return out.reshape(b, hq, sq, d)
+
+
+def _mha_ref(q, k, v, *, causal: bool = True, q_offset: int = 0,
+             window: int = 0, bq: int = 128, bk: int = 128) -> jnp.ndarray:
+    del bq, bk  # jnp oracle needs no tiling
+    k, v = _gqa_repeat(q, k, v)
+    return attention_ref(q, k, v, causal=causal, q_offset=q_offset,
+                         window=window)
+
+
+def mha(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+        causal: bool = True, q_offset: int = 0, window: int = 0,
+        backend=None, use_pallas: bool = None, interpret: bool = None,
+        bq: int = 128, bk: int = 128) -> jnp.ndarray:
+    """q [B, Hq, Sq, D]; k,v [B, Hkv, Skv, D] (GQA: Hq multiple of Hkv).
+    ``window`` > 0: sliding-window attention.  ``backend`` picks the
+    implementation (None = auto-select); ``use_pallas``/``interpret``
+    keep their legacy meaning, except that the historical default was
+    the ref path — an unspecified backend only selects Pallas on TPU.
+    """
+    return legacy_launch("mha", q, k, v, backend=backend,
+                         use_pallas=use_pallas, interpret=interpret,
+                         causal=causal, q_offset=q_offset, window=window,
+                         bq=bq, bk=bk)
+
+
+register_op("mha", family="flash_attention",
+            pallas=_mha_pallas, ref=_mha_ref)

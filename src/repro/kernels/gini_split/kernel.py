@@ -20,8 +20,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from ..pallas_compat import pallas_call, pl
 
 
 def _gini_kernel(x_ref, seg_ref, leaf_ref, th_ref, counts_ref, totals_ref,
@@ -67,7 +67,7 @@ def gini_counts(x: jnp.ndarray, y: jnp.ndarray, leaf: jnp.ndarray,
     bn = min(block_n, n)
     assert n % bn == 0, (n, bn)
     seg = leaf * n_classes + y
-    counts, totals = pl.pallas_call(
+    counts, totals = pallas_call(
         functools.partial(_gini_kernel, n_slots=n_slots),
         grid=(n // bn,),
         in_specs=[
@@ -84,8 +84,7 @@ def gini_counts(x: jnp.ndarray, y: jnp.ndarray, leaf: jnp.ndarray,
             jax.ShapeDtypeStruct((n_slots, f), jnp.int32),
             jax.ShapeDtypeStruct((n_slots,), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",)),
+        dimension_semantics=("arbitrary",),
         interpret=interpret,
     )(x, seg, leaf, thresholds)
     return (counts.reshape(n_leaves, n_classes, f),

@@ -1,23 +1,25 @@
-"""jit'd wrapper for split-evaluate with padding + ref fallback.
+"""Dispatchable wrapper for split-evaluate (op ``gini_split``).
 
-The host remaps frontier leaf ids to a compact [0, L) range before calling
-(keeping the one-hot matmuls small); padding rows are routed to a spill
-leaf slot that is sliced off afterwards.
+The host remaps frontier leaf ids to a compact [0, L) range before
+calling (keeping the one-hot matmuls small); on the kernel path padding
+rows are routed to a spill leaf slot that is sliced off afterwards.
+Backend routing goes through :mod:`repro.kernels.dispatch`.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
+from ..dispatch import legacy_launch, register_op
 from .kernel import gini_counts
 from .ref import gini_counts_ref
 
 
-def split_evaluate(x, y, leaf, thresholds, n_classes: int, *,
-                   use_pallas: bool = True, interpret: bool = True,
-                   block_n: int = 1024):
-    """Returns (below [L, C, F], total [L, C]) over valid rows only."""
-    if not use_pallas:
-        return gini_counts_ref(x, y, leaf, thresholds, n_classes)
+def _split_pallas(x, y, leaf, thresholds, n_classes: int, *,
+                  interpret: bool = True, block_n: int = 1024):
+    """Kernel path with ragged-tail padding.  Returns counts over valid
+    rows only: padding rows carry a spill leaf whose very-negative
+    (finite: 0 * -inf would NaN the one-hot matmul) thresholds force
+    below=0, and the spill row is sliced off."""
     n = x.shape[0]
     n_leaves = thresholds.shape[0]
     bn = min(block_n, max(n, 8))
@@ -26,9 +28,6 @@ def split_evaluate(x, y, leaf, thresholds, n_classes: int, *,
         pad = n_pad - n
         x = jnp.concatenate([x, jnp.zeros((pad, x.shape[1]), x.dtype)])
         y = jnp.concatenate([y, jnp.zeros((pad,), y.dtype)])
-        # spill slot: one extra leaf row with very-negative thresholds
-        # (never <=).  Finite sentinel: the kernel's one-hot matmul would
-        # turn 0 * -inf into NaN.
         leaf = jnp.concatenate(
             [leaf, jnp.full((pad,), n_leaves, leaf.dtype)])
         thresholds = jnp.concatenate(
@@ -37,3 +36,28 @@ def split_evaluate(x, y, leaf, thresholds, n_classes: int, *,
     below, total = gini_counts(x, y, leaf, thresholds, n_classes=n_classes,
                                block_n=bn, interpret=interpret)
     return below[:n_leaves], total[:n_leaves]
+
+
+def _split_ref(x, y, leaf, thresholds, n_classes: int, *,
+               block_n: int = 1024):
+    del block_n  # jnp oracle needs no tiling
+    return gini_counts_ref(x, y, leaf, thresholds, n_classes)
+
+
+def split_evaluate(x, y, leaf, thresholds, n_classes: int, *,
+                   backend=None, use_pallas: bool = None,
+                   interpret: bool = None, block_n: int = 1024):
+    """Returns (below [L, C, F], total [L, C]) over valid rows only.
+
+    ``backend`` picks the implementation (None = auto-select).  The
+    legacy ``use_pallas``/``interpret`` flags keep their meaning when
+    set explicitly; leaving everything unset now auto-selects
+    (``jnp_ref`` off-TPU — the old default was the interpret kernel).
+    """
+    return legacy_launch("gini_split", x, y, leaf, thresholds, n_classes,
+                         backend=backend, use_pallas=use_pallas,
+                         interpret=interpret, block_n=block_n)
+
+
+register_op("gini_split", family="gini_split",
+            pallas=_split_pallas, ref=_split_ref)

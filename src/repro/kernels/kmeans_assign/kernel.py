@@ -17,8 +17,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from ..pallas_compat import pallas_call, pl
 
 
 def _kmeans_kernel(x_ref, c_ref, labels_ref, sums_ref, counts_ref):
@@ -58,7 +58,7 @@ def kmeans_assign(x_q: jnp.ndarray, c_q: jnp.ndarray, *,
     bn = min(block_n, n)
     assert n % bn == 0, (n, bn)
     grid = (n // bn,)
-    return pl.pallas_call(
+    return pallas_call(
         _kmeans_kernel,
         grid=grid,
         in_specs=[
@@ -75,7 +75,6 @@ def kmeans_assign(x_q: jnp.ndarray, c_q: jnp.ndarray, *,
             jax.ShapeDtypeStruct((k, f), jnp.int32),
             jax.ShapeDtypeStruct((k,), jnp.int32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("arbitrary",)),
+        dimension_semantics=("arbitrary",),
         interpret=interpret,
     )(x_q, c_q)

@@ -17,7 +17,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+
+from ..pallas_compat import pallas_call, pl
 
 
 def _lut_sigmoid_kernel(x_ref, lut_ref, o_ref, *, value_frac: int):
@@ -44,7 +45,7 @@ def lut_sigmoid_vmem(x_q: jnp.ndarray, table: jnp.ndarray, *,
     rows, lanes = x_q.shape
     br = min(block_rows, rows)
     assert rows % br == 0, (rows, br)
-    return pl.pallas_call(
+    return pallas_call(
         functools.partial(_lut_sigmoid_kernel, value_frac=value_frac),
         grid=(rows // br,),
         in_specs=[

@@ -17,8 +17,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from ..pallas_compat import pallas_call, pl, vmem_scratch
 
 
 def _quant_matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
@@ -53,7 +53,7 @@ def int_matmul(a_q: jnp.ndarray, b_q: jnp.ndarray, *, bm: int = 128,
     n_k = k // bk
 
     grid = (m // bm, n // bn, n_k)
-    return pl.pallas_call(
+    return pallas_call(
         functools.partial(_quant_matmul_kernel, n_k=n_k),
         grid=grid,
         in_specs=[
@@ -62,8 +62,44 @@ def int_matmul(a_q: jnp.ndarray, b_q: jnp.ndarray, *, bm: int = 128,
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        scratch_shapes=[vmem_scratch((bm, bn), jnp.int32)],
+        dimension_semantics=("parallel", "parallel", "arbitrary"),
         interpret=interpret,
     )(a_q, b_q)
+
+
+def _fx_matvec_kernel(x_ref, w_ref, o_ref, *, frac_bits: int):
+    x = x_ref[...].astype(jnp.int32)                 # (bn, F)
+    w = w_ref[...].astype(jnp.int32)                 # (1, F)
+    prod = x * w                                     # Q(2f)
+    if frac_bits:
+        prod = (prod + (1 << (frac_bits - 1))) >> frac_bits
+    o_ref[...] = jnp.sum(prod, axis=1)               # (bn,) Q(f)
+
+
+@functools.partial(jax.jit, static_argnames=("frac_bits", "block_n",
+                                             "interpret"))
+def fx_matvec(x_q: jnp.ndarray, w_q: jnp.ndarray, *, frac_bits: int,
+              block_n: int = 1024, interpret: bool = False) -> jnp.ndarray:
+    """Q-format row-dot: int32[N, F] x int32[F] -> int32[N], each product
+    shifted back to Q(frac_bits) with round-to-nearest BEFORE accumulation
+    (the paper's 32-bit DPU dot-product ordering; bit-identical to
+    ``fixed_point.fx_dot``).  VPU work: rows stream through the grid, the
+    weight vector stays pinned — the kernel-tier path of the LIN/LOG
+    INT32 versions' matmul."""
+    n, f = x_q.shape
+    assert w_q.shape == (f,), (x_q.shape, w_q.shape)
+    bn = min(block_n, n)
+    assert n % bn == 0, (n, bn)
+    return pallas_call(
+        functools.partial(_fx_matvec_kernel, frac_bits=frac_bits),
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, f), lambda i: (i, 0)),
+            pl.BlockSpec((1, f), lambda i: (0, 0)),  # weights pinned
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        dimension_semantics=("arbitrary",),
+        interpret=interpret,
+    )(x_q, w_q.reshape(1, f))

@@ -1,14 +1,21 @@
-"""jit'd public wrappers around the quantized matmul kernel.
+"""Dispatchable wrappers around the quantized matmul kernel family.
 
-``quant_matmul``   : dequantizing int8 matmul (kernel or XLA ref path)
-``quant_dense``    : float-in/float-out PIM-style dense layer — quantizes
-                     activations on the fly (per-tensor) against int8
-                     weights (per-output-channel scales), the direct
-                     TPU analogue of LIN-HYB feeding an LM linear layer.
+Ops (registered with :mod:`repro.kernels.dispatch`):
 
-``use_pallas=False`` routes to the pure-jnp oracle; that path is what the
-multi-pod dry-run lowers (Mosaic kernels only lower for real TPU targets —
-DESIGN.md §6), and XLA fuses it into a single int8 MXU matmul on TPU anyway.
+``quant_matmul`` : dequantizing int8 matmul (kernel or XLA ref path)
+``int_matmul``   : raw int8 x int8 -> int32 accumulator
+``fx_matvec``    : Q-format row-dot with pre-accumulation rounding —
+                   the kernel-tier path of the LIN/LOG INT32 versions'
+                   matmul (bit-identical to ``fixed_point.fx_dot``)
+``quant_dense``  : float-in/float-out PIM-style dense layer — quantizes
+                   activations on the fly (per-tensor) against int8
+                   weights (per-output-channel scales), the direct
+                   TPU analogue of LIN-HYB feeding an LM linear layer.
+
+The ``jnp_ref`` backend routes to the pure-jnp oracles; that path is
+what the multi-pod dry-run lowers (Mosaic kernels only lower for real
+TPU targets — DESIGN.md §6), and XLA fuses it into a single int8 MXU
+matmul on TPU anyway.
 """
 from __future__ import annotations
 
@@ -18,23 +25,72 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quantization import symmetric_quantize
+from ..dispatch import legacy_launch, register_op
+from .kernel import fx_matvec as _fx_matvec_kernel
 from .kernel import int_matmul
 from .ref import int_matmul_ref, quant_matmul_ref
 
 
-def quant_matmul(a_q, b_q, a_scale, b_scale, *, use_pallas: bool = True,
-                 interpret: bool = True, out_dtype=jnp.float32):
-    if use_pallas:
-        acc = int_matmul(a_q, b_q, interpret=interpret)
-    else:
-        acc = int_matmul_ref(a_q, b_q)
+def quant_matmul(a_q, b_q, a_scale, b_scale, *, backend=None,
+                 use_pallas: bool = None, interpret: bool = None,
+                 out_dtype=jnp.float32):
+    """Dequantizing int8 matmul.  ``backend`` None = auto-select
+    (``jnp_ref`` off-TPU; the old default was the interpret kernel —
+    pass ``use_pallas=True`` explicitly to force the kernel path)."""
+    return legacy_launch("quant_matmul", a_q, b_q, a_scale, b_scale,
+                         backend=backend, use_pallas=use_pallas,
+                         interpret=interpret, out_dtype=out_dtype)
+
+
+def fx_matvec(x_q, w_q, frac_bits: int, *, backend=None,
+              use_pallas: bool = None, interpret: bool = None,
+              block_n: int = 1024):
+    """Q(f)[N, F] . Q(f)[F] -> Q(f)[N] with per-product rounding."""
+    return legacy_launch("fx_matvec", x_q, w_q, frac_bits,
+                         backend=backend, use_pallas=use_pallas,
+                         interpret=interpret, block_n=block_n)
+
+
+def _fx_matvec_ref(x_q, w_q, frac_bits: int, *, block_n: int = 1024):
+    from repro.core.fixed_point import fx_dot
+    del block_n  # jnp oracle needs no tiling
+    return fx_dot(x_q, w_q, frac_bits)
+
+
+def _fx_matvec_pallas(x_q, w_q, frac_bits: int, *, interpret: bool = True,
+                      block_n: int = 1024):
+    n = x_q.shape[0]
+    bn = min(block_n, max(n, 8))
+    n_pad = -(-n // bn) * bn
+    if n_pad != n:  # ragged tail: zero rows dot to zero, slice them off
+        x_q = jnp.zeros((n_pad, x_q.shape[1]),
+                        x_q.dtype).at[:n].set(x_q)
+    out = _fx_matvec_kernel(x_q, w_q, frac_bits=frac_bits, block_n=bn,
+                            interpret=interpret)
+    return out[:n]
+
+
+def _int_matmul_ref_op(a_q, b_q, *, bm=128, bn=128, bk=128):
+    del bm, bn, bk  # jnp oracle needs no tiling
+    return int_matmul_ref(a_q, b_q)
+
+
+def _int_matmul_pallas(a_q, b_q, *, interpret: bool = True, bm=128,
+                       bn=128, bk=128):
+    return int_matmul(a_q, b_q, bm=bm, bn=bn, bk=bk, interpret=interpret)
+
+
+def _quant_matmul_pallas(a_q, b_q, a_scale, b_scale, *,
+                         interpret: bool = True, out_dtype=jnp.float32):
+    acc = int_matmul(a_q, b_q, interpret=interpret)
     return (acc.astype(jnp.float32) * (a_scale * b_scale)).astype(out_dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+@functools.partial(jax.jit, static_argnames=("backend", "use_pallas",
+                                             "interpret"))
 def quant_dense(x: jnp.ndarray, w_q: jnp.ndarray, w_scale: jnp.ndarray,
-                *, use_pallas: bool = False,
-                interpret: bool = True) -> jnp.ndarray:
+                *, backend=None, use_pallas: bool = None,
+                interpret: bool = None) -> jnp.ndarray:
     """x: float [..., K]; w_q: int8 [K, N]; w_scale: [1, N] per-channel.
 
     Activations are quantized per-tensor on the fly (symmetric), matmul'd
@@ -45,6 +101,14 @@ def quant_dense(x: jnp.ndarray, w_q: jnp.ndarray, w_scale: jnp.ndarray,
     k = x.shape[-1]
     x2 = x.reshape(-1, k)
     x_q, xp = symmetric_quantize(x2, bits=8)
-    out = quant_matmul(x_q, w_q, xp.scale, w_scale,
+    out = quant_matmul(x_q, w_q, xp.scale, w_scale, backend=backend,
                        use_pallas=use_pallas, interpret=interpret)
     return out.reshape(*lead, -1).astype(x.dtype)
+
+
+register_op("int_matmul", family="quant_matmul",
+            pallas=_int_matmul_pallas, ref=_int_matmul_ref_op)
+register_op("quant_matmul", family="quant_matmul",
+            pallas=_quant_matmul_pallas, ref=quant_matmul_ref)
+register_op("fx_matvec", family="quant_matmul",
+            pallas=_fx_matvec_pallas, ref=_fx_matvec_ref)

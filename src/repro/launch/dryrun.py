@@ -32,7 +32,8 @@ from repro.distributed.sharding import (batch_shardings, cache_shardings,
                                         param_shardings,
                                         param_shardings_fsdp)
 from repro.launch.analytic import model_flops
-from repro.launch.hlo_analysis import corrected_totals
+from repro.launch.hlo_analysis import (corrected_totals,
+                                       normalize_cost_analysis)
 from repro.launch.mesh import describe, make_production_mesh
 from repro.models.api import Model, input_specs
 from repro.optim.adam import AdamW
@@ -194,7 +195,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
-            cost = compiled.cost_analysis()
+            cost = normalize_cost_analysis(compiled.cost_analysis())
             hlo = compiled.as_text()
         coll = collective_bytes_from_hlo(hlo)
         corrected = corrected_totals(hlo)

@@ -22,6 +22,24 @@ import json
 import re
 from typing import Dict, List, Optional, Tuple
 
+def normalize_cost_analysis(ca) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions.
+
+    Older jax returns a **list** of per-partition property dicts
+    (usually length 1); newer jax returns the dict directly.  Every
+    consumer in this repo goes through this helper and indexes the
+    result as a plain dict (multi-partition lists fall back to the
+    first entry — the repo compiles single-partition executables).
+    """
+    if ca is None:
+        return {}
+    if isinstance(ca, dict):
+        return ca
+    if isinstance(ca, (list, tuple)):
+        return dict(ca[0]) if ca else {}
+    return dict(ca)
+
+
 _DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8,
                 "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
                 "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "u64": 8,

@@ -56,6 +56,10 @@ def main(argv=None):
                     help="override n_iters/max_iter when > 0")
     ap.add_argument("--reduce", default="fabric",
                     choices=("fabric", "host", "hierarchical"))
+    ap.add_argument("--kernel-backend", default=None,
+                    choices=("pallas_tpu", "pallas_interpret", "jnp_ref"),
+                    help="kernel-dispatch backend for the trainer hot "
+                         "paths (default: per-platform auto-selection)")
     ap.add_argument("--sweep", default="",
                     help="hyper sweep, e.g. lr=0.05,0.1,0.2")
     ap.add_argument("--param", action="append", default=[],
@@ -68,6 +72,8 @@ def main(argv=None):
                 or list(wl.versions))
     params = dict(p.split("=", 1) for p in args.param)
     params = {k: _parse_value(v) for k, v in params.items()}
+    if args.kernel_backend:
+        params["kernel_backend"] = args.kernel_backend
     if args.iters > 0:
         iter_key = next((k for k in ("max_iter", "n_iters")
                          if k in wl.defaults), None)

@@ -4,7 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.launch.hlo_analysis import corrected_totals, parse_hlo
+from repro.launch.hlo_analysis import (corrected_totals,
+                                       normalize_cost_analysis, parse_hlo)
 
 
 def _compile(fn, *specs):
@@ -52,9 +53,20 @@ def test_cost_analysis_undercount_documented():
                             length=8)[0]
 
     compiled = jax.jit(f).lower(a).compile()
-    raw = compiled.cost_analysis()["flops"]
+    # cost_analysis() is a list of dicts on some jax versions and a
+    # plain dict on others; the normalizer hides the drift
+    raw = normalize_cost_analysis(compiled.cost_analysis())["flops"]
     corrected = corrected_totals(compiled.as_text())["flops"]
     assert corrected == pytest.approx(8 * raw, rel=0.01)
+
+
+def test_normalize_cost_analysis_shapes():
+    """The helper accepts every historical return shape."""
+    assert normalize_cost_analysis(None) == {}
+    assert normalize_cost_analysis({"flops": 2.0}) == {"flops": 2.0}
+    assert normalize_cost_analysis([{"flops": 2.0}]) == {"flops": 2.0}
+    assert normalize_cost_analysis(({"flops": 2.0},)) == {"flops": 2.0}
+    assert normalize_cost_analysis([]) == {}
 
 
 def test_parse_hlo_finds_entry():

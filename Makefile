@@ -1,9 +1,9 @@
-# Developer entry points.  `make check` is the fast gate (<60 s);
+# Developer entry points.  `make check` is the fast gate (~1 min);
 # `make test` is the full tier-1 suite; `make bench` prints the paper
-# figure reproductions as CSV.
+# figure reproductions as CSV; `make jobs` runs the scheduler demo.
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check test bench quickstart
+.PHONY: check test bench quickstart jobs
 
 check:
 	./scripts/ci.sh
@@ -16,3 +16,6 @@ bench:
 
 quickstart:
 	PYTHONPATH=$(PYTHONPATH) python examples/quickstart.py
+
+jobs:
+	PYTHONPATH=$(PYTHONPATH) python -m repro.launch.pim_jobs --demo

@@ -17,6 +17,7 @@ MODULES = [
     "benchmarks.fig13_17_compare",      # paper Fig. 13-17, Tab. 5-7
     "benchmarks.kernels_bench",         # Pallas kernels (interpret)
     "benchmarks.dispatch_bench",        # backend dispatch parity/time
+    "benchmarks.sched_bench",           # job scheduler: fused vs serial
     "benchmarks.lm_ablation",           # beyond-paper LM ablations
     "benchmarks.serve_bench",           # serving throughput
     "benchmarks.roofline_summary",      # dry-run roofline terms (§Perf)

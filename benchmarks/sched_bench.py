@@ -1,0 +1,123 @@
+"""Scheduler benchmark: fused gang-stepped sweeps vs serial fits.
+
+Measures the multi-tenant subsystem (DESIGN.md §7) on a K-point
+learning-rate sweep of LIN gradient descent:
+
+  serial    K back-to-back ``fit``s on the whole mesh (the pre-scheduler
+            baseline) — K kernel launches per step-equivalent;
+  gang      K jobs on disjoint rank slices advanced round-robin — same
+            launch count, but concurrent tenancy;
+  fused     one gang on one slice, one *batched* launch per step.
+
+Reports makespan (wall seconds for all K fits), throughput (jobs/s), and
+the accuracy check that the fused sweep's coefficients match serial
+bit-for-bit (integer GD is exact).  Results are also written to
+``benchmarks/out/sched_bench.json`` so the makespan claim is recorded.
+
+  PYTHONPATH=src python -m benchmarks.sched_bench
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.api import PimConfig, PimSystem, make_estimator
+from repro.data.synthetic import make_linear_dataset
+from repro.sched import PimScheduler
+
+N_SAMPLES, N_FEATURES = 2048, 16
+N_ITERS = 120
+LRS = [0.02, 0.04, 0.06, 0.08, 0.1, 0.15, 0.2, 0.3]
+VERSION = "int32"
+CORES = 16
+OUT_PATH = os.path.join(os.path.dirname(__file__), "out",
+                        "sched_bench.json")
+
+
+def _serial(X, y, lrs):
+    """K sequential whole-mesh fits through the session API."""
+    pim = PimSystem(PimConfig(n_cores=CORES))
+    ds = pim.put(X, y)
+    coefs = []
+    for lr in lrs:
+        est = make_estimator("linreg", version=VERSION, lr=lr,
+                             n_iters=N_ITERS, pim=pim).fit(ds)
+        coefs.append(est.coef_)
+    return coefs
+
+
+def _sweep(X, y, lrs, fused: bool):
+    system = PimSystem(PimConfig(n_cores=CORES))
+    sched = PimScheduler(system, rank_size=CORES if fused else
+                         CORES // len(lrs) or 1)
+    handles = sched.sweep("linreg", (X, y), {"lr": lrs}, version=VERSION,
+                          n_iters=N_ITERS,
+                          n_cores=CORES if fused else None, fused=fused)
+    sched.drain()
+    bad = [h for h in handles if h.state.value != "done"]
+    if bad:
+        raise RuntimeError(f"sweep jobs did not finish: {bad}")
+    return [h.result.attributes["coef_"] for h in handles]
+
+
+def run():
+    X, y, _ = make_linear_dataset(N_SAMPLES, N_FEATURES, seed=0)
+    k = len(LRS)
+
+    # warmup: exercise every path once at full K (each timed branch
+    # still pays its own jit compile — fresh systems/slices on both
+    # sides — but process-level jax warmup is amortized out)
+    _serial(X, y, LRS[:1])
+    _sweep(X, y, LRS, fused=True)
+    _sweep(X, y, LRS, fused=False)
+
+    t0 = time.perf_counter()
+    ref = _serial(X, y, LRS)
+    t_serial = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    gang = _sweep(X, y, LRS, fused=False)
+    t_gang = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    fused = _sweep(X, y, LRS, fused=True)
+    t_fused = time.perf_counter() - t0
+
+    exact_fused = all(np.array_equal(a, b) for a, b in zip(ref, fused))
+    exact_gang = all(np.array_equal(a, b) for a, b in zip(ref, gang))
+    result = {
+        "k_jobs": k,
+        "n_iters": N_ITERS,
+        "version": VERSION,
+        "serial_makespan_s": t_serial,
+        "gang_makespan_s": t_gang,
+        "fused_makespan_s": t_fused,
+        "serial_jobs_per_s": k / t_serial,
+        "gang_jobs_per_s": k / t_gang,
+        "fused_jobs_per_s": k / t_fused,
+        "fused_speedup_over_serial": t_serial / t_fused,
+        "fused_matches_serial_bitwise": exact_fused,
+        "gang_matches_serial_bitwise": exact_gang,
+    }
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as fh:
+        json.dump(result, fh, indent=2)
+
+    return [
+        row(f"sched.serial.K{k}", t_serial * 1e6 / k,
+            f"makespan={t_serial:.3f}s"),
+        row(f"sched.gang.K{k}", t_gang * 1e6 / k,
+            f"makespan={t_gang:.3f}s;exact={exact_gang}"),
+        row(f"sched.fused.K{k}", t_fused * 1e6 / k,
+            f"makespan={t_fused:.3f}s;exact={exact_fused};"
+            f"speedup={t_serial / t_fused:.2f}x"),
+    ]
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

@@ -1,0 +1,91 @@
+"""Job-queue walkthrough: the multi-tenant PIM training service.
+
+Shows the full scheduler surface (DESIGN.md §7): rank-aligned bank
+allocation, a mixed LIN/LOG/KME queue gang-stepped concurrently, failure
+isolation, per-job transfer accounting, priorities, and a fused
+learning-rate sweep that advances 4 jobs with one batched kernel launch
+per step.
+
+  PYTHONPATH=src python examples/job_queue.py
+"""
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.api import PimConfig, PimSystem
+from repro.data.synthetic import make_blobs, make_linear_dataset
+from repro.sched import JobState, PimScheduler
+
+
+def show(handles, title):
+    print(f"\n{title}")
+    for h in handles:
+        extra = ""
+        if h.error is not None:
+            extra = f"  !! {type(h.error).__name__}: {h.error}"
+        elif h.transfer is not None:
+            extra = (f"  launches={h.transfer.kernel_launches}"
+                     f" cpu->pim={h.transfer.cpu_to_pim:,}B"
+                     f" dpu={h.modeled_seconds:.2e}s")
+        print(f"  {h.name[:34]:34s} {h.state.value:10s} "
+              f"cores={h.n_cores:<3d} steps={h.steps:<4d}{extra}")
+
+
+def main():
+    print("=== PIM job scheduler walkthrough (DESIGN.md §7) ===")
+    # A 32-core machine carved into ranks of 4 (UPMEM hands out ranks
+    # of 64 DPUs; the default rank_size=64 clamps to the machine).
+    system = PimSystem(PimConfig(n_cores=32))
+    sched = PimScheduler(system, rank_size=4)
+
+    X, y, _ = make_linear_dataset(2048, 16, seed=0)
+    Xb, _, _ = make_blobs(4096, 8, centers=8, seed=1)
+
+    # -- 1. a mixed queue: LIN + LOG + KME, one job designed to fail ----------
+    handles = [
+        sched.submit("linreg", (X, y), version="int32", n_iters=60,
+                     n_cores=8),
+        sched.submit("logreg", (X, y), version="int32_lut_wram",
+                     n_iters=60, n_cores=8, priority=2),
+        sched.submit("kmeans", Xb, n_clusters=8, max_iter=30, n_cores=8),
+        # more clusters than points: raises inside fit — the scheduler
+        # isolates it and the rest of the queue drains normally
+        sched.submit("kmeans", Xb[:4], n_clusters=8, name="poison"),
+    ]
+    sched.step()     # one scheduling turn: everything fits, all admitted
+    frag = sched.fragmentation()
+    print(f"\nafter one turn: {frag.used_cores}/{frag.total_cores} cores "
+          f"leased in {frag.n_leases} slices "
+          f"(frag={frag.external_fragmentation:.2f})")
+    sched.drain()
+    show(handles, "mixed queue (note the isolated failure):")
+
+    # -- 2. fused sweep: 4 learning rates, ONE kernel launch per step ---------
+    snap = system.stats.snapshot()
+    t0 = time.perf_counter()
+    fused = sched.sweep("linreg", (X, y), {"lr": [0.05, 0.1, 0.2, 0.4]},
+                        version="hyb", n_iters=60, n_cores=8, fused=True)
+    sched.drain()
+    dt = time.perf_counter() - t0
+    show(fused, f"fused 4-point lr sweep ({dt:.2f}s wall):")
+    d = system.stats.delta(snap)
+    print(f"  whole gang: {d.kernel_launches} kernel launches for "
+          f"4 jobs x 60 steps (1 batched launch/step), "
+          f"{d.shard_transfers} shard transfers (one resident dataset)")
+
+    # -- 3. results are real fits -------------------------------------------
+    best = max((h for h in fused if h.state is JobState.DONE),
+               key=lambda h: -np.mean(
+                   (X @ h.result.attributes["coef_"]
+                    + h.result.attributes["intercept_"] - y) ** 2))
+    print(f"\nbest sweep point: {best.name} "
+          f"(lr={best.spec.params['lr']}), "
+          f"w[:3]={np.round(best.result.attributes['coef_'][:3], 3)}")
+    print(f"scheduler totals: {sched.stats()['jobs']}")
+
+
+if __name__ == "__main__":
+    main()

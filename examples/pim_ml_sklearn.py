@@ -1,8 +1,9 @@
 """The paper's scikit-learn estimator interface (§4) in action.
 
-Both construction paths are shown: the workload registry
-(``make_estimator``) and the legacy class names, which are now thin
-shims over the same registry.
+Three construction paths are shown: the workload registry
+(``make_estimator``), the legacy class names (deprecation shims over
+the same registry), and the job scheduler's sweep surface — the
+multi-tenant way to fit a hyperparameter grid (DESIGN.md §7).
 
   PYTHONPATH=src python examples/pim_ml_sklearn.py
 """
@@ -12,10 +13,11 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.api import make_estimator
+from repro.api import PimConfig, PimSystem, make_estimator
 from repro.core.estimators import PimDecisionTreeClassifier, PimKMeans
 from repro.data.synthetic import (make_blobs, make_classification,
                                   make_linear_dataset)
+from repro.sched import PimScheduler
 
 
 def main():
@@ -39,6 +41,19 @@ def main():
     km = PimKMeans(n_clusters=8, n_init=2).fit(Xb)
     print(f"PimKMeans                        inertia = {km.inertia_:.3e}, "
           f"centers {km.cluster_centers_.shape}")
+
+    # single fits above; the scheduler fits a whole grid concurrently —
+    # the GD points fuse into one batched kernel launch per step
+    sched = PimScheduler(PimSystem(PimConfig(n_cores=16)), rank_size=4)
+    handles = sched.sweep("linreg", (X, y), {"lr": [0.05, 0.1, 0.2]},
+                          version="bui", n_iters=400, n_cores=8)
+    sched.drain()
+    from repro.api import get_workload
+    lin = get_workload("linreg")
+    for h in handles:
+        print(f"sched.sweep('linreg','bui') lr={h.spec.params['lr']:<5}"
+              f" R^2 = {lin.score(h.result, X, y):.4f}  "
+              f"[{h.state.value}, fused={h.fused}]")
 
 
 if __name__ == "__main__":

@@ -1,17 +1,20 @@
 #!/usr/bin/env bash
-# Fast CI tier (<60 s): the PIM-ML core — session/dataset/registry API,
+# Fast CI tier (~1 min): the PIM-ML core — session/dataset/registry API,
 # execution model, numerics, metrics — plus the kernel tier's dispatch
-# parity (interpret-mode Pallas vs jnp-ref) and the small-shape kernel
-# cases; large-shape kernel cases are marked @slow.  The LM-stack
-# breadth (arch smoke matrix, serving, multi-device subprocess
-# equivalence) and the quality reproduction run in the full tier-1
-# suite: `make test` / plain pytest.
+# parity (interpret-mode Pallas vs jnp-ref), the small-shape kernel
+# cases, the job-scheduler core (allocator/slices/queue/failure
+# isolation), and the legacy deprecation surface; large-shape kernel
+# cases, large-K queues, and fused-sweep execution are marked @slow.
+# The LM-stack breadth (arch smoke matrix, serving, multi-device
+# subprocess equivalence) and the quality reproduction run in the full
+# tier-1 suite: `make test` / plain pytest.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 exec python -m pytest -q -m "not slow" \
     tests/test_api.py \
     tests/test_collectives.py \
+    tests/test_deprecation.py \
     tests/test_dispatch.py \
     tests/test_estimators.py \
     tests/test_fixed_point.py \
@@ -20,5 +23,6 @@ exec python -m pytest -q -m "not slow" \
     tests/test_metrics.py \
     tests/test_pim_system.py \
     tests/test_quantization.py \
+    tests/test_sched.py \
     tests/test_sgd_and_loader.py \
     "$@"

@@ -34,10 +34,25 @@ from .registry import (FitResult, TrainerSpec, Workload, get_workload,
 from .workloads import kmeans_sq_distances  # noqa: F401 — also registers
                                             # the four paper workloads
 
+#: scheduler-subsystem names re-exported lazily (PEP 562) — repro.sched
+#: imports this package's submodules, so an eager import here would
+#: cycle during ``import repro.sched``.
+_SCHED_EXPORTS = ("BankAllocator", "BankLease", "FragmentationStats",
+                  "JobHandle", "JobState", "PimScheduler", "PimSlice")
+
+
+def __getattr__(name: str):
+    if name in _SCHED_EXPORTS:
+        from .. import sched
+        return getattr(sched, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
 __all__ = [
     "DpuCostModel", "FabricReduce", "FitResult", "HierarchicalReduce",
     "HostReduce", "PimConfig", "PimDataset", "PimEstimator", "PimSystem",
     "ReduceStrategy", "ReduceVia", "TrainerSpec", "TransferStats",
     "Workload", "get_workload", "kmeans_sq_distances", "list_workloads",
     "make_estimator", "register_workload", "resolve_reduce_strategy",
+    *_SCHED_EXPORTS,
 ]

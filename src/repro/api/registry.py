@@ -93,6 +93,18 @@ class Workload:
     def fit(self, dataset: PimDataset, spec: TrainerSpec) -> FitResult:
         raise NotImplementedError
 
+    def fit_steps(self, dataset: PimDataset, spec: TrainerSpec):
+        """Generator: advance the fit by one host-orchestrated PIM step
+        per ``next()``; the FitResult travels on StopIteration.
+
+        This is the surface the job scheduler gang-steps (DESIGN.md
+        §7.3).  The default runs :meth:`fit` as a single macro-step, so
+        every workload is schedulable; iterative workloads override it
+        with their trainer's true per-iteration generator."""
+        result = self.fit(dataset, spec)
+        yield 1
+        return result
+
     def predict(self, result: FitResult, X):
         raise NotImplementedError
 

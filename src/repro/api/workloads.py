@@ -54,6 +54,10 @@ class LinRegWorkload(Workload):
         r = linreg.fit(dataset, self._config(spec))
         return FitResult(spec, r, {"coef_": r.w, "intercept_": r.b})
 
+    def fit_steps(self, dataset, spec: TrainerSpec):
+        r = yield from linreg.fit_steps(dataset, self._config(spec))
+        return FitResult(spec, r, {"coef_": r.w, "intercept_": r.b})
+
     def predict(self, result: FitResult, X):
         return result.model.predict(np.asarray(X))
 
@@ -82,6 +86,10 @@ class LogRegWorkload(Workload):
 
     def fit(self, dataset, spec: TrainerSpec) -> FitResult:
         r = logreg.fit(dataset, self._config(spec))
+        return FitResult(spec, r, {"coef_": r.w, "intercept_": r.b})
+
+    def fit_steps(self, dataset, spec: TrainerSpec):
+        r = yield from logreg.fit_steps(dataset, self._config(spec))
         return FitResult(spec, r, {"coef_": r.w, "intercept_": r.b})
 
     def decision_function(self, result: FitResult, X):
@@ -117,6 +125,11 @@ class DecisionTreeWorkload(Workload):
         return FitResult(spec, tree,
                          {"tree_": tree, "n_nodes_": tree.n_nodes})
 
+    def fit_steps(self, dataset, spec: TrainerSpec):
+        tree = yield from dtree.fit_steps(dataset, self._config(spec))
+        return FitResult(spec, tree,
+                         {"tree_": tree, "n_nodes_": tree.n_nodes})
+
     def predict(self, result: FitResult, X):
         return result.model.predict(np.asarray(X))
 
@@ -143,6 +156,13 @@ class KMeansWorkload(Workload):
 
     def fit(self, dataset, spec: TrainerSpec) -> FitResult:
         r = kmeans.fit(dataset, self._config(spec))
+        return FitResult(spec, r, {"cluster_centers_": r.centroids,
+                                   "inertia_": r.inertia,
+                                   "labels_": r.labels,
+                                   "n_iter_": r.n_iters})
+
+    def fit_steps(self, dataset, spec: TrainerSpec):
+        r = yield from kmeans.fit_steps(dataset, self._config(spec))
         return FitResult(spec, r, {"cluster_centers_": r.centroids,
                                    "inertia_": r.inertia,
                                    "labels_": r.labels,

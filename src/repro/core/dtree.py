@@ -25,6 +25,7 @@ benefit is captured by the DPU cost model.  Commit updates are O(n) gathers
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import jax
@@ -32,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import dispatch
-from .pim import PimSystem
+from .pim import PimSystem, run_steps
 
 
 @dataclasses.dataclass
@@ -173,12 +174,10 @@ def gini_score(below: np.ndarray, total: np.ndarray) -> np.ndarray:
     return (nl * gl + nr * gr) / n
 
 
-def fit(dataset, cfg: Optional[TreeConfig] = None) -> Tree:
-    """Grow one extremely randomized tree over a bank-resident PimDataset.
-
-    The float32 point shards stay resident; per-round only the command
-    arguments (thresholds, split decisions) cross the host<->PIM boundary,
-    exactly the paper's three-command protocol."""
+def fit_steps(dataset, cfg: Optional[TreeConfig] = None):
+    """Generator form of tree growth: one frontier round (min-max ->
+    split-evaluate -> commit) per ``next()``, the Tree on StopIteration —
+    the gang-stepping surface; :func:`fit` drains it."""
     cfg = cfg or TreeConfig()
     pim = dataset.system
     rng = np.random.RandomState(cfg.seed)
@@ -267,14 +266,27 @@ def fit(dataset, cfg: Optional[TreeConfig] = None) -> Tree:
             (jnp.asarray(split_feature), jnp.asarray(split_thresh),
              jnp.asarray(left_id), jnp.asarray(right_id)))
         frontier = new_frontier
+        yield n_nodes
 
     return Tree(feature, threshold, left, right, leaf_class, depth, n_nodes)
+
+
+def fit(dataset, cfg: Optional[TreeConfig] = None) -> Tree:
+    """Grow one extremely randomized tree over a bank-resident PimDataset.
+
+    The float32 point shards stay resident; per-round only the command
+    arguments (thresholds, split decisions) cross the host<->PIM boundary,
+    exactly the paper's three-command protocol."""
+    return run_steps(fit_steps(dataset, cfg))
 
 
 def train(X: np.ndarray, y: np.ndarray, pim: PimSystem,
           cfg: Optional[TreeConfig] = None) -> Tree:
     """Deprecated shim: re-partitions (X, y) on every call.  Prefer
     ``fit(pim.put(X, y), cfg)`` (repro.api)."""
+    warnings.warn("dtree.train(X, y, pim, ...) is deprecated; use "
+                  "dtree.fit(pim.put(X, y), cfg)", DeprecationWarning,
+                  stacklevel=2)
     from ..api.dataset import as_dataset
     return fit(as_dataset(X, y, pim), cfg)
 

@@ -3,7 +3,9 @@
 These are deprecation shims kept for one PR: each class is a thin
 subclass of the generic :class:`repro.api.PimEstimator` facade bound to
 its registered workload — construct new code via
-``repro.api.make_estimator(name, version=...)`` instead.
+``repro.api.make_estimator(name, version=...)`` instead.  Every
+construction emits exactly one :class:`DeprecationWarning`; behaviour is
+otherwise identical to the facade (asserted by tests/test_deprecation.py).
 
 sklearn itself is not installable in this offline container, so the
 facade implements the fit/predict/score/get_params protocol directly;
@@ -13,10 +15,18 @@ sklearn clone round-trip ``cls(**est.get_params())`` reconstructs it.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional
 
 from ..api.estimator import PimEstimator
 from .pim import PimSystem
+
+
+def _warn_legacy(cls_name: str, workload: str) -> None:
+    warnings.warn(
+        f"{cls_name} is deprecated; use "
+        f"repro.api.make_estimator({workload!r}, version=...)",
+        DeprecationWarning, stacklevel=3)
 
 
 class PimLinearRegression(PimEstimator):
@@ -25,6 +35,7 @@ class PimLinearRegression(PimEstimator):
     def __init__(self, version: str = "fp32", n_iters: int = 500,
                  lr: float = 0.1, n_cores: int = 16,
                  pim: Optional[PimSystem] = None, **params):
+        _warn_legacy("PimLinearRegression", "linreg")
         super().__init__("linreg", version=version, n_cores=n_cores,
                          pim=pim, n_iters=n_iters, lr=lr, **params)
 
@@ -35,6 +46,7 @@ class PimLogisticRegression(PimEstimator):
     def __init__(self, version: str = "fp32", n_iters: int = 500,
                  lr: float = 5.0, n_cores: int = 16,
                  pim: Optional[PimSystem] = None, **params):
+        _warn_legacy("PimLogisticRegression", "logreg")
         super().__init__("logreg", version=version, n_cores=n_cores,
                          pim=pim, n_iters=n_iters, lr=lr, **params)
 
@@ -46,6 +58,7 @@ class PimDecisionTreeClassifier(PimEstimator):
                  seed: int = 0, n_cores: int = 16,
                  pim: Optional[PimSystem] = None,
                  version: Optional[str] = None, **params):
+        _warn_legacy("PimDecisionTreeClassifier", "dtree")
         super().__init__("dtree", version=version, n_cores=n_cores,
                          pim=pim, max_depth=max_depth,
                          n_classes=n_classes, seed=seed, **params)
@@ -58,6 +71,7 @@ class PimKMeans(PimEstimator):
                  tol: float = 1e-4, n_init: int = 1, seed: int = 0,
                  n_cores: int = 16, pim: Optional[PimSystem] = None,
                  version: Optional[str] = None, **params):
+        _warn_legacy("PimKMeans", "kmeans")
         super().__init__("kmeans", version=version, n_cores=n_cores,
                          pim=pim, n_clusters=n_clusters,
                          max_iter=max_iter, tol=tol, n_init=n_init,

@@ -21,6 +21,7 @@ on the DPU; quality parity is preserved (ARI ~ 0.999 vs float CPU, §5.1.4).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
 import jax.numpy as jnp
@@ -28,7 +29,7 @@ import numpy as np
 
 from ..kernels import dispatch
 from .metrics import frobenius_shift
-from .pim import PimSystem
+from .pim import PimSystem, run_steps
 
 # 12-bit symmetric range stored in int16 (see docstring).  The quantizing
 # + sharding path, PimDataset.kmeans_view (repro/api/dataset.py), imports
@@ -109,11 +110,13 @@ def _labels_kernel_factory(k: int):
     return _kernel
 
 
-def fit(dataset, cfg: Optional[KMeansConfig] = None,
-        return_labels: bool = True) -> KMeansResult:
-    """Lloyd's over a bank-resident PimDataset.  The int16-quantized view
-    is materialized once; all ``n_init`` restarts — and any later refit
-    with different (k, seed, tol) — reuse the resident shards."""
+def fit_steps(dataset, cfg: Optional[KMeansConfig] = None,
+              return_labels: bool = True):
+    """Generator form of Lloyd's: one assign/update iteration per
+    ``next()`` (across all ``n_init`` restarts), KMeansResult on
+    StopIteration — the gang-stepping surface; :func:`fit` drains it.
+    The end-of-restart inertia/labels passes don't get their own step;
+    they run at the head of the ``next()`` that follows convergence."""
     cfg = cfg or KMeansConfig()
     pim = dataset.system
     n = dataset.n
@@ -149,6 +152,7 @@ def fit(dataset, cfg: Optional[KMeansConfig] = None,
                             sums / np.maximum(counts[:, None], 1), C)
             shift = frobenius_shift(C, newC)
             C = newC.astype(np.float32)
+            yield n_it
             if shift < cfg.tol:
                 break
         part = pim.map_reduce(
@@ -167,11 +171,22 @@ def fit(dataset, cfg: Optional[KMeansConfig] = None,
     return best
 
 
+def fit(dataset, cfg: Optional[KMeansConfig] = None,
+        return_labels: bool = True) -> KMeansResult:
+    """Lloyd's over a bank-resident PimDataset.  The int16-quantized view
+    is materialized once; all ``n_init`` restarts — and any later refit
+    with different (k, seed, tol) — reuse the resident shards."""
+    return run_steps(fit_steps(dataset, cfg, return_labels))
+
+
 def train(X: np.ndarray, pim: PimSystem,
           cfg: Optional[KMeansConfig] = None,
           return_labels: bool = True) -> KMeansResult:
     """Deprecated shim: re-quantizes + re-partitions X on every call.
     Prefer ``fit(pim.put(X), cfg)`` (repro.api)."""
+    warnings.warn("kmeans.train(X, pim, ...) is deprecated; use "
+                  "kmeans.fit(pim.put(X), cfg)", DeprecationWarning,
+                  stacklevel=2)
     from ..api.dataset import as_dataset
     return fit(as_dataset(X, None, pim), cfg, return_labels)
 

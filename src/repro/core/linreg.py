@@ -17,6 +17,7 @@ reduces partials, updates w, and re-broadcasts it.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Optional
 
 import jax
@@ -26,7 +27,7 @@ import numpy as np
 from ..kernels import dispatch
 from .fixed_point import (_shift_round, fx_dot_hybrid, from_fixed,
                           to_fixed)
-from .pim import PimSystem
+from .pim import PimSystem, run_steps
 
 VERSIONS = ("fp32", "int32", "hyb", "bui")
 
@@ -122,29 +123,46 @@ def _grad_to_float(cfg: GdConfig, partial) -> tuple[np.ndarray, float]:
             float(from_fixed(jnp.asarray(gb), cfg.frac_bits)))
 
 
+def build_local_grad(cfg: GdConfig) -> Callable:
+    """The per-core gradient kernel for ``cfg.version`` (unregistered).
+
+    Exposed separately from the named registration so the scheduler's
+    fused gang step can vmap the *same* per-core function over a job
+    axis (DESIGN.md §7.3) — fused and serial paths share one kernel
+    definition and cannot drift numerically."""
+    if cfg.version == "fp32":
+        return _local_grad_fp32
+    if cfg.version == "int32":
+        return make_local_grad_int32(cfg.frac_bits,
+                                     dispatch.resolve_backend(
+                                         cfg.kernel_backend))
+    return make_local_grad_hyb(cfg.x8_frac, cfg.w16_frac, cfg.frac_bits)
+
+
+def grad_kernel_name(cfg: GdConfig) -> str:
+    """Registry name encoding every parameter baked into the kernel."""
+    if cfg.version == "fp32":
+        return "lin.grad/fp32"
+    if cfg.version == "int32":
+        be = dispatch.resolve_backend(cfg.kernel_backend)
+        return f"lin.grad/int32/f{cfg.frac_bits}/{dispatch.backend_tag(be)}"
+    return f"lin.grad/hyb/x{cfg.x8_frac}.w{cfg.w16_frac}.f{cfg.frac_bits}"
+
+
 def _grad_kernel(pim: PimSystem, cfg: GdConfig):
     """Named per-core gradient kernel for the configured version
     (registered once per PimSystem; reused across fits and sweeps)."""
-    if cfg.version == "fp32":
-        return pim.named_kernel("lin.grad/fp32", lambda: _local_grad_fp32)
-    if cfg.version == "int32":
-        be = dispatch.resolve_backend(cfg.kernel_backend)
-        return pim.named_kernel(
-            f"lin.grad/int32/f{cfg.frac_bits}/{dispatch.backend_tag(be)}",
-            lambda: make_local_grad_int32(cfg.frac_bits, be))
-    return pim.named_kernel(
-        f"lin.grad/hyb/x{cfg.x8_frac}.w{cfg.w16_frac}.f{cfg.frac_bits}",
-        lambda: make_local_grad_hyb(cfg.x8_frac, cfg.w16_frac,
-                                    cfg.frac_bits))
+    return pim.named_kernel(grad_kernel_name(cfg),
+                            lambda: build_local_grad(cfg))
 
 
-def fit(dataset, cfg: Optional[GdConfig] = None,
-        eval_fn: Optional[Callable] = None,
-        _local_override: Optional[Callable] = None) -> GdResult:
-    """Full PIM training loop over a bank-resident PimDataset: iterate
-    (kernel -> reduce -> host update -> broadcast) until cfg.n_iters.
-    The dataset's quantized view is materialized at most once per
-    (version, Q-format) — repeated fits reuse the resident shards."""
+def fit_steps(dataset, cfg: Optional[GdConfig] = None,
+              eval_fn: Optional[Callable] = None,
+              _local_override: Optional[Callable] = None):
+    """Generator form of the training loop: one (broadcast -> kernel ->
+    reduce -> host update) PIM iteration per ``next()``; the GdResult
+    travels on StopIteration.  This is the gang-stepping surface the job
+    scheduler interleaves (DESIGN.md §7.3); :func:`fit` drains it."""
     cfg = cfg or GdConfig()
     assert cfg.version in VERSIONS, cfg.version
     pim = dataset.system
@@ -182,7 +200,18 @@ def fit(dataset, cfg: Optional[GdConfig] = None,
                                  or it == cfg.n_iters - 1):
             metric = eval_fn(w, b) if eval_fn else None
             history.append((it + 1, metric))
+        yield it + 1
     return GdResult(w=w, b=float(b), history=history, n_iters=cfg.n_iters)
+
+
+def fit(dataset, cfg: Optional[GdConfig] = None,
+        eval_fn: Optional[Callable] = None,
+        _local_override: Optional[Callable] = None) -> GdResult:
+    """Full PIM training loop over a bank-resident PimDataset: iterate
+    (kernel -> reduce -> host update -> broadcast) until cfg.n_iters.
+    The dataset's quantized view is materialized at most once per
+    (version, Q-format) — repeated fits reuse the resident shards."""
+    return run_steps(fit_steps(dataset, cfg, eval_fn, _local_override))
 
 
 def train(X: np.ndarray, y: np.ndarray, pim: PimSystem,
@@ -192,6 +221,9 @@ def train(X: np.ndarray, y: np.ndarray, pim: PimSystem,
     """Deprecated shim: re-partitions (X, y) on every call.  Prefer
     ``fit(pim.put(X, y), cfg)`` which keeps the shards bank-resident
     across fits (repro.api)."""
+    warnings.warn("linreg.train(X, y, pim, ...) is deprecated; use "
+                  "linreg.fit(pim.put(X, y), cfg)", DeprecationWarning,
+                  stacklevel=2)
     from ..api.dataset import as_dataset
     return fit(as_dataset(X, y, pim), cfg, eval_fn, _local_override)
 

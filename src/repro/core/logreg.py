@@ -17,6 +17,7 @@ and (on TPU) kernel selection.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, Optional
 
 import jax.numpy as jnp
@@ -26,7 +27,7 @@ from ..kernels import dispatch
 from .fixed_point import _shift_round, fx_dot_hybrid
 from .linreg import GdConfig, GdResult, _grad_to_float, _quantize_weights
 from .lut import SigmoidLut, build_sigmoid_lut, taylor_sigmoid_fixed
-from .pim import PimSystem
+from .pim import PimSystem, run_steps
 
 VERSIONS = ("fp32", "int32", "int32_lut_mram", "int32_lut_wram",
             "hyb_lut", "bui_lut")
@@ -134,30 +135,38 @@ def make_local_grad(cfg: LogRegConfig, lut: Optional[SigmoidLut]):
     return _local_hyb_lut
 
 
-def _grad_kernel(pim: PimSystem, cfg: LogRegConfig) -> str:
-    """Named per-core kernel; the name encodes every parameter baked into
-    the closure (version, Q formats, Taylor terms, LUT geometry) so the
-    compiled kernel is reused across fits and never served stale.  The
-    sigmoid LUT is built inside the builder — pay-once like the kernel,
-    not per fit."""
-    name = (f"log.grad/{cfg.version}/f{cfg.frac_bits}"
+def build_local_grad(cfg: LogRegConfig) -> Callable:
+    """Per-core kernel for ``cfg.version`` with its LUT built in
+    (unregistered) — shared by the serial trainer and the scheduler's
+    fused gang step (DESIGN.md §7.3)."""
+    lut = (build_sigmoid_lut(cfg.lut_boundary, cfg.lut_frac_bits)
+           if "lut" in cfg.version else None)
+    return make_local_grad(cfg, lut)
+
+
+def grad_kernel_name(cfg: LogRegConfig) -> str:
+    """Registry name encoding every parameter baked into the closure
+    (version, Q formats, Taylor terms, LUT geometry) so the compiled
+    kernel is reused across fits and never served stale."""
+    return (f"log.grad/{cfg.version}/f{cfg.frac_bits}"
             f".x{cfg.x8_frac}.w{cfg.w16_frac}"
             f".t{cfg.taylor_terms}"
             f".lb{cfg.lut_boundary}.lf{cfg.lut_frac_bits}"
             f"/{dispatch.backend_tag(cfg.kernel_backend)}")
 
-    def build():
-        lut = (build_sigmoid_lut(cfg.lut_boundary, cfg.lut_frac_bits)
-               if "lut" in cfg.version else None)
-        return make_local_grad(cfg, lut)
-    return pim.named_kernel(name, build)
+
+def _grad_kernel(pim: PimSystem, cfg: LogRegConfig) -> str:
+    """Named per-core kernel.  The sigmoid LUT is built inside the
+    builder — pay-once like the kernel, not per fit."""
+    return pim.named_kernel(grad_kernel_name(cfg),
+                            lambda: build_local_grad(cfg))
 
 
-def fit(dataset, cfg: Optional[LogRegConfig] = None,
-        eval_fn: Optional[Callable] = None) -> GdResult:
-    """LOG training over a bank-resident PimDataset.  The data view is
-    shared with LIN (same precision ladder), so a LIN fit followed by a
-    LOG fit on one dataset still transfers the shards once."""
+def fit_steps(dataset, cfg: Optional[LogRegConfig] = None,
+              eval_fn: Optional[Callable] = None):
+    """Generator form of the LOG loop (one PIM iteration per ``next()``,
+    GdResult on StopIteration) — the gang-stepping surface; :func:`fit`
+    drains it."""
     cfg = cfg or LogRegConfig()
     assert cfg.version in VERSIONS, cfg.version
     pim = dataset.system
@@ -182,7 +191,16 @@ def fit(dataset, cfg: Optional[LogRegConfig] = None,
                                  or it == cfg.n_iters - 1):
             metric = eval_fn(w, b) if eval_fn else None
             history.append((it + 1, metric))
+        yield it + 1
     return GdResult(w=w, b=float(b), history=history, n_iters=cfg.n_iters)
+
+
+def fit(dataset, cfg: Optional[LogRegConfig] = None,
+        eval_fn: Optional[Callable] = None) -> GdResult:
+    """LOG training over a bank-resident PimDataset.  The data view is
+    shared with LIN (same precision ladder), so a LIN fit followed by a
+    LOG fit on one dataset still transfers the shards once."""
+    return run_steps(fit_steps(dataset, cfg, eval_fn))
 
 
 def train(X: np.ndarray, y: np.ndarray, pim: PimSystem,
@@ -190,6 +208,9 @@ def train(X: np.ndarray, y: np.ndarray, pim: PimSystem,
           eval_fn: Optional[Callable] = None) -> GdResult:
     """Deprecated shim: re-partitions (X, y) on every call.  Prefer
     ``fit(pim.put(X, y), cfg)`` (repro.api)."""
+    warnings.warn("logreg.train(X, y, pim, ...) is deprecated; use "
+                  "logreg.fit(pim.put(X, y), cfg)", DeprecationWarning,
+                  stacklevel=2)
     from ..api.dataset import as_dataset
     return fit(as_dataset(X, y, pim), cfg, eval_fn)
 

@@ -74,7 +74,15 @@ class TransferStats:
     broadcasts).  ``shard_transfers``/``shard_bytes`` count only dataset
     shard materializations, so callers can assert that a hyperparameter
     sweep over one :class:`PimDataset` pays for the CPU->PIM partition
-    exactly once (DESIGN.md §3).
+    exactly once (DESIGN.md §3).  ``kernel_launches`` counts host-issued
+    kernel dispatches (one per ``map_reduce``/``map_reduce_custom``/
+    ``map_elementwise`` call) — the scheduler's fused gang step is
+    asserted against it (DESIGN.md §7.3).
+
+    ``snapshot()``/``delta(snapshot)`` make the counters attributable
+    when several jobs share one system: snapshot before the job, delta
+    after, and the job's own bytes fall out even though the globals keep
+    interleaving (DESIGN.md §7.2).
     """
 
     cpu_to_pim: int = 0
@@ -82,10 +90,37 @@ class TransferStats:
     inter_core_via_host: int = 0
     shard_transfers: int = 0
     shard_bytes: int = 0
+    kernel_launches: int = 0
 
     def reset(self) -> None:
-        self.cpu_to_pim = self.pim_to_cpu = self.inter_core_via_host = 0
-        self.shard_transfers = self.shard_bytes = 0
+        for field in dataclasses.fields(TransferStats):
+            setattr(self, field.name, 0)
+
+    def snapshot(self) -> "TransferStats":
+        """Point-in-time copy of every counter (a plain TransferStats)."""
+        return TransferStats(**{f.name: getattr(self, f.name)
+                                for f in dataclasses.fields(TransferStats)})
+
+    def delta(self, snapshot: "TransferStats") -> "TransferStats":
+        """Counters accumulated since ``snapshot`` was taken."""
+        return TransferStats(
+            **{f.name: getattr(self, f.name) - getattr(snapshot, f.name)
+               for f in dataclasses.fields(TransferStats)})
+
+
+def run_steps(gen):
+    """Drain a trainer step generator and return its result.
+
+    The iterative trainers expose ``fit_steps(dataset, cfg)`` generators
+    (one host-orchestrated PIM iteration per ``next()``) so the job
+    scheduler can gang-step many fits concurrently; ``fit`` is simply
+    this drain loop.  The fitted result travels on ``StopIteration``.
+    """
+    while True:
+        try:
+            next(gen)
+        except StopIteration as stop:
+            return stop.value
 
 
 # ---------------------------------------------------------------------------
@@ -387,6 +422,7 @@ class PimSystem:
         if step is None:
             step = self._build_step(fn, strat)
             self._jit_cache[key] = step
+        self.stats.kernel_launches += 1
         out = step(tuple(sharded), tuple(replicated))
         self.stats.pim_to_cpu += strat.count_pim_to_cpu(self, out)
         return strat.finalize(self, out)
@@ -409,6 +445,7 @@ class PimSystem:
                         for k, v in partials.items()}
             step = jax.jit(_step)
             self._jit_cache[key] = step
+        self.stats.kernel_launches += 1
         out = step(tuple(sharded), tuple(replicated))
         self.stats.pim_to_cpu += _tree_bytes(out) * self.config.n_cores
         return out
@@ -424,6 +461,7 @@ class PimSystem:
             step = jax.jit(
                 lambda s, r, _fn=fn: self._per_core(_fn, s, r))
             self._jit_cache[key] = step
+        self.stats.kernel_launches += 1
         self.stats.cpu_to_pim += sum(
             np.asarray(v).nbytes for v in replicated) * self.config.n_cores
         return step(tuple(sharded), tuple(replicated))

@@ -1,0 +1,24 @@
+"""Multi-tenant PIM job scheduling (DESIGN.md §7).
+
+The subsystem that turns the workload-session API into a concurrent
+training service: :class:`BankAllocator` carves the cores axis into
+rank-aligned :class:`PimSlice` views (the UPMEM rank-allocation model,
+paper §2.2); :class:`PimScheduler` queues jobs by priority, admits them
+by capacity, gang-steps all running fits round-robin on one host
+thread, and fuses eligible GD sweeps into one batched kernel launch per
+step (:mod:`repro.sched.gang`); :mod:`repro.sched.manifest` is the
+declarative front end the ``repro.launch.pim_jobs`` CLI drives.
+"""
+from .allocator import (DEFAULT_RANK_SIZE, BankAllocator, BankLease,
+                        FragmentationStats, PimSlice, default_rank_size)
+from .gang import FUSABLE_WORKLOADS, FusedGdSweep, fuse_key, plan_fusion
+from .manifest import job_report, load_manifest, run_manifest
+from .scheduler import JobHandle, JobState, PimScheduler
+
+__all__ = [
+    "BankAllocator", "BankLease", "DEFAULT_RANK_SIZE",
+    "FUSABLE_WORKLOADS", "FragmentationStats", "FusedGdSweep",
+    "JobHandle", "JobState", "PimScheduler", "PimSlice",
+    "default_rank_size", "fuse_key", "job_report", "load_manifest",
+    "plan_fusion", "run_manifest",
+]

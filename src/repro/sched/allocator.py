@@ -1,0 +1,233 @@
+"""Bank allocation: carving the cores axis into rank-aligned slices.
+
+The paper's UPMEM runtime hands workloads *ranks* of 64 DPUs (§2.2); the
+2500+ cores are a pool many jobs share.  :class:`BankAllocator` models
+that: the 1-D ``cores`` axis of a :class:`~repro.core.pim.PimSystem` is
+carved into rank-aligned extents with first-fit allocation, reclaim with
+free-extent coalescing, and fragmentation stats (DESIGN.md §7.1).
+
+:class:`PimSlice` is the execution view of a lease: a sub-``PimSystem``
+scoped to the leased cores.  ``shard_rows``/``map_reduce``/``broadcast``
+re-scope automatically because the slice *is* a PimSystem with
+``n_cores = lease.n_cores`` (and, under the shard_map backend, a mesh
+over exactly the leased devices) — existing trainers run unmodified on a
+fraction of the machine.  Slice ``TransferStats`` are slice-local and
+mirror every increment into the parent system's counters, so global
+accounting keeps working while per-job deltas stay attributable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from ..core.pim import PimSystem, TransferStats
+
+#: UPMEM hands workloads DPUs in ranks of 64 (paper §2.2).
+DEFAULT_RANK_SIZE = 64
+
+
+def default_rank_size(n_cores: int) -> int:
+    """The auto-selected rank: the largest divisor of ``n_cores`` not
+    exceeding the UPMEM rank of 64.  This is what "default 64, clamped
+    to the machine" means for core counts that are not multiples of 64
+    (96 -> 48, 100 -> 50, 2556 -> 36): the carving stays rank-aligned
+    without the caller having to pick a rank by hand."""
+    if n_cores <= 0:
+        raise ValueError(f"n_cores must be positive, got {n_cores}")
+    for rank in range(min(DEFAULT_RANK_SIZE, n_cores), 0, -1):
+        if n_cores % rank == 0:
+            return rank
+    return 1  # pragma: no cover — rank 1 always divides
+
+
+@dataclasses.dataclass(frozen=True)
+class BankLease:
+    """A granted, rank-aligned extent of the cores axis."""
+
+    start: int
+    n_cores: int
+
+    @property
+    def stop(self) -> int:
+        return self.start + self.n_cores
+
+
+@dataclasses.dataclass(frozen=True)
+class FragmentationStats:
+    """Allocator occupancy snapshot (DESIGN.md §7.1)."""
+
+    total_cores: int
+    free_cores: int
+    n_leases: int
+    n_free_extents: int
+    largest_free_extent: int
+    #: 1 - largest_free/free: 0 = one contiguous hole, ->1 = shattered
+    external_fragmentation: float
+
+    @property
+    def used_cores(self) -> int:
+        return self.total_cores - self.free_cores
+
+
+class BankAllocator:
+    """First-fit allocator over a 1-D core axis with rank granularity.
+
+    Invariants (asserted by tests/test_sched.py):
+      * every lease is rank-aligned: ``start`` and ``n_cores`` are
+        multiples of ``rank_size`` (requests round UP to whole ranks,
+        mirroring UPMEM's rank-granular DPU allocation);
+      * live leases never overlap;
+      * free extents are kept sorted and coalesced, so releasing every
+        lease always restores one maximal extent ``[0, n_cores)``.
+    """
+
+    def __init__(self, n_cores: int,
+                 rank_size: Optional[int] = None):
+        if n_cores <= 0:
+            raise ValueError(f"n_cores must be positive, got {n_cores}")
+        if rank_size is None:
+            rank_size = default_rank_size(n_cores)
+        else:
+            rank_size = min(rank_size, n_cores)
+            if rank_size <= 0 or n_cores % rank_size:
+                raise ValueError(
+                    f"rank_size {rank_size} must be positive and divide "
+                    f"n_cores {n_cores} (rank-aligned carving)")
+        self.n_cores = n_cores
+        self.rank_size = rank_size
+        self._free: List[tuple] = [(0, n_cores)]   # sorted (start, size)
+        self._leases: dict[int, BankLease] = {}
+
+    def align(self, n_cores: Optional[int]) -> int:
+        """Round a request up to whole ranks (None = one rank)."""
+        if n_cores is None:
+            return self.rank_size
+        if n_cores <= 0:
+            raise ValueError(f"requested n_cores must be positive, "
+                             f"got {n_cores}")
+        ranks = -(-n_cores // self.rank_size)
+        return ranks * self.rank_size
+
+    def allocate(self, n_cores: Optional[int] = None) -> Optional[BankLease]:
+        """First-fit a rank-aligned lease; None when nothing fits.
+
+        Requests larger than the whole machine raise — they could never
+        be satisfied and would livelock any admission loop."""
+        size = self.align(n_cores)
+        if size > self.n_cores:
+            raise ValueError(
+                f"request for {size} cores (rank-aligned) exceeds the "
+                f"machine ({self.n_cores} cores)")
+        for i, (start, extent) in enumerate(self._free):
+            if extent >= size:
+                lease = BankLease(start, size)
+                if extent == size:
+                    del self._free[i]
+                else:
+                    self._free[i] = (start + size, extent - size)
+                self._leases[lease.start] = lease
+                return lease
+        return None
+
+    def release(self, lease: BankLease) -> None:
+        """Reclaim a lease, coalescing adjacent free extents."""
+        if self._leases.pop(lease.start, None) != lease:
+            raise ValueError(f"lease {lease} is not live in this allocator")
+        self._free.append((lease.start, lease.n_cores))
+        self._free.sort()
+        merged: List[tuple] = []
+        for start, size in self._free:
+            if merged and merged[-1][0] + merged[-1][1] == start:
+                merged[-1] = (merged[-1][0], merged[-1][1] + size)
+            else:
+                merged.append((start, size))
+        self._free = merged
+
+    @property
+    def free_cores(self) -> int:
+        return sum(size for _, size in self._free)
+
+    @property
+    def leases(self) -> tuple:
+        return tuple(self._leases.values())
+
+    def fragmentation(self) -> FragmentationStats:
+        free = self.free_cores
+        largest = max((size for _, size in self._free), default=0)
+        return FragmentationStats(
+            total_cores=self.n_cores,
+            free_cores=free,
+            n_leases=len(self._leases),
+            n_free_extents=len(self._free),
+            largest_free_extent=largest,
+            external_fragmentation=(1.0 - largest / free) if free else 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Slice view.
+# ---------------------------------------------------------------------------
+
+_STAT_FIELDS = tuple(f.name for f in dataclasses.fields(TransferStats))
+
+
+class _MirrorStats(TransferStats):
+    """Slice-local counters that forward every *increment* to the parent
+    system's stats.  ``reset()`` zeroes only the slice view — cumulative
+    parent totals are never rolled back (only positive deltas mirror)."""
+
+    def __init__(self, parent: TransferStats):
+        object.__setattr__(self, "_parent", parent)
+        super().__init__()
+
+    def __setattr__(self, name, value):
+        if name in _STAT_FIELDS:
+            delta = value - getattr(self, name, 0)
+            if delta > 0:
+                setattr(self._parent, name,
+                        getattr(self._parent, name) + delta)
+        object.__setattr__(self, name, value)
+
+
+class PimSlice(PimSystem):
+    """A rank-aligned sub-view of a parent :class:`PimSystem`.
+
+    The slice is itself a PimSystem whose ``n_cores`` is the lease size,
+    so every execution-surface method (``put``/``shard_rows``/
+    ``map_reduce``/``broadcast``/named kernels) is automatically scoped
+    to the slice and existing trainers run on it unmodified.  Under the
+    shard_map backend the slice's mesh covers exactly the leased devices
+    ``[lease.start, lease.stop)`` of the parent mesh; under the vmap
+    semantic backend the scoping is in the shard shapes and byte
+    accounting (there is only one physical device either way).
+
+    Under the vmap backend slices share the parent's named-kernel
+    registry and jit cache (compiled steps are mesh-free, and kernel
+    names encode every closure parameter, so sharing is safe and a
+    K-job sweep compiles each kernel once); shard_map slices keep
+    private caches because their mesh is baked into the compiled
+    closures.  Slice ``TransferStats`` mirror into the parent's (see
+    :class:`_MirrorStats`).
+    """
+
+    def __init__(self, parent: PimSystem, lease: BankLease):
+        if lease.stop > parent.config.n_cores:
+            raise ValueError(f"lease {lease} exceeds the parent system "
+                             f"({parent.config.n_cores} cores)")
+        self.parent = parent
+        self.lease = lease
+        devices = None
+        if parent._mesh is not None:
+            devices = list(
+                parent._mesh.devices.ravel()[lease.start:lease.stop])
+        cfg = dataclasses.replace(parent.config, n_cores=lease.n_cores)
+        super().__init__(cfg, devices=devices)
+        self.stats = _MirrorStats(parent.stats)
+        if self._mesh is None:
+            # vmap semantic backend: compiled steps are mesh-free pure
+            # functions of their arguments, so slices share the parent's
+            # kernel registry and jit cache — K same-shape jobs compile
+            # each kernel once, not K times.  (shard_map slices keep
+            # private caches: their mesh is baked into the closures.)
+            self._kernels = parent._kernels
+            self._kernel_gen = parent._kernel_gen
+            self._jit_cache = parent._jit_cache

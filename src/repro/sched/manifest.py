@@ -1,0 +1,166 @@
+"""Job manifests: declarative YAML/JSON input for the training service.
+
+A manifest names one PIM system, a set of synthetic datasets, and the
+jobs/sweeps to run over them; :func:`run_manifest` builds the
+:class:`~repro.sched.scheduler.PimScheduler`, submits everything, drains
+the queue, and returns the handles.  This is the programmatic core of
+the ``repro.launch.pim_jobs`` CLI (DESIGN.md §7.4).
+
+Schema (all sections optional except ``jobs``/``sweeps`` — at least one)::
+
+    system:   {cores: 64, rank_size: 16, reduce: fabric,
+               backfill: false}
+    datasets: {name: {kind: linear|classification|blobs,
+                      samples: N, features: F, seed: S, ...}}
+    jobs:     [{workload: linreg, version: int32, dataset: name,
+                cores: 16, priority: 0, params: {lr: 0.1, ...}}]
+    sweeps:   [{workload: linreg, dataset: name, grid: {lr: [...]},
+                fused: true, cores: 16, params: {...}}]
+
+YAML input needs PyYAML; JSON always works (a ``.json`` manifest or any
+file whose text parses as JSON).
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from ..core.pim import PimConfig, PimSystem
+from ..data.synthetic import (make_blobs, make_classification,
+                              make_linear_dataset)
+from .scheduler import JobHandle, PimScheduler
+
+
+def load_manifest(path: str) -> dict:
+    """Parse a YAML or JSON manifest file into a dict."""
+    with open(path) as fh:
+        text = fh.read()
+    try:
+        doc = json.loads(text)
+    except json.JSONDecodeError:
+        try:
+            import yaml
+        except ImportError:
+            raise ValueError(
+                f"{path} is not JSON and PyYAML is unavailable in this "
+                f"environment; rewrite the manifest as JSON") from None
+        doc = yaml.safe_load(text)
+    if not isinstance(doc, dict):
+        raise ValueError(f"manifest {path} must be a mapping, "
+                         f"got {type(doc).__name__}")
+    return doc
+
+
+def build_dataset(spec: dict) -> Tuple[np.ndarray, Optional[np.ndarray]]:
+    """Materialize one ``datasets:`` entry as host (X, y) arrays."""
+    spec = dict(spec)
+    kind = spec.pop("kind", "linear")
+    n = int(spec.pop("samples", 4096))
+    f = int(spec.pop("features", 16))
+    seed = int(spec.pop("seed", 0))
+    if kind == "linear":
+        X, y, _ = make_linear_dataset(n, f, seed=seed, **spec)
+        return X, y
+    if kind == "classification":
+        X, y = make_classification(n, f, seed=seed, **spec)
+        return X, y
+    if kind == "blobs":
+        X, _, _ = make_blobs(n, f, seed=seed, **spec)
+        return X, None
+    raise ValueError(f"unknown dataset kind {kind!r}; "
+                     f"known: linear, classification, blobs")
+
+
+def build_system(spec: Optional[dict]) -> Tuple[PimSystem, dict]:
+    """``system:`` entry -> (PimSystem, scheduler kwargs)."""
+    spec = dict(spec or {})
+    cfg = PimConfig(n_cores=int(spec.pop("cores", 64)),
+                    n_threads=int(spec.pop("threads", 16)),
+                    reduce=spec.pop("reduce", "fabric"),
+                    backend=spec.pop("backend", "vmap"))
+    sched_kw = {}
+    if "rank_size" in spec:
+        sched_kw["rank_size"] = int(spec.pop("rank_size"))
+    if "backfill" in spec:
+        sched_kw["backfill"] = bool(spec.pop("backfill"))
+    if spec:
+        raise ValueError(f"unknown system keys {sorted(spec)}")
+    return PimSystem(cfg), sched_kw
+
+
+def run_manifest(doc: dict, drain: bool = True
+                 ) -> Tuple[PimScheduler, List[JobHandle]]:
+    """Build the scheduler, submit every job and sweep, optionally drain.
+
+    Returns the scheduler and the handles in manifest order (jobs first,
+    then sweep points in grid order).
+    """
+    system, sched_kw = build_system(doc.get("system"))
+    scheduler = PimScheduler(system, **sched_kw)
+    datasets: Dict[str, tuple] = {
+        name: build_dataset(spec)
+        for name, spec in (doc.get("datasets") or {}).items()}
+
+    def _data(entry: dict):
+        name = entry.get("dataset")
+        if name is None:
+            if len(datasets) == 1:
+                return next(iter(datasets.values()))
+            raise ValueError(f"job {entry} names no dataset and the "
+                             f"manifest defines {len(datasets)}")
+        try:
+            return datasets[name]
+        except KeyError:
+            raise ValueError(f"job references unknown dataset {name!r}; "
+                             f"known: {sorted(datasets)}") from None
+
+    handles: List[JobHandle] = []
+    for entry in doc.get("jobs") or []:
+        handles.append(scheduler.submit(
+            entry["workload"], _data(entry),
+            version=entry.get("version"),
+            n_cores=entry.get("cores"),
+            priority=int(entry.get("priority", 0)),
+            name=entry.get("name"),
+            **(entry.get("params") or {})))
+    for entry in doc.get("sweeps") or []:
+        handles.extend(scheduler.sweep(
+            entry["workload"], _data(entry), entry["grid"],
+            version=entry.get("version"),
+            n_cores=entry.get("cores"),
+            fused=bool(entry.get("fused", True)),
+            priority=int(entry.get("priority", 0)),
+            **(entry.get("params") or {})))
+    if not handles:
+        raise ValueError("manifest defines no jobs or sweeps")
+    if drain:
+        scheduler.drain()
+    return scheduler, handles
+
+
+def job_report(handles: List[JobHandle]) -> List[dict]:
+    """JSON-serializable per-job rows for the CLI / bench output."""
+    rows = []
+    for h in handles:
+        row = {
+            "id": h.id,
+            "name": h.name,
+            "workload": h.workload.name,
+            "version": h.spec.version,
+            "state": h.state.value,
+            "priority": h.priority,
+            "cores": h.n_cores,
+            "steps": h.steps,
+            "fused": h.fused,
+            "modeled_dpu_seconds": h.modeled_seconds,
+        }
+        if h.transfer is not None:
+            row["cpu_to_pim_bytes"] = h.transfer.cpu_to_pim
+            row["pim_to_cpu_bytes"] = h.transfer.pim_to_cpu
+            row["kernel_launches"] = h.transfer.kernel_launches
+        if h.error is not None:
+            row["error"] = f"{type(h.error).__name__}: {h.error}"
+        rows.append(row)
+    return rows

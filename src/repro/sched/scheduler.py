@@ -1,0 +1,448 @@
+"""Multi-tenant PIM training-job scheduler (DESIGN.md §7.2).
+
+``PimScheduler`` layers job management on the unified workload API: it
+owns a :class:`~repro.sched.allocator.BankAllocator` over one parent
+:class:`~repro.core.pim.PimSystem`, admits queued jobs when rank-aligned
+capacity exists, runs each admitted job on its own
+:class:`~repro.sched.allocator.PimSlice`, and gang-steps all running
+jobs round-robin — one trainer iteration per job per turn — so K
+concurrent fits interleave on a single host thread, exactly the way the
+UPMEM host serially orchestrates many tenants' rank allocations
+(paper §2.2).
+
+Lifecycle: ``QUEUED -> RUNNING -> DONE | FAILED | CANCELLED``.  Failure
+is isolated per job: an exception inside one job's step marks that job
+FAILED (the exception object rides on the handle) and never unwinds the
+drain loop or the other tenants.
+
+Accounting: every job records the ``TransferStats`` delta of its slice
+(attributable bytes even though jobs interleave — snapshot/delta, see
+TransferStats), its step count, and modeled DPU seconds from
+:class:`~repro.core.pim.DpuCostModel` (steps x per-pass kernel time).
+
+Fused gangs: ``sweep(..., fused=True)`` routes same-``fuse_key`` GD jobs
+through :class:`~repro.sched.gang.FusedGdSweep` — one slice, one shared
+dataset, one batched kernel launch per step for the whole gang.
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+from typing import List, Optional, Union
+
+from ..api.dataset import PimDataset
+from ..api.registry import FitResult, TrainerSpec, Workload, get_workload
+from ..core.pim import DpuCostModel, PimSystem, TransferStats
+from .allocator import BankAllocator, BankLease, FragmentationStats, PimSlice
+from .gang import FusedGdSweep, plan_fusion
+
+
+class JobState(enum.Enum):
+    QUEUED = "queued"
+    RUNNING = "running"
+    DONE = "done"
+    FAILED = "failed"
+    CANCELLED = "cancelled"
+
+    @property
+    def terminal(self) -> bool:
+        return self in (JobState.DONE, JobState.FAILED,
+                        JobState.CANCELLED)
+
+
+#: cost-model routing: workload registry name -> (model workload key,
+#: version selector).  Unknown workloads simply skip cycle accounting.
+_COST_KEYS = {"linreg": "lin", "logreg": "log", "dtree": "dtr",
+              "kmeans": "kme"}
+_COST_VERSIONS = {"dtree": "fp32", "kmeans": "int16"}
+
+
+class JobHandle:
+    """Caller-facing view of one submitted training job.
+
+    Fields filled in as the job progresses: ``state``, ``steps``,
+    ``result`` (FitResult on DONE), ``error`` (the exception on FAILED),
+    ``transfer`` (the job's attributable TransferStats delta; for fused
+    jobs this is the whole gang's delta — they share one slice),
+    ``modeled_seconds`` (DpuCostModel cycle accounting), and ``lease``
+    (the core extent while running).
+    """
+
+    def __init__(self, job_id: int, workload: Workload, spec: TrainerSpec,
+                 priority: int, n_cores: int, name: Optional[str] = None):
+        self.id = job_id
+        self.workload = workload
+        self.spec = spec
+        self.priority = priority
+        self.n_cores = n_cores
+        self.name = name or f"job{job_id}:{workload.name}/{spec.version}"
+        self.state = JobState.QUEUED
+        self.steps = 0
+        self.result: Optional[FitResult] = None
+        self.error: Optional[BaseException] = None
+        self.transfer: Optional[TransferStats] = None
+        self.modeled_seconds = 0.0
+        self.lease: Optional[BankLease] = None
+        self.fused = False
+        self._cancel_requested = False
+
+    @property
+    def done(self) -> bool:
+        return self.state.terminal
+
+    def cancel(self) -> None:
+        """Request cancellation: queued jobs cancel immediately, running
+        jobs at their next gang-step boundary."""
+        if not self.done:
+            self._cancel_requested = True
+            if self.state is JobState.QUEUED:
+                self.state = JobState.CANCELLED
+
+    def __repr__(self) -> str:
+        return (f"JobHandle({self.name!r}, {self.state.value}, "
+                f"steps={self.steps}, cores={self.n_cores})")
+
+
+def _modeled_step_seconds(handle: JobHandle, dataset: PimDataset,
+                          slice_: PimSlice) -> float:
+    """Per-pass DPU kernel seconds for one gang step of this job (0.0
+    for workloads outside the paper's cost model)."""
+    wl_key = _COST_KEYS.get(handle.workload.name)
+    if wl_key is None:
+        return 0.0
+    version = _COST_VERSIONS.get(handle.workload.name, handle.spec.version)
+    model = DpuCostModel()
+    return model.workload_seconds(
+        wl_key, version, dataset.n, dataset.n_features,
+        slice_.config.n_cores, slice_.config.n_threads,
+        k=handle.spec.params.get("n_clusters", 16))
+
+
+# ---------------------------------------------------------------------------
+# Runnables: one admitted queue entry (a single job or a fused gang).
+# ---------------------------------------------------------------------------
+
+class _Runnable:
+    """Base: owns a lease + slice + dataset and advances by one step."""
+
+    def __init__(self, jobs: List[JobHandle], data, priority: int,
+                 seq: int, n_cores: int):
+        self.jobs = jobs
+        self.data = data
+        self.priority = priority
+        self.seq = seq
+        self.n_cores = n_cores
+        self.lease: Optional[BankLease] = None
+        self.slice: Optional[PimSlice] = None
+        self._snapshot: Optional[TransferStats] = None
+
+    @property
+    def live_jobs(self) -> List[JobHandle]:
+        return [j for j in self.jobs if not j.done]
+
+    def start(self, system: PimSystem, lease: BankLease) -> None:
+        self.lease = lease
+        self.slice = PimSlice(system, lease)
+        self._snapshot = self.slice.stats.snapshot()
+        X, y = self.data
+        self.dataset = self.slice.put(X, y)
+        for job in self.jobs:
+            if job.state is JobState.QUEUED:
+                job.state = JobState.RUNNING
+                job.lease = lease
+                job.n_cores = lease.n_cores
+
+    def _transfer_delta(self) -> TransferStats:
+        return self.slice.stats.delta(self._snapshot)
+
+    def advance(self) -> bool:
+        """One gang step; True when the runnable is finished."""
+        raise NotImplementedError
+
+
+class _SingleRun(_Runnable):
+    """One job advanced via its workload's ``fit_steps`` generator."""
+
+    def start(self, system: PimSystem, lease: BankLease) -> None:
+        super().start(system, lease)
+        job = self.jobs[0]
+        self.gen = job.workload.fit_steps(self.dataset, job.spec)
+        self._step_seconds = _modeled_step_seconds(job, self.dataset,
+                                                   self.slice)
+
+    def advance(self) -> bool:
+        job = self.jobs[0]
+        if job._cancel_requested:
+            self.gen.close()
+            job.state = JobState.CANCELLED
+            job.transfer = self._transfer_delta()
+            return True
+        try:
+            next(self.gen)
+        except StopIteration as stop:
+            job.result = stop.value
+            job.state = JobState.DONE
+            job.transfer = self._transfer_delta()
+            return True
+        except Exception as err:  # noqa: BLE001 — isolation by design
+            job.error = err
+            job.state = JobState.FAILED
+            job.transfer = self._transfer_delta()
+            return True
+        job.steps += 1
+        job.modeled_seconds += self._step_seconds
+        return False
+
+
+class _FusedRun(_Runnable):
+    """A fused GD gang: one slice, one dataset, one launch per step."""
+
+    def start(self, system: PimSystem, lease: BankLease) -> None:
+        super().start(system, lease)
+        workload = self.jobs[0].workload
+        self.gang = FusedGdSweep(workload,
+                                 [j.spec for j in self.jobs],
+                                 self.dataset)
+        self._step_seconds = [
+            _modeled_step_seconds(j, self.dataset, self.slice)
+            for j in self.jobs]
+        for job in self.jobs:
+            job.fused = True
+
+    def _finish(self) -> None:
+        delta = self._transfer_delta()
+        for lane, job in enumerate(self.jobs):
+            if job.done:
+                continue
+            job.transfer = delta
+            result = self.gang.result(lane)
+            if result is None:
+                job.state = JobState.CANCELLED
+            else:
+                job.result = result
+                job.state = JobState.DONE
+
+    def advance(self) -> bool:
+        for lane, job in enumerate(self.jobs):
+            if job._cancel_requested and self.gang.active[lane]:
+                self.gang.deactivate(lane)
+                job.state = JobState.CANCELLED
+                job.transfer = self._transfer_delta()
+        it_before = self.gang.it
+        try:
+            finished = self.gang.step()
+        except Exception as err:  # noqa: BLE001 — the gang shares a launch
+            delta = self._transfer_delta()
+            for job in self.live_jobs:
+                job.error = err
+                job.state = JobState.FAILED
+                job.transfer = delta
+            return True
+        if self.gang.it > it_before:     # a launch actually happened
+            for lane, job in enumerate(self.jobs):
+                if self.gang.active[lane]:
+                    job.steps += 1
+                    job.modeled_seconds += self._step_seconds[lane]
+        if finished:
+            self._finish()
+        return finished
+
+
+# ---------------------------------------------------------------------------
+# The scheduler.
+# ---------------------------------------------------------------------------
+
+class PimScheduler:
+    """FIFO+priority scheduler of training jobs over one PimSystem.
+
+    ``rank_size=None`` auto-selects the largest divisor of the machine
+    not exceeding UPMEM's 64-DPU rank (see ``default_rank_size``);
+    ``backfill=True`` lets smaller jobs jump a queue head that doesn't
+    fit (better utilization, admission no longer strictly ordered —
+    off by default to keep head-of-line semantics).
+    """
+
+    def __init__(self, system: PimSystem, rank_size: Optional[int] = None,
+                 backfill: bool = False):
+        self.system = system
+        # rank_size=None -> the allocator's auto rank (largest divisor
+        # of the machine <= the 64-DPU UPMEM rank)
+        self.allocator = BankAllocator(system.config.n_cores, rank_size)
+        self.backfill = backfill
+        self._queue: List[_Runnable] = []
+        self._running: List[_Runnable] = []
+        self._finished: List[_Runnable] = []
+        self._seq = itertools.count()
+        self._next_job_id = itertools.count()
+        self.handles: List[JobHandle] = []
+
+    # -- submission ----------------------------------------------------------
+
+    def _sized(self, n_cores: Optional[int]) -> int:
+        """Rank-align a request, rejecting unschedulable sizes at
+        submission time (an over-machine job would livelock admission)."""
+        size = self.allocator.align(n_cores)
+        if size > self.allocator.n_cores:
+            raise ValueError(
+                f"job needs {size} cores (rank-aligned) but the machine "
+                f"has {self.allocator.n_cores}")
+        return size
+
+    @staticmethod
+    def _resolve_workload(workload: Union[str, Workload]) -> Workload:
+        if isinstance(workload, str):
+            return get_workload(workload)
+        return workload
+
+    @staticmethod
+    def _host_arrays(data) -> tuple:
+        """Normalize submit() data to host (X, y).
+
+        Accepted: (X, y) tuple, a bare X array, or a PimDataset — whose
+        *host* arrays are re-sharded onto the job's slice (device shards
+        are shaped by their owning system and cannot be re-scoped)."""
+        if isinstance(data, PimDataset):
+            return data.X, data.y
+        if isinstance(data, tuple):
+            if len(data) != 2:
+                raise ValueError(f"data tuple must be (X, y), got "
+                                 f"{len(data)} elements")
+            return data
+        return data, None
+
+    def submit(self, workload: Union[str, Workload], data,
+               spec: Optional[TrainerSpec] = None, *,
+               version: Optional[str] = None, n_cores: Optional[int] = None,
+               priority: int = 0, name: Optional[str] = None,
+               **params) -> JobHandle:
+        """Queue one training job; returns its :class:`JobHandle`.
+
+        ``spec`` wins when given; otherwise one is built from
+        ``version``/``**params`` exactly as ``make_estimator`` would.
+        ``n_cores`` is rounded up to whole ranks at admission (None =
+        one rank).  Jobs run when capacity exists, in (priority desc,
+        submission order).
+        """
+        wl = self._resolve_workload(workload)
+        if spec is None:
+            spec = wl.spec(version, **params)
+        elif version is not None or params:
+            raise TypeError("pass either spec= or version=/params, "
+                            "not both")
+        size = self._sized(n_cores)
+        handle = JobHandle(next(self._next_job_id), wl, spec, priority,
+                          size, name)
+        run = _SingleRun([handle], self._host_arrays(data), priority,
+                         next(self._seq), size)
+        self._queue.append(run)
+        self.handles.append(handle)
+        return handle
+
+    def sweep(self, workload: Union[str, Workload], data, grid: dict, *,
+              version: Optional[str] = None, n_cores: Optional[int] = None,
+              fused: bool = True, priority: int = 0,
+              **base_params) -> List[JobHandle]:
+        """Submit the cartesian product of ``grid`` as one job per point.
+
+        With ``fused=True`` (default), points whose ``fuse_key`` matches
+        are gang-fused: one slice, one shared bank-resident dataset, one
+        batched kernel launch per step for the whole gang (learning-rate
+        sweeps collapse to a single dispatch).  Non-fusable points fall
+        back to ordinary per-job scheduling.  Handles come back in grid
+        order regardless of gang grouping.
+        """
+        wl = self._resolve_workload(workload)
+        keys = sorted(grid)
+        combos = [dict(zip(keys, values))
+                  for values in itertools.product(*(grid[k] for k in keys))]
+        specs = [wl.spec(version, **{**base_params, **combo})
+                 for combo in combos]
+        size = self._sized(n_cores)
+        data = self._host_arrays(data)
+
+        groups = (plan_fusion(wl, specs) if fused
+                  else [[i] for i in range(len(specs))])
+        handles: List[Optional[JobHandle]] = [None] * len(specs)
+        for group in groups:
+            group_handles = []
+            for i in group:
+                handle = JobHandle(next(self._next_job_id), wl, specs[i],
+                                   priority, size)
+                handles[i] = handle
+                group_handles.append(handle)
+                self.handles.append(handle)
+            cls = _FusedRun if len(group) > 1 else _SingleRun
+            self._queue.append(cls(group_handles, data, priority,
+                                   next(self._seq), size))
+        return handles
+
+    # -- execution -----------------------------------------------------------
+
+    def _admit(self) -> None:
+        self._queue = [r for r in self._queue if r.live_jobs]
+        pending = sorted(self._queue,
+                         key=lambda r: (-r.priority, r.seq))
+        for run in pending:
+            lease = self.allocator.allocate(run.n_cores)
+            if lease is None:
+                if self.backfill:
+                    continue
+                break
+            self._queue.remove(run)
+            try:
+                run.start(self.system, lease)
+            except Exception as err:  # noqa: BLE001 — bad data/spec must
+                # fail the job, not unwind the other tenants' drain
+                self.allocator.release(lease)
+                for job in run.live_jobs:
+                    job.error = err
+                    job.state = JobState.FAILED
+                self._finished.append(run)
+                continue
+            self._running.append(run)
+
+    def step(self) -> bool:
+        """One scheduling turn: admit what fits, then advance every
+        running job by one gang step (round-robin, admission order).
+        Returns True while any job is queued or running."""
+        self._admit()
+        still_running: List[_Runnable] = []
+        for run in self._running:
+            if run.advance():
+                self.allocator.release(run.lease)
+                self._finished.append(run)
+            else:
+                still_running.append(run)
+        self._running = still_running
+        return bool(self._running or self._queue)
+
+    def drain(self) -> List[JobHandle]:
+        """Run scheduling turns until every job reaches a terminal
+        state; returns all handles.  One job's failure never stops the
+        drain (failure isolation is per step, see _SingleRun.advance)."""
+        while self.step():
+            pass
+        return self.handles
+
+    # -- introspection -------------------------------------------------------
+
+    def counts(self) -> dict:
+        by_state: dict = {s.value: 0 for s in JobState}
+        for h in self.handles:
+            by_state[h.state.value] += 1
+        return by_state
+
+    def fragmentation(self) -> FragmentationStats:
+        return self.allocator.fragmentation()
+
+    def stats(self) -> dict:
+        """Operator snapshot: job counts, occupancy, queue depth."""
+        frag = self.fragmentation()
+        return {
+            "jobs": self.counts(),
+            "queued_runnables": len(self._queue),
+            "running_runnables": len(self._running),
+            "cores_used": frag.used_cores,
+            "cores_free": frag.free_cores,
+            "external_fragmentation": frag.external_fragmentation,
+        }

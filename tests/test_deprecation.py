@@ -1,0 +1,130 @@
+"""The legacy deprecation surface: ``core/estimators.py`` class shims
+and the ``train(...)`` wrappers emit exactly one DeprecationWarning per
+call and return results identical to the ``make_estimator``/``fit``
+paths they shim.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import PimConfig, PimSystem, make_estimator
+from repro.core import dtree, kmeans, linreg, logreg
+from repro.core.estimators import (PimDecisionTreeClassifier, PimKMeans,
+                                   PimLinearRegression,
+                                   PimLogisticRegression)
+from repro.data.synthetic import (make_blobs, make_classification,
+                                  make_linear_dataset)
+
+
+def _deprecations(fn):
+    """Run fn capturing warnings; return (result, deprecation list)."""
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        result = fn()
+    return result, [w for w in rec
+                    if issubclass(w.category, DeprecationWarning)]
+
+
+def _pim(n_cores=8):
+    return PimSystem(PimConfig(n_cores=n_cores))
+
+
+# ---------------------------------------------------------------------------
+# train(...) wrappers: one warning, identical results to fit(put(...)).
+# ---------------------------------------------------------------------------
+
+def test_linreg_train_warns_once_and_matches_fit():
+    X, y, _ = make_linear_dataset(256, 8, seed=0)
+    cfg = linreg.GdConfig(version="int32", n_iters=20)
+    r_legacy, deps = _deprecations(lambda: linreg.train(X, y, _pim(), cfg))
+    assert len(deps) == 1
+    r_new = linreg.fit(_pim().put(X, y), cfg)
+    assert np.array_equal(r_legacy.w, r_new.w)
+    assert r_legacy.b == r_new.b
+
+
+def test_logreg_train_warns_once_and_matches_fit():
+    X, y, _ = make_linear_dataset(256, 8, seed=1)
+    cfg = logreg.LogRegConfig(version="int32_lut_wram", n_iters=15)
+    r_legacy, deps = _deprecations(lambda: logreg.train(X, y, _pim(), cfg))
+    assert len(deps) == 1
+    r_new = logreg.fit(_pim().put(X, y), cfg)
+    assert np.array_equal(r_legacy.w, r_new.w)
+    assert r_legacy.b == r_new.b
+
+
+def test_kmeans_train_warns_once_and_matches_fit():
+    X, _, _ = make_blobs(256, 4, centers=4, seed=2)
+    cfg = kmeans.KMeansConfig(k=4, max_iters=10)
+    r_legacy, deps = _deprecations(lambda: kmeans.train(X, _pim(), cfg))
+    assert len(deps) == 1
+    r_new = kmeans.fit(_pim().put(X), cfg)
+    assert np.array_equal(r_legacy.centroids, r_new.centroids)
+    assert np.array_equal(r_legacy.labels, r_new.labels)
+    assert r_legacy.inertia == r_new.inertia
+
+
+def test_dtree_train_warns_once_and_matches_fit():
+    X, y = make_classification(256, 8, seed=3, class_sep=1.5)
+    cfg = dtree.TreeConfig(max_depth=2, seed=0)
+    t_legacy, deps = _deprecations(lambda: dtree.train(X, y, _pim(), cfg))
+    assert len(deps) == 1
+    t_new = dtree.fit(_pim().put(X, y), cfg)
+    assert t_legacy.n_nodes == t_new.n_nodes
+    assert np.array_equal(t_legacy.predict(X), t_new.predict(X))
+
+
+# ---------------------------------------------------------------------------
+# Legacy estimator classes: one warning at construction, behaviour
+# identical to the make_estimator facade.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("legacy_cls,name,params", [
+    (PimLinearRegression, "linreg",
+     dict(version="int32", n_iters=20)),
+    (PimLogisticRegression, "logreg",
+     dict(version="int32_lut_wram", n_iters=15)),
+    (PimDecisionTreeClassifier, "dtree", dict(max_depth=2, seed=0)),
+    (PimKMeans, "kmeans", dict(n_clusters=4, max_iter=10)),
+])
+def test_legacy_class_warns_once_and_matches_make_estimator(
+        legacy_cls, name, params):
+    if name == "kmeans":
+        X, _, _ = make_blobs(256, 4, centers=4, seed=4)
+        y = None
+    elif name == "dtree":
+        X, y = make_classification(256, 8, seed=5, class_sep=1.5)
+    else:
+        X, y, _ = make_linear_dataset(256, 8, seed=6)
+
+    legacy, deps = _deprecations(lambda: legacy_cls(**params))
+    assert len(deps) == 1
+    assert "make_estimator" in str(deps[0].message)
+
+    # fitting through the shim must NOT warn again (the shim is the
+    # constructor; everything else is the facade)
+    _, deps_fit = _deprecations(lambda: legacy.fit(X, y))
+    assert len(deps_fit) == 0
+
+    modern = make_estimator(name, **params).fit(X, y)
+    pred_l, pred_m = legacy.predict(X), modern.predict(X)
+    assert np.array_equal(pred_l, pred_m)
+    if name in ("linreg", "logreg"):
+        assert np.array_equal(legacy.coef_, modern.coef_)
+        assert legacy.intercept_ == modern.intercept_
+    elif name == "kmeans":
+        assert np.array_equal(legacy.cluster_centers_,
+                              modern.cluster_centers_)
+    else:
+        assert legacy.n_nodes_ == modern.n_nodes_
+
+
+def test_sklearn_clone_round_trip_still_works():
+    """cls(**est.get_params()) must reconstruct despite the warning."""
+    est, deps = _deprecations(
+        lambda: PimLinearRegression(version="hyb", n_iters=10))
+    clone, deps2 = _deprecations(
+        lambda: PimLinearRegression(**est.get_params()))
+    assert len(deps) == len(deps2) == 1
+    assert clone.get_params() == est.get_params()

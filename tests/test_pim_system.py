@@ -3,7 +3,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.pim import (DpuCostModel, PimConfig, PimSystem, ReduceVia)
+from repro.core.pim import (DpuCostModel, HierarchicalReduce, PimConfig,
+                            PimSystem, ReduceVia, TransferStats)
 
 
 def _sum_kernel(xc, w):
@@ -90,6 +91,94 @@ def test_map_reduce_custom_minmax():
                                 reduce={"min": "min", "max": "max"})
     assert float(out["min"]) == pytest.approx(x.min())
     assert float(out["max"]) == pytest.approx(x.max())
+
+
+# ---------------------------------------------------------------------------
+# HierarchicalReduce edge cases: group sizes that do not divide (or
+# exceed) the core count must fall back to the flat host schedule with
+# correct byte accounting.
+# ---------------------------------------------------------------------------
+
+def _int_sum_kernel(xc, _):
+    return {"s": jnp.sum(xc)}
+
+
+@pytest.mark.parametrize("group_size", [3, 5, 16, 1])
+def test_hierarchical_awkward_group_size_matches_fabric(group_size):
+    """group_size not dividing n_cores=8 (3, 5), larger than it (16),
+    and degenerate (1) all reduce to the exact FabricReduce result."""
+    x = np.random.RandomState(0).randint(-1000, 1000, 123).astype(np.int32)
+
+    fab = PimSystem(PimConfig(n_cores=8))
+    expect = int(fab.map_reduce(_int_sum_kernel, (fab.shard_rows(x),),
+                                (0,), strategy="fabric")["s"])
+
+    pim = PimSystem(PimConfig(n_cores=8))
+    xs = pim.shard_rows(x)
+    out = pim.map_reduce(_int_sum_kernel, (xs,), (0,),
+                         strategy=HierarchicalReduce(group_size))
+    assert int(out["s"]) == expect
+
+
+def test_hierarchical_flat_fallback_byte_counts():
+    """An awkward group size means NO rank-level reduction happened: the
+    PIM->CPU bytes must equal the full per-core partial set (as HostReduce
+    counts) and no inter-core-via-host bytes may be recorded."""
+    x = np.arange(64, dtype=np.int32)
+    pim = PimSystem(PimConfig(n_cores=8))
+    xs = pim.shard_rows(x)
+    before = pim.stats.snapshot()
+    pim.map_reduce(_int_sum_kernel, (xs,), (0,),
+                   strategy=HierarchicalReduce(3))
+    d = pim.stats.delta(before)
+    assert d.pim_to_cpu == 8 * 4          # all 8 int32 partials ship flat
+    assert d.inter_core_via_host == 0     # no rank leaders existed
+
+
+def test_hierarchical_dividing_group_size_byte_counts():
+    """The intended two-level schedule: 8 cores in ranks of 4 ship 2 rank
+    partials to the host and record the rank->host leg separately."""
+    x = np.arange(64, dtype=np.int32)
+    pim = PimSystem(PimConfig(n_cores=8))
+    xs = pim.shard_rows(x)
+    before = pim.stats.snapshot()
+    out = pim.map_reduce(_int_sum_kernel, (xs,), (0,),
+                         strategy=HierarchicalReduce(4))
+    d = pim.stats.delta(before)
+    assert int(out["s"]) == int(x.sum())
+    assert d.pim_to_cpu == 2 * 4          # two int32 rank partials
+    assert d.inter_core_via_host == 2 * 4
+    # 1/group_size of the flat-host bytes, the hierarchy's saving
+    assert d.pim_to_cpu == (8 * 4) // 4
+
+
+def test_hierarchical_group_equal_to_cores():
+    """group_size == n_cores degenerates to one rank: a single partial
+    crosses the host link."""
+    x = np.arange(48, dtype=np.float32)
+    pim = PimSystem(PimConfig(n_cores=8))
+    xs = pim.shard_rows(x)
+    before = pim.stats.snapshot()
+    out = pim.map_reduce(_int_sum_kernel, (xs,), (0,),
+                         strategy=HierarchicalReduce(8))
+    d = pim.stats.delta(before)
+    assert float(out["s"]) == pytest.approx(x.sum())
+    assert d.pim_to_cpu == 1 * 4
+
+
+def test_transfer_stats_snapshot_delta():
+    s = TransferStats()
+    s.cpu_to_pim = 100
+    s.kernel_launches = 3
+    snap = s.snapshot()
+    s.cpu_to_pim += 50
+    s.pim_to_cpu += 7
+    s.kernel_launches += 2
+    d = s.delta(snap)
+    assert (d.cpu_to_pim, d.pim_to_cpu, d.kernel_launches) == (50, 7, 2)
+    assert snap.cpu_to_pim == 100         # snapshot is immutable-by-copy
+    s.reset()
+    assert s.cpu_to_pim == 0 and s.kernel_launches == 0
 
 
 # ---------------------------------------------------------------------------

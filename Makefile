@@ -3,7 +3,7 @@
 # figure reproductions as CSV; `make jobs` runs the scheduler demo.
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check test bench quickstart jobs
+.PHONY: check test bench bench-fusion quickstart jobs
 
 check:
 	./scripts/ci.sh
@@ -13,6 +13,9 @@ test:
 
 bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run $(ARGS)
+
+bench-fusion:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.step_fusion_bench
 
 quickstart:
 	PYTHONPATH=$(PYTHONPATH) python examples/quickstart.py

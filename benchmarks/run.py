@@ -18,6 +18,7 @@ MODULES = [
     "benchmarks.kernels_bench",         # Pallas kernels (interpret)
     "benchmarks.dispatch_bench",        # backend dispatch parity/time
     "benchmarks.sched_bench",           # job scheduler: fused vs serial
+    "benchmarks.step_fusion_bench",     # fused k-step scans vs per-step
     "benchmarks.lm_ablation",           # beyond-paper LM ablations
     "benchmarks.serve_bench",           # serving throughput
     "benchmarks.roofline_summary",      # dry-run roofline terms (§Perf)

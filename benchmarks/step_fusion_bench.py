@@ -1,0 +1,129 @@
+"""Step-fusion benchmark: fused k-step scan chunks vs the per-step loop.
+
+Measures the on-device fused step engine (core/pim.py StepProgram,
+DESIGN.md §9) on the paper's iterative workloads:
+
+  unfused   fuse_steps=1  — the host-orchestrated loop: one kernel
+            launch + one host sync per training iteration (the paper's
+            CPU<->PIM cadence);
+  fused     fuse_steps=32 — k iterations compiled into one lax.scan
+            launch; the kernel -> reduce -> update -> re-quantize cycle
+            never leaves the device inside a chunk.
+
+Reports wall-clock per fit, speedup, and launches/syncs per iteration
+(from the TransferStats deltas), and asserts that the fused integer fits
+are bit-identical to the unfused loop.  Results are recorded to
+``benchmarks/out/step_fusion_bench.json`` — the acceptance number is
+``lin_int32.speedup`` (>= 5x on the 500-iteration LIN-INT32 fit).
+
+  PYTHONPATH=src python -m benchmarks.step_fusion_bench
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.api import PimConfig, PimSystem
+from repro.core import kmeans, linreg, logreg
+from repro.data.synthetic import make_blobs, make_linear_dataset
+
+N_SAMPLES, N_FEATURES = 2048, 16
+N_ITERS = 500
+FUSE = 32
+CORES = 16
+OUT_PATH = os.path.join(os.path.dirname(__file__), "out",
+                        "step_fusion_bench.json")
+
+
+def _timed_fit(fit, ds, cfg):
+    fit(ds, cfg)                       # warmup: compile + view transfer
+    snap = ds.system.stats.snapshot()
+    t0 = time.perf_counter()
+    result = fit(ds, cfg)
+    dt = time.perf_counter() - t0
+    return result, dt, ds.system.stats.delta(snap)
+
+
+def _case(name, fit, make_cfg, ds, iters, bitwise=True):
+    r1, t1, d1 = _timed_fit(fit, ds, make_cfg(1))
+    rk, tk, dk = _timed_fit(fit, ds, make_cfg(FUSE))
+    if hasattr(r1, "w"):
+        exact = bool(np.array_equal(r1.w, rk.w) and r1.b == rk.b)
+        quality = abs(float(r1.b) - float(rk.b))
+    else:  # KMeansResult
+        exact = False
+        quality = abs(r1.inertia - rk.inertia) / max(abs(r1.inertia), 1e-12)
+    out = {
+        "n_iters": iters,
+        "fuse_steps": FUSE,
+        "unfused_s": t1,
+        "fused_s": tk,
+        "speedup": t1 / tk,
+        "unfused_launches_per_iter": d1.kernel_launches / iters,
+        "fused_launches_per_iter": dk.kernel_launches / iters,
+        "unfused_host_syncs": d1.host_syncs,
+        "fused_host_syncs": dk.host_syncs,
+        "bit_identical": exact,
+    }
+    if bitwise and not exact:
+        raise AssertionError(f"{name}: fused result diverged from the "
+                             f"serial loop (quality delta {quality})")
+    return out
+
+
+def run():
+    X, y, _ = make_linear_dataset(N_SAMPLES, N_FEATURES, seed=0)
+    yc = (y > np.median(y)).astype(np.float32)
+    Xb, _, _ = make_blobs(N_SAMPLES, N_FEATURES, centers=16, seed=1)
+
+    results = {}
+
+    pim = PimSystem(PimConfig(n_cores=CORES))
+    ds = pim.put(X, y)
+    for ver in ("int32", "hyb", "fp32"):
+        results[f"lin_{ver}"] = _case(
+            f"lin_{ver}", linreg.fit,
+            lambda fuse, v=ver: linreg.GdConfig(
+                version=v, n_iters=N_ITERS, fuse_steps=fuse),
+            ds, N_ITERS, bitwise=ver != "fp32")
+
+    pim = PimSystem(PimConfig(n_cores=CORES))
+    dsl = pim.put(X, yc)
+    for ver in ("int32_lut_wram", "hyb_lut"):
+        results[f"log_{ver}"] = _case(
+            f"log_{ver}", logreg.fit,
+            lambda fuse, v=ver: logreg.LogRegConfig(
+                version=v, n_iters=N_ITERS, fuse_steps=fuse),
+            dsl, N_ITERS, bitwise=True)
+
+    pim = PimSystem(PimConfig(n_cores=CORES))
+    dsb = pim.put(Xb)
+    kme_iters = 60
+    results["kme_int16"] = _case(
+        "kme_int16",
+        lambda d, cfg: kmeans.fit(d, cfg, return_labels=False),
+        lambda fuse: kmeans.KMeansConfig(
+            k=16, max_iters=kme_iters, tol=0.0, seed=3, fuse_steps=fuse),
+        dsb, kme_iters, bitwise=False)
+
+    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
+    with open(OUT_PATH, "w") as fh:
+        json.dump(results, fh, indent=2)
+
+    rows = []
+    for name, r in results.items():
+        rows.append(row(
+            f"fusion.{name}", r["fused_s"] * 1e6 / r["n_iters"],
+            f"speedup={r['speedup']:.2f}x;"
+            f"launches/it={r['fused_launches_per_iter']:.3f};"
+            f"bit={r['bit_identical']}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

@@ -3,8 +3,10 @@
 # execution model, numerics, metrics — plus the kernel tier's dispatch
 # parity (interpret-mode Pallas vs jnp-ref), the small-shape kernel
 # cases, the job-scheduler core (allocator/slices/queue/failure
-# isolation), and the legacy deprecation surface; large-shape kernel
-# cases, large-K queues, and fused-sweep execution are marked @slow.
+# isolation), the step-fusion engine (fused-vs-serial bit parity, the
+# one-launch-per-chunk assertion), and the legacy deprecation surface;
+# large-shape kernel cases, large-K queues, fused-sweep execution, and
+# long fused runs are marked @slow.
 # The LM-stack breadth (arch smoke matrix, serving, multi-device
 # subprocess equivalence) and the quality reproduction run in the full
 # tier-1 suite: `make test` / plain pytest.
@@ -25,4 +27,5 @@ exec python -m pytest -q -m "not slow" \
     tests/test_quantization.py \
     tests/test_sched.py \
     tests/test_sgd_and_loader.py \
+    tests/test_step_fusion.py \
     "$@"

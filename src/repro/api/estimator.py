@@ -8,6 +8,13 @@ is implemented directly and is duck-type compatible with pipelines).
 ``fit`` accepts either raw arrays (one CPU->PIM partition per call, like
 the old API) or a :class:`~repro.api.dataset.PimDataset` — the sweep
 path where the partition is paid once per session.
+
+Hyperparameters flow through to the trainers untyped, so every knob the
+workload registry declares is available here — including ``fuse_steps``
+(DESIGN.md §9): ``make_estimator("linreg", version="int32",
+fuse_steps=32).fit(ds)`` trains with 32 GD iterations compiled into each
+``lax.scan`` launch, bit-identical to ``fuse_steps=1`` for the integer
+versions and ~an order of magnitude faster wall-clock.
 """
 from __future__ import annotations
 

@@ -13,6 +13,13 @@ per-platform auto-selection) that flows into the trainers' kernel
 dispatch (repro.kernels.dispatch): ``make_estimator("kmeans",
 kernel_backend="pallas_interpret")`` runs the assignment hot path
 through the Pallas interpreter, etc.
+
+The iterative workloads (LIN/LOG/KME) also expose ``fuse_steps``
+(DESIGN.md §9): ``make_estimator("linreg", version="int32",
+fuse_steps=32)`` compiles 32 consecutive training steps into one
+``lax.scan`` launch — bit-identical to the per-step loop for the
+integer versions, and the repo's biggest single wall-clock lever
+(benchmarks/step_fusion_bench.py).
 """
 from __future__ import annotations
 
@@ -45,7 +52,7 @@ class LinRegWorkload(Workload):
     versions = linreg.VERSIONS
     defaults = {"n_iters": 500, "lr": 0.1, "frac_bits": 10, "x8_frac": 7,
                 "w16_frac": 8, "record_every": 0, "minibatch": 0, "seed": 0,
-                "kernel_backend": None}
+                "kernel_backend": None, "fuse_steps": 1}
 
     def _config(self, spec: TrainerSpec) -> linreg.GdConfig:
         return linreg.GdConfig(version=spec.version, **spec.params)
@@ -79,7 +86,7 @@ class LogRegWorkload(Workload):
     defaults = {"n_iters": 500, "lr": 5.0, "frac_bits": 10, "x8_frac": 7,
                 "w16_frac": 8, "record_every": 0, "minibatch": 0, "seed": 0,
                 "taylor_terms": 8, "lut_boundary": 20, "lut_frac_bits": 10,
-                "kernel_backend": None}
+                "kernel_backend": None, "fuse_steps": 1}
 
     def _config(self, spec: TrainerSpec) -> logreg.LogRegConfig:
         return logreg.LogRegConfig(version=spec.version, **spec.params)
@@ -145,14 +152,16 @@ class KMeansWorkload(Workload):
     versions = ("int16",)
     unsupervised = True
     defaults = {"n_clusters": 16, "max_iter": 300, "tol": 1e-4,
-                "n_init": 1, "seed": 0, "kernel_backend": None}
+                "n_init": 1, "seed": 0, "kernel_backend": None,
+                "fuse_steps": 1}
 
     def _config(self, spec: TrainerSpec) -> kmeans.KMeansConfig:
         p = spec.params
         return kmeans.KMeansConfig(k=p["n_clusters"],
                                    max_iters=p["max_iter"], tol=p["tol"],
                                    n_init=p["n_init"], seed=p["seed"],
-                                   kernel_backend=p["kernel_backend"])
+                                   kernel_backend=p["kernel_backend"],
+                                   fuse_steps=p["fuse_steps"])
 
     def fit(self, dataset, spec: TrainerSpec) -> FitResult:
         r = kmeans.fit(dataset, self._config(spec))

@@ -266,7 +266,7 @@ def fit_steps(dataset, cfg: Optional[TreeConfig] = None):
             (jnp.asarray(split_feature), jnp.asarray(split_thresh),
              jnp.asarray(left_id), jnp.asarray(right_id)))
         frontier = new_frontier
-        yield n_nodes
+        yield 1      # one frontier round per scheduling turn
 
     return Tree(feature, threshold, left, right, leaf_class, depth, n_nodes)
 

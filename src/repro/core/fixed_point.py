@@ -16,8 +16,40 @@ see the module docstring there.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def mul_round_f32(a, b):
+    """Correctly-rounded float32 product with *pinned* two-rounding
+    semantics for the consumer: ``x - mul_round_f32(s, g)`` computes
+    round(x - round(s*g)) in EVERY execution context.
+
+    A plain f32 ``s * g`` adjacent to a subtract gets FMA-contracted by
+    XLA CPU inside jitted computations (observed: jit == single-rounding
+    fma while eager/numpy == two roundings, diverging by 1 ULP per step
+    and shape-dependently — neither ``optimization_barrier`` nor bitcast
+    round-trips block the contraction).  The fused step engine
+    (core/pim.py StepProgram) needs the compiled scan to be bit-identical
+    to the eager per-step loop, so the product is computed exactly in
+    float64 (24-bit mantissas -> the f64 product is exact) and rounded
+    once by the down-convert; a convert cannot be contracted into the
+    f32 subtract, so the two roundings survive any fusion decision.
+
+    CAVEAT — inside a jit trace BOTH operands must be *traced* values
+    (arguments or carry elements), not closed-over constants: every
+    concrete float64 value — eagerly up-converted constants, weak python
+    scalars, even literals — is canonicalized back to f32 when the jaxpr
+    is lowered (the x64 context is long exited by then), leaving a
+    mixed-dtype multiply that fails MLIR verification.  The fused
+    trainers therefore thread the update scale through the scan carry.
+    """
+    a = jnp.asarray(a, jnp.float32)
+    b = jnp.asarray(b, jnp.float32)
+    with jax.experimental.enable_x64():
+        p = a.astype(jnp.float64) * b.astype(jnp.float64)
+        return p.astype(jnp.float32)
 
 
 def to_fixed(x, frac_bits: int, dtype=jnp.int32):

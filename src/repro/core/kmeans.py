@@ -29,7 +29,7 @@ import numpy as np
 
 from ..kernels import dispatch
 from .metrics import frobenius_shift
-from .pim import PimSystem, run_steps
+from .pim import PimSystem, chunk_schedule, run_steps
 
 # 12-bit symmetric range stored in int16 (see docstring).  The quantizing
 # + sharding path, PimDataset.kmeans_view (repro/api/dataset.py), imports
@@ -48,6 +48,16 @@ class KMeansConfig:
     #: see repro.kernels.dispatch) — all backends are numerically
     #: identical (integer ops, asserted by the parity tests)
     kernel_backend: Optional[str] = None
+    #: step fusion (DESIGN.md §9): compile this many Lloyd's iterations
+    #: into ONE lax.scan launch per chunk.  Convergence is checked on
+    #: device (a ``done`` flag in the scan carry freezes the centroids),
+    #: so a chunk may cover fewer *effective* iterations than its length;
+    #: the host still stops draining chunks at the first converged one.
+    #: The fused update recomputes centroids in float32 on device where
+    #: the per-step host loop uses float64 — inertia/centroids agree to
+    #: float tolerance, not bit-exactly (the assignment kernel itself is
+    #: integer and exact).  1 = the paper's host-orchestrated loop.
+    fuse_steps: int = 1
 
 
 @dataclasses.dataclass
@@ -110,11 +120,43 @@ def _labels_kernel_factory(k: int):
     return _kernel
 
 
+def _make_lloyd_step_fns(cfg: KMeansConfig):
+    """(prepare, update) for one fused Lloyd's iteration (DESIGN.md §9).
+
+    Carry: ``(C float32 [k,F] in quantized units, done bool, n_it
+    int32)``.  ``done`` latches once the relative Frobenius shift drops
+    below ``cfg.tol`` and freezes the centroids, so a chunk that
+    overshoots convergence is a no-op for the tail steps; ``n_it``
+    counts only the steps taken while not yet converged — matching the
+    host loop's iteration count exactly."""
+    tol = np.float32(cfg.tol)
+
+    def prepare(carry):
+        C, _, _ = carry
+        return (jnp.round(C).astype(jnp.int16),)
+
+    def update(carry, reduced):
+        C, done, n_it = carry
+        sums = jnp.asarray(reduced["sums"], jnp.float32)
+        counts = jnp.asarray(reduced["counts"], jnp.float32)
+        newC = jnp.where(counts[:, None] > 0,
+                         sums / jnp.maximum(counts[:, None], 1.0), C)
+        shift = (jnp.linalg.norm(newC - C)
+                 / jnp.maximum(jnp.linalg.norm(C), 1e-12))
+        newC = jnp.where(done, C, newC)
+        n_it = n_it + jnp.where(done, 0, 1).astype(jnp.int32)
+        done = done | (shift < tol)
+        return (newC, done, n_it), None
+    return prepare, update
+
+
 def fit_steps(dataset, cfg: Optional[KMeansConfig] = None,
               return_labels: bool = True):
-    """Generator form of Lloyd's: one assign/update iteration per
+    """Generator form of Lloyd's: one assign/update scheduling step per
     ``next()`` (across all ``n_init`` restarts), KMeansResult on
     StopIteration — the gang-stepping surface; :func:`fit` drains it.
+    Each ``next()`` yields the number of Lloyd's iterations it covered
+    (1, or a whole ``cfg.fuse_steps`` scan chunk — DESIGN.md §9).
     The end-of-restart inertia/labels passes don't get their own step;
     they run at the head of the ``next()`` that follows convergence."""
     cfg = cfg or KMeansConfig()
@@ -135,26 +177,44 @@ def fit_steps(dataset, cfg: Optional[KMeansConfig] = None,
     labels_k = pim.named_kernel(
         f"kme.labels/k{cfg.k}", lambda: _labels_kernel_factory(cfg.k))
 
+    program = None
+    if cfg.fuse_steps > 1:
+        prepare, update = _make_lloyd_step_fns(cfg)
+        program = pim.step_program(
+            assign_k, prepare, update,
+            name=f"kme.step/k{cfg.k}/{tag}/tol{cfg.tol}/n{n}")
+
     best: Optional[KMeansResult] = None
     for init in range(cfg.n_init):
         # host picks random points as initial centroids (paper: random init)
         idx = rng.choice(n, size=cfg.k, replace=False)
         C = Xq_np[idx].astype(np.float32)               # quantized units
         n_it = 0
-        for it in range(cfg.max_iters):
-            n_it = it + 1
-            Cq = pim.broadcast(
-                (jnp.asarray(np.round(C).astype(np.int16)),))[0]
-            part = pim.map_reduce(assign_k, (Xs, valid), (Cq,))
-            sums = np.asarray(part["sums"], np.float64)
-            counts = np.asarray(part["counts"], np.float64)
-            newC = np.where(counts[:, None] > 0,
-                            sums / np.maximum(counts[:, None], 1), C)
-            shift = frobenius_shift(C, newC)
-            C = newC.astype(np.float32)
-            yield n_it
-            if shift < cfg.tol:
-                break
+        if program is not None:
+            carry = (jnp.asarray(C), jnp.asarray(False),
+                     jnp.asarray(0, jnp.int32))
+            for k in chunk_schedule(cfg.max_iters, cfg.fuse_steps, 0):
+                carry, _ = program.run(carry, (Xs, valid), k)
+                yield k
+                if bool(carry[1]):        # converged inside this chunk
+                    break
+            C = np.asarray(carry[0], np.float32)
+            n_it = int(carry[2])
+        else:
+            for it in range(cfg.max_iters):
+                n_it = it + 1
+                Cq = pim.broadcast(
+                    (jnp.asarray(np.round(C).astype(np.int16)),))[0]
+                part = pim.map_reduce(assign_k, (Xs, valid), (Cq,))
+                sums = np.asarray(part["sums"], np.float64)
+                counts = np.asarray(part["counts"], np.float64)
+                newC = np.where(counts[:, None] > 0,
+                                sums / np.maximum(counts[:, None], 1), C)
+                shift = frobenius_shift(C, newC)
+                C = newC.astype(np.float32)
+                yield 1
+                if shift < cfg.tol:
+                    break
         part = pim.map_reduce(
             inertia_k, (Xs, valid),
             (jnp.asarray(np.round(C).astype(np.int16)),))

@@ -20,14 +20,13 @@ import dataclasses
 import warnings
 from typing import Callable, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import dispatch
 from .fixed_point import (_shift_round, fx_dot_hybrid, from_fixed,
-                          to_fixed)
-from .pim import PimSystem, run_steps
+                          mul_round_f32, to_fixed)
+from .pim import PimSystem, chunk_schedule, run_steps
 
 VERSIONS = ("fp32", "int32", "hyb", "bui")
 
@@ -53,6 +52,15 @@ class GdConfig:
     #: accumulation (a sequential-clip semantic no matmul kernel can
     #: express — DESIGN.md §6.3).
     kernel_backend: Optional[str] = None
+    #: step fusion (DESIGN.md §9): compile this many consecutive GD
+    #: iterations into ONE lax.scan launch — the whole kernel -> reduce
+    #: -> update -> re-quantize cycle stays on device between chunk
+    #: boundaries.  1 = the host-orchestrated per-step loop; >1 requires
+    #: full-batch GD (minibatch SGD draws host randomness per step and
+    #: falls back to the per-step loop).  Bit-identical to the serial
+    #: loop for the integer versions.  ``record_every`` still works:
+    #: chunks are clipped so recording points land on chunk boundaries.
+    fuse_steps: int = 1
 
 
 @dataclasses.dataclass
@@ -115,12 +123,61 @@ def _quantize_weights(cfg: GdConfig, w: np.ndarray, b: float):
             to_fixed(b, cfg.frac_bits))
 
 
-def _grad_to_float(cfg: GdConfig, partial) -> tuple[np.ndarray, float]:
-    gw, gb = np.asarray(partial["gw"]), np.asarray(partial["gb"])
-    if cfg.version == "fp32":
-        return gw.astype(np.float32), float(gb)
-    return (np.asarray(from_fixed(jnp.asarray(gw), cfg.frac_bits)),
-            float(from_fixed(jnp.asarray(gb), cfg.frac_bits)))
+def make_gd_step_fns(quant_cfg: GdConfig):
+    """The (prepare, update) closure pair of one GD step.
+
+    ``prepare(carry) -> (wq, bq)`` quantizes the float32 carry for the
+    broadcast; ``update(carry, reduced) -> (carry, None)`` dequantizes
+    the reduced gradient and applies ``w -= scale_f32 * gw`` — all jnp
+    ops, so ONE definition serves the host-orchestrated per-step loop,
+    the fused :class:`~repro.core.pim.StepProgram` scan, and (batched
+    over a lane axis) the scheduler's fused gangs; the paths cannot
+    drift numerically.  ``quant_cfg`` is the weight-quantization config
+    (LOG's LUT versions pass their collapsed int32/hyb base).
+
+    Gradients stay on device: the old loop's per-step
+    ``np.asarray``/``jnp.asarray`` ping-pong (ex-``_grad_to_float``) is
+    gone — host floats materialize only at record/final points.  The
+    update runs in float32 (including the bias, previously a float64
+    python scalar) so the fused scan — which cannot do host float64 —
+    and the serial loop share bit-exact weight trajectories.
+
+    The carry is ``(w, b, s)``: the f32 update scale ``s`` travels IN
+    the carry (constant across steps) because ``mul_round_f32`` needs
+    it as a traced value inside the scan — see its caveat.
+    """
+    f = quant_cfg.frac_bits
+
+    def apply(w, b, s, gw, gb):
+        # mul_round_f32 pins the two-rounding (multiply, then subtract)
+        # sequence: compiled as one scan body XLA CPU would otherwise
+        # contract mul+sub into an FMA and the fused chunk would drift
+        # ULPs from the serial loop (see fixed_point.mul_round_f32)
+        return w - mul_round_f32(s, gw), b - mul_round_f32(s, gb), s
+
+    if quant_cfg.version == "fp32":
+        def prepare(carry):
+            return carry[0], carry[1]
+
+        def update(carry, reduced):
+            w, b, s = carry
+            gw = jnp.asarray(reduced["gw"], jnp.float32)
+            gb = jnp.asarray(reduced["gb"], jnp.float32)
+            return apply(w, b, s, gw, gb), None
+        return prepare, update
+
+    def prepare(carry):
+        w, b, _ = carry
+        return _quantize_weights(quant_cfg, w, b)
+
+    def update(carry, reduced):
+        w, b, s = carry
+        # host-strategy reduces arrive as promoted numpy int64;
+        # jnp.asarray demotes to int32 exactly as the old host path did
+        gw = from_fixed(jnp.asarray(reduced["gw"]), f)
+        gb = from_fixed(jnp.asarray(reduced["gb"]), f)
+        return apply(w, b, s, gw, gb), None
+    return prepare, update
 
 
 def build_local_grad(cfg: GdConfig) -> Callable:
@@ -159,10 +216,15 @@ def _grad_kernel(pim: PimSystem, cfg: GdConfig):
 def fit_steps(dataset, cfg: Optional[GdConfig] = None,
               eval_fn: Optional[Callable] = None,
               _local_override: Optional[Callable] = None):
-    """Generator form of the training loop: one (broadcast -> kernel ->
-    reduce -> host update) PIM iteration per ``next()``; the GdResult
-    travels on StopIteration.  This is the gang-stepping surface the job
-    scheduler interleaves (DESIGN.md §7.3); :func:`fit` drains it."""
+    """Generator form of the training loop; the GdResult travels on
+    StopIteration.  This is the gang-stepping surface the job scheduler
+    interleaves (DESIGN.md §7.3); :func:`fit` drains it.
+
+    Each ``next()`` advances one *scheduling step* and yields the number
+    of GD iterations it covered: 1 for the host-orchestrated per-step
+    loop, up to ``cfg.fuse_steps`` when a fused
+    :class:`~repro.core.pim.StepProgram` chunk drains one ``lax.scan``
+    launch (DESIGN.md §9)."""
     cfg = cfg or GdConfig()
     assert cfg.version in VERSIONS, cfg.version
     pim = dataset.system
@@ -174,34 +236,52 @@ def fit_steps(dataset, cfg: Optional[GdConfig] = None,
     else:
         local = _grad_kernel(pim, cfg)
 
-    w = np.zeros(f, np.float32)
-    b = 0.0
-    history = []
-    rng = np.random.RandomState(cfg.seed)
     n_pc = Xs.shape[1]
-    for it in range(cfg.n_iters):
-        wq, bq = _quantize_weights(cfg, w, b)
-        wq, bq = pim.broadcast((wq, bq))
-        if cfg.minibatch and cfg.minibatch < n_pc:
-            # SGD: every core samples the same per-core slice offset
-            # (keeps shards aligned; bank-resident data is never moved)
-            start = int(rng.randint(0, n_pc - cfg.minibatch + 1))
-            sl = (slice(None), slice(start, start + cfg.minibatch))
-            args = (Xs[sl], ys[sl], mask[sl])
-            n_eff = cfg.minibatch * pim.config.n_cores
-        else:
-            args = (Xs, ys, mask)
-            n_eff = n
-        partial = pim.map_reduce(local, args, (wq, bq))
-        gw, gb = _grad_to_float(cfg, partial)
-        w = w - cfg.lr * (2.0 / n_eff) * gw
-        b = b - cfg.lr * (2.0 / n_eff) * gb
-        if cfg.record_every and ((it + 1) % cfg.record_every == 0
-                                 or it == cfg.n_iters - 1):
-            metric = eval_fn(w, b) if eval_fn else None
-            history.append((it + 1, metric))
-        yield it + 1
-    return GdResult(w=w, b=float(b), history=history, n_iters=cfg.n_iters)
+    minibatch = bool(cfg.minibatch and cfg.minibatch < n_pc)
+    n_eff = cfg.minibatch * pim.config.n_cores if minibatch else n
+    prepare, update = make_gd_step_fns(cfg)
+
+    w = jnp.zeros(f, jnp.float32)
+    b = jnp.float32(0.0)
+    s = jnp.float32(cfg.lr * (2.0 / n_eff))
+    history = []
+
+    def record(it):
+        if cfg.record_every and (it % cfg.record_every == 0
+                                 or it == cfg.n_iters):
+            metric = eval_fn(np.asarray(w), float(b)) if eval_fn else None
+            history.append((it, metric))
+
+    if cfg.fuse_steps > 1 and not minibatch:
+        program = pim.step_program(
+            local, prepare, update,
+            name=(f"lin.step/{grad_kernel_name(cfg)}"
+                  f"/lr{cfg.lr}/n{n_eff}"))
+        it = 0
+        for k in chunk_schedule(cfg.n_iters, cfg.fuse_steps,
+                                cfg.record_every):
+            (w, b, s), _ = program.run((w, b, s), (Xs, ys, mask), k)
+            it += k
+            record(it)
+            yield k
+    else:
+        rng = np.random.RandomState(cfg.seed)
+        for it in range(cfg.n_iters):
+            wq, bq = pim.broadcast(prepare((w, b, s)))
+            if minibatch:
+                # SGD: every core samples the same per-core slice offset
+                # (keeps shards aligned; bank-resident data never moves)
+                start = int(rng.randint(0, n_pc - cfg.minibatch + 1))
+                sl = (slice(None), slice(start, start + cfg.minibatch))
+                args = (Xs[sl], ys[sl], mask[sl])
+            else:
+                args = (Xs, ys, mask)
+            partial = pim.map_reduce(local, args, (wq, bq))
+            (w, b, s), _ = update((w, b, s), partial)
+            record(it + 1)
+            yield 1
+    return GdResult(w=np.asarray(w, np.float32), b=float(b),
+                    history=history, n_iters=cfg.n_iters)
 
 
 def fit(dataset, cfg: Optional[GdConfig] = None,

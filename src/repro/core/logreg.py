@@ -25,9 +25,9 @@ import numpy as np
 
 from ..kernels import dispatch
 from .fixed_point import _shift_round, fx_dot_hybrid
-from .linreg import GdConfig, GdResult, _grad_to_float, _quantize_weights
+from .linreg import GdConfig, GdResult, make_gd_step_fns
 from .lut import SigmoidLut, build_sigmoid_lut, taylor_sigmoid_fixed
-from .pim import PimSystem, run_steps
+from .pim import PimSystem, chunk_schedule, run_steps
 
 VERSIONS = ("fp32", "int32", "int32_lut_mram", "int32_lut_wram",
             "hyb_lut", "bui_lut")
@@ -164,9 +164,11 @@ def _grad_kernel(pim: PimSystem, cfg: LogRegConfig) -> str:
 
 def fit_steps(dataset, cfg: Optional[LogRegConfig] = None,
               eval_fn: Optional[Callable] = None):
-    """Generator form of the LOG loop (one PIM iteration per ``next()``,
-    GdResult on StopIteration) — the gang-stepping surface; :func:`fit`
-    drains it."""
+    """Generator form of the LOG loop (GdResult on StopIteration) — the
+    gang-stepping surface; :func:`fit` drains it.  Each ``next()``
+    yields the number of GD iterations it advanced: 1 per host-
+    orchestrated step, up to ``cfg.fuse_steps`` per fused
+    :class:`~repro.core.pim.StepProgram` chunk (DESIGN.md §9)."""
     cfg = cfg or LogRegConfig()
     assert cfg.version in VERSIONS, cfg.version
     pim = dataset.system
@@ -176,23 +178,39 @@ def fit_steps(dataset, cfg: Optional[LogRegConfig] = None,
     base_cfg = dataclasses.replace(cfg, version=_gd_version_of(cfg.version))
     Xs, ys, mask = dataset.gd_view(cfg.version, cfg.frac_bits, cfg.x8_frac)
     local = _grad_kernel(pim, cfg)
+    prepare, update = make_gd_step_fns(base_cfg)
 
-    w = np.zeros(nf, np.float32)
-    b = 0.0
+    w = jnp.zeros(nf, jnp.float32)
+    b = jnp.float32(0.0)
+    s = jnp.float32(cfg.lr * (1.0 / n))
     history = []
-    for it in range(cfg.n_iters):
-        wq, bq = _quantize_weights(base_cfg, w, b)
-        wq, bq = pim.broadcast((wq, bq))
-        partial = pim.map_reduce(local, (Xs, ys, mask), (wq, bq))
-        gw, gb = _grad_to_float(base_cfg, partial)
-        w = w - cfg.lr * (1.0 / n) * gw
-        b = b - cfg.lr * (1.0 / n) * gb
-        if cfg.record_every and ((it + 1) % cfg.record_every == 0
-                                 or it == cfg.n_iters - 1):
-            metric = eval_fn(w, b) if eval_fn else None
-            history.append((it + 1, metric))
-        yield it + 1
-    return GdResult(w=w, b=float(b), history=history, n_iters=cfg.n_iters)
+
+    def record(it):
+        if cfg.record_every and (it % cfg.record_every == 0
+                                 or it == cfg.n_iters):
+            metric = eval_fn(np.asarray(w), float(b)) if eval_fn else None
+            history.append((it, metric))
+
+    if cfg.fuse_steps > 1:
+        program = pim.step_program(
+            local, prepare, update,
+            name=f"log.step/{grad_kernel_name(cfg)}/lr{cfg.lr}/n{n}")
+        it = 0
+        for k in chunk_schedule(cfg.n_iters, cfg.fuse_steps,
+                                cfg.record_every):
+            (w, b, s), _ = program.run((w, b, s), (Xs, ys, mask), k)
+            it += k
+            record(it)
+            yield k
+    else:
+        for it in range(cfg.n_iters):
+            wq, bq = pim.broadcast(prepare((w, b, s)))
+            partial = pim.map_reduce(local, (Xs, ys, mask), (wq, bq))
+            (w, b, s), _ = update((w, b, s), partial)
+            record(it + 1)
+            yield 1
+    return GdResult(w=np.asarray(w, np.float32), b=float(b),
+                    history=history, n_iters=cfg.n_iters)
 
 
 def fit(dataset, cfg: Optional[LogRegConfig] = None,

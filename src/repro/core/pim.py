@@ -79,6 +79,12 @@ class TransferStats:
     ``map_elementwise`` call) — the scheduler's fused gang step is
     asserted against it (DESIGN.md §7.3).
 
+    ``host_syncs`` counts host synchronization points — places where the
+    host blocks on device results (one per ``map_reduce``/
+    ``map_reduce_custom`` call, one per fused :class:`StepProgram`
+    chunk).  The step-fusion engine's whole point is that a k-step chunk
+    costs ONE sync instead of k (DESIGN.md §9).
+
     ``snapshot()``/``delta(snapshot)`` make the counters attributable
     when several jobs share one system: snapshot before the job, delta
     after, and the job's own bytes fall out even though the globals keep
@@ -91,6 +97,7 @@ class TransferStats:
     shard_transfers: int = 0
     shard_bytes: int = 0
     kernel_launches: int = 0
+    host_syncs: int = 0
 
     def reset(self) -> None:
         for field in dataclasses.fields(TransferStats):
@@ -123,6 +130,21 @@ def run_steps(gen):
             return stop.value
 
 
+def chunk_schedule(n_iters: int, fuse_steps: int, record_every: int):
+    """Chunk sizes covering ``n_iters`` fused-step iterations, with
+    record points forced onto chunk boundaries: each chunk is
+    ``min(fuse_steps, next record point, remaining)`` (shared by the GD
+    and K-Means trainers and the fused gang — DESIGN.md §9.3)."""
+    it = 0
+    while it < n_iters:
+        k = min(fuse_steps, n_iters - it)
+        if record_every:
+            next_rec = (it // record_every + 1) * record_every
+            k = min(k, next_rec - it)
+        yield k
+        it += k
+
+
 # ---------------------------------------------------------------------------
 # Reduction strategies (pluggable per map_reduce call).
 # ---------------------------------------------------------------------------
@@ -133,12 +155,27 @@ class ReduceStrategy:
     ``device_reduce`` runs inside the compiled step (traced); ``finalize``
     runs on the host afterwards; ``count_pim_to_cpu`` models the PIM->CPU
     bytes the schedule moves.  ``cache_token`` namespaces the jit cache.
+
+    Step fusion (DESIGN.md §9): ``fusable`` says whether the schedule can
+    run entirely on device inside a ``lax.scan`` chunk;
+    ``device_reduce_full`` is the fully-on-device reduction the scan body
+    uses (for :class:`HierarchicalReduce` it completes the host-combine
+    leg on fabric); ``count_chunk`` is the analytic per-chunk byte
+    accounting — the reduce still moves k× the single-step bytes even
+    when the host round-trip is fused away.
     """
 
     name = "base"
+    #: False when the per-step reduction needs the host (HostReduce): a
+    #: StepProgram then degrades to per-step map_reduce syncs.
+    fusable = True
 
     def device_reduce(self, partials):
         return partials
+
+    def device_reduce_full(self, partials):
+        """Complete on-device reduction for use inside a fused scan."""
+        return self.device_reduce(partials)
 
     def finalize(self, system: "PimSystem", out):
         return out
@@ -146,12 +183,25 @@ class ReduceStrategy:
     def count_pim_to_cpu(self, system: "PimSystem", out) -> int:
         raise NotImplementedError
 
+    def count_chunk(self, system: "PimSystem", out, k: int) -> None:
+        """Account k fused steps' reduce movement (``out`` is the
+        abstract per-step ``device_reduce`` result)."""
+        system.stats.pim_to_cpu += k * self.count_pim_to_cpu(system, out)
+
     def cache_token(self):
         return self.name
 
 
+def _leaf_bytes(v) -> int:
+    """nbytes of an array OR an abstract value (ShapeDtypeStruct)."""
+    nb = getattr(v, "nbytes", None)
+    if nb is None:
+        nb = int(np.prod(v.shape)) * np.dtype(v.dtype).itemsize
+    return int(nb)
+
+
 def _tree_bytes(tree) -> int:
-    return sum(v.nbytes for v in jax.tree_util.tree_leaves(tree))
+    return sum(_leaf_bytes(v) for v in jax.tree_util.tree_leaves(tree))
 
 
 def _host_sum(tree, axis=0):
@@ -183,9 +233,15 @@ class FabricReduce(ReduceStrategy):
 class HostReduce(ReduceStrategy):
     """Paper-faithful schedule: per-core partials are copied to the host
     and reduced with numpy; the result lives on the host (the caller then
-    ``broadcast``s the updated model, completing the round trip)."""
+    ``broadcast``s the updated model, completing the round trip).
+
+    Not fusable: the reduce itself IS a host round trip, so a
+    :class:`StepProgram` chunk degrades to k per-step syncs (DESIGN.md
+    §9) — faithful to the UPMEM topology, where fusing the update
+    on-device would still leave per-step host reduction."""
 
     name = "host"
+    fusable = False
 
     def count_pim_to_cpu(self, system, out) -> int:
         return _tree_bytes(out)  # stacked (n_cores, ...) leaves
@@ -224,6 +280,21 @@ class HierarchicalReduce(ReduceStrategy):
 
     def count_pim_to_cpu(self, system, out) -> int:
         return _tree_bytes(out)  # (n_groups, ...) rank partials
+
+    def device_reduce_full(self, partials):
+        """In a fused scan the rank partials combine on fabric instead of
+        on the host (int32 accumulation — exact whenever the flat fabric
+        sum is, which the GD/KME value ranges guarantee)."""
+        return jax.tree_util.tree_map(
+            lambda v: jnp.sum(v, axis=0), self.device_reduce(partials))
+
+    def count_chunk(self, system, out, k: int) -> None:
+        # same per-step movement as the unfused schedule: each step the
+        # rank partials leave the ranks AND cross the (modeled) host
+        # link, k times per chunk
+        system.stats.pim_to_cpu += k * self.count_pim_to_cpu(system, out)
+        if self._groups(system.config.n_cores):
+            system.stats.inter_core_via_host += k * _tree_bytes(out)
 
     def finalize(self, system, out):
         # intra-rank movement happened "on fabric"; record the rank->host
@@ -423,6 +494,7 @@ class PimSystem:
             step = self._build_step(fn, strat)
             self._jit_cache[key] = step
         self.stats.kernel_launches += 1
+        self.stats.host_syncs += 1
         out = step(tuple(sharded), tuple(replicated))
         self.stats.pim_to_cpu += strat.count_pim_to_cpu(self, out)
         return strat.finalize(self, out)
@@ -446,6 +518,7 @@ class PimSystem:
             step = jax.jit(_step)
             self._jit_cache[key] = step
         self.stats.kernel_launches += 1
+        self.stats.host_syncs += 1
         out = step(tuple(sharded), tuple(replicated))
         self.stats.pim_to_cpu += _tree_bytes(out) * self.config.n_cores
         return out
@@ -488,6 +561,150 @@ class PimSystem:
             partials = self._per_core(local_fn, sharded, replicated)
             return strat.device_reduce(partials)
         return jax.jit(step)
+
+    def step_program(self, kernel, prepare: Callable, update: Callable,
+                     *, name: str,
+                     strategy: StrategyLike = None) -> "StepProgram":
+        """Build a :class:`StepProgram` over a registered kernel.
+
+        ``prepare(carry) -> replicated`` derives the per-step broadcast
+        arguments (e.g. quantized weights) from the carry; ``update(carry,
+        reduced) -> (carry, out)`` applies the host-update math — both
+        pure jnp functions, traced into the fused chunk.  ``name`` is the
+        jit-cache namespace for the closure pair and must encode every
+        parameter baked into it (same convention as ``named_kernel``)."""
+        return StepProgram(self, kernel, prepare, update, name=name,
+                           strategy=strategy)
+
+
+class StepProgram:
+    """k consecutive training steps compiled into ONE ``lax.scan`` launch.
+
+    The unfused trainers drive every iteration from the host: broadcast
+    the model, launch the kernel, reduce, pull the result back, update in
+    numpy, repeat — the CPU<->PIM synchronization cadence the paper (and
+    PIM-Opt, arXiv:2404.07164) identify as the dominant cost once kernels
+    are resident.  A StepProgram keeps the whole iterate-update-broadcast
+    cycle on device: per scan step it runs ``prepare(carry)`` (weight
+    quantization), the per-core kernel, the strategy's full on-device
+    reduce, and ``update(carry, reduced)`` (dequantize + GD update) —
+    with the carry buffers donated, so k steps cost one dispatch and one
+    host sync instead of k of each (DESIGN.md §9).
+
+    Numerics: prepare/update are the *same* closures the serial loop
+    applies between launches, so for the integer versions a fused chunk
+    is bit-identical to k unfused steps (asserted by
+    tests/test_step_fusion.py).
+
+    Degradation: a non-``fusable`` strategy (HostReduce — the reduce
+    itself is a host round trip) runs the chunk as k ordinary
+    ``map_reduce`` steps with identical accounting to the unfused loop.
+    """
+
+    def __init__(self, system: PimSystem, kernel, prepare: Callable,
+                 update: Callable, *, name: str,
+                 strategy: StrategyLike = None):
+        self.system = system
+        self.prepare = prepare
+        self.update = update
+        self.name = name
+        self.strategy = resolve_reduce_strategy(strategy,
+                                                system.config.reduce)
+        self._kernel = kernel
+        self._kkey, self._fn = system._resolve_kernel(kernel)
+
+    # -- fused chunk ---------------------------------------------------------
+
+    def _build_chunk(self, k: int):
+        prepare, update, strat = self.prepare, self.update, self.strategy
+        per_core, fn = self.system._per_core, self._fn
+
+        def chunk(carry, sharded):
+            def one_step(carry, _):
+                replicated = prepare(carry)
+                partials = per_core(fn, sharded, replicated)
+                reduced = strat.device_reduce_full(partials)
+                return update(carry, reduced)
+            return jax.lax.scan(one_step, carry, None, length=k)
+        # donate the carry: the model state is updated in place on
+        # device, never materialized on the host inside the chunk
+        return jax.jit(chunk, donate_argnums=0)
+
+    def _reduced_shape(self, carry, sharded):
+        """Abstract per-step ``device_reduce`` output (eval_shape, cached)
+        — what the analytic chunk accounting sizes the reduce legs by.
+        Keyed by the operand shapes: one system can run same-named
+        programs over datasets of different widths (and slices share
+        the parent cache), so name alone would serve stale shapes and
+        corrupt the byte accounting."""
+        sig = tuple((v.shape, str(v.dtype)) for v in
+                    jax.tree_util.tree_leaves((carry, sharded)))
+        key = ("step_bytes", self._kkey, self.name,
+               self.strategy.cache_token(), sig,
+               self.system.config.n_cores)
+        out = self.system._jit_cache.get(key)
+        if out is None:
+            def reduce_stage(carry, sharded):
+                partials = self.system._per_core(
+                    self._fn, sharded, self.prepare(carry))
+                return self.strategy.device_reduce(partials)
+            out = jax.eval_shape(reduce_stage, carry, sharded)
+            self.system._jit_cache[key] = out
+        return out
+
+    def run(self, carry, sharded: tuple, k: int):
+        """Advance ``carry`` by ``k`` fused steps over the resident
+        shards; returns ``(carry, outs)`` where ``outs`` stacks the
+        per-step emits (None when ``update`` emits nothing).
+
+        One kernel launch and one host sync for the whole chunk; the
+        analytic byte accounting charges the carry broadcast once, the
+        reduce movement k times, and one chunk-boundary PIM->CPU sync of
+        the final carry + emits (DESIGN.md §9.2)."""
+        sharded = tuple(sharded)
+        if k <= 0:
+            return carry, None
+        if not self.strategy.fusable:
+            return self._run_per_step(carry, sharded, k)
+        # n_cores in the key: slices share the parent jit cache (vmap
+        # backend) and hierarchical rank-partial shapes depend on width
+        key = ("step_program", self._kkey, self.name,
+               self.strategy.cache_token(), len(sharded), k,
+               self.system.config.n_cores)
+        chunk = self.system._jit_cache.get(key)
+        if chunk is None:
+            chunk = self._build_chunk(k)
+            self.system._jit_cache[key] = chunk
+        stats = self.system.stats
+        stats.kernel_launches += 1
+        stats.host_syncs += 1
+        # the carry (model state) enters the banks once per chunk
+        stats.cpu_to_pim += _tree_bytes(carry) * self.system.config.n_cores
+        self.strategy.count_chunk(
+            self.system, self._reduced_shape(carry, sharded), k)
+        carry, outs = chunk(carry, sharded)
+        # one pim->cpu sync per chunk boundary: final carry + emits
+        stats.pim_to_cpu += _tree_bytes(carry) + _tree_bytes(outs)
+        return carry, outs
+
+    def _run_per_step(self, carry, sharded: tuple, k: int):
+        """HostReduce degradation: k single steps, each with the per-step
+        broadcast + host reduce + host-visible update of the unfused
+        loop (byte/launch/sync accounting identical to not fusing)."""
+        outs = []
+        for _ in range(k):
+            replicated = self.system.broadcast(self.prepare(carry))
+            reduced = self.system.map_reduce(
+                self._kernel, sharded, tuple(replicated),
+                strategy=self.strategy)
+            carry, out = self.update(carry, reduced)
+            outs.append(out)
+        if outs and outs[0] is not None:
+            outs = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *outs)
+        else:
+            outs = None
+        return carry, outs
 
 
 # ---------------------------------------------------------------------------

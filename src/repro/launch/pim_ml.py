@@ -60,6 +60,11 @@ def main(argv=None):
                     choices=("pallas_tpu", "pallas_interpret", "jnp_ref"),
                     help="kernel-dispatch backend for the trainer hot "
                          "paths (default: per-platform auto-selection)")
+    ap.add_argument("--fuse-steps", type=int, default=1,
+                    help="compile this many consecutive training steps "
+                         "into one lax.scan launch (LIN/LOG/KME; "
+                         "DESIGN.md §9).  1 = per-step host loop; 32 is "
+                         "a good default for the fused engine")
     ap.add_argument("--sweep", default="",
                     help="hyper sweep, e.g. lr=0.05,0.1,0.2")
     ap.add_argument("--param", action="append", default=[],
@@ -74,6 +79,11 @@ def main(argv=None):
     params = {k: _parse_value(v) for k, v in params.items()}
     if args.kernel_backend:
         params["kernel_backend"] = args.kernel_backend
+    if args.fuse_steps > 1:
+        if "fuse_steps" not in wl.defaults:
+            ap.error(f"--fuse-steps does not apply to {wl.name} "
+                     f"(not an iterative GD/Lloyd's workload)")
+        params["fuse_steps"] = args.fuse_steps
     if args.iters > 0:
         iter_key = next((k for k in ("max_iter", "n_iters")
                          if k in wl.defaults), None)

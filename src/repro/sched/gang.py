@@ -18,6 +18,12 @@ register (``linreg.build_local_grad`` / ``logreg.build_local_grad``), so
 fused and unfused fits cannot drift numerically; for the integer
 versions they are bit-identical (asserted by tests/test_sched.py).
 
+Step fusion composes with lane fusion (DESIGN.md §9.3): when the gang's
+specs carry ``fuse_steps > 1``, the lane-batched kernel is driven by a
+:class:`~repro.core.pim.StepProgram` — K jobs × k iterations advance in
+ONE ``lax.scan`` launch, with the ``(K, F)`` lane weights as the donated
+carry and a per-lane active mask freezing cancelled lanes on device.
+
 A new workload opts into fusion by (a) exposing a GD-shaped config via
 ``Workload._config`` and (b) being added to :data:`FUSABLE_WORKLOADS`
 with its per-core kernel builder and host update scale — see DESIGN.md
@@ -34,7 +40,7 @@ import numpy as np
 
 from ..api.registry import FitResult, TrainerSpec, Workload
 from ..core import linreg, logreg
-from ..core.fixed_point import from_fixed
+from ..core.fixed_point import from_fixed, mul_round_f32
 from ..core.linreg import GdResult, _quantize_weights
 from ..core.logreg import _gd_version_of
 
@@ -124,8 +130,15 @@ class FusedGdSweep:
         self.k = len(self.specs)
         f = dataset.n_features
         self.w = [np.zeros(f, np.float32) for _ in self.specs]
-        self.b = [0.0 for _ in self.specs]
+        # float32 lane biases: the serial trainers accumulate the bias in
+        # float32 (a scan carry cannot hold host float64), and bit parity
+        # with them requires the gang to match precision
+        self.b = np.zeros(self.k, np.float32)
         self.active = [True] * self.k
+        #: per-lane float32 update scale, rounded from the float64
+        #: product exactly as the serial trainers round theirs
+        self._lane_scale = np.asarray(
+            [c.lr * self.scale for c in self.cfgs], np.float32)
 
         self.view = dataset.gd_view(cfg0.version, cfg0.frac_bits,
                                     cfg0.x8_frac)
@@ -137,6 +150,20 @@ class FusedGdSweep:
         self.kernel = self.pim.named_kernel(
             f"sched.fused/K{self.k}/{family.kernel_name(cfg0)}",
             lambda: fused)
+
+        # step fusion x lane fusion: drive the batched kernel from a
+        # StepProgram so one launch advances all K lanes k iterations
+        self.fuse_steps = max(1, int(getattr(cfg0, "fuse_steps", 1)))
+        self._program = None
+        self._carry = None      # device-resident lane state between chunks
+        if self.fuse_steps > 1:
+            prepare, update = self._make_lane_step_fns()
+            lrs = ",".join(repr(c.lr) for c in self.cfgs)
+            self._program = self.pim.step_program(
+                self.kernel, prepare, update,
+                name=(f"sched.fusedstep/K{self.k}"
+                      f"/{family.kernel_name(cfg0)}/lr{lrs}"
+                      f"/n{dataset.n}"))
 
     @property
     def done(self) -> bool:
@@ -154,9 +181,8 @@ class FusedGdSweep:
 
     def _grads_to_float(self, partial):
         """Batched inverse of the lane quantization (elementwise, so
-        per-lane rows are bit-identical to serial ``_grad_to_float`` —
-        which cannot be called directly: it casts ``gb`` to a python
-        scalar, and here ``gb`` is the ``(K,)`` lane vector)."""
+        per-lane rows are bit-identical to the serial trainers'
+        device-side dequantize in ``linreg.make_gd_step_fns``)."""
         cfg = self.base_cfgs[0]
         if cfg.version == "fp32":
             return (np.asarray(partial["gw"], np.float32),
@@ -166,20 +192,82 @@ class FusedGdSweep:
                 np.asarray(from_fixed(jnp.asarray(partial["gb"]),
                                       cfg.frac_bits)))
 
+    def _make_lane_step_fns(self):
+        """Lane-batched (prepare, update) for the StepProgram scan —
+        per-lane rows bit-identical to the serial trainers' step fns
+        (same elementwise quantize, dequantize, barrier'd f32 update)."""
+        cfg = self.base_cfgs[0]
+        f = cfg.frac_bits
+        fp32 = cfg.version == "fp32"
+
+        def prepare(carry):
+            W, B, _, _ = carry
+            return _quantize_weights(cfg, W, B)
+
+        def update(carry, reduced):
+            # ``ls`` (per-lane f32 scale) rides in the carry so
+            # mul_round_f32 sees a traced value (see its caveat)
+            W, B, act, ls = carry
+            if fp32:
+                GW = jnp.asarray(reduced["gw"], jnp.float32)
+                GB = jnp.asarray(reduced["gb"], jnp.float32)
+            else:
+                GW = from_fixed(jnp.asarray(reduced["gw"]), f)
+                GB = from_fixed(jnp.asarray(reduced["gb"]), f)
+            # two-rounding update pinned against FMA contraction, per
+            # lane exactly as the serial trainers round (fixed_point.
+            # mul_round_f32)
+            dW = mul_round_f32(ls[:, None], GW)
+            dB = mul_round_f32(ls, GB)
+            W = jnp.where(act[:, None], W - dW, W)
+            B = jnp.where(act, B - dB, B)
+            return (W, B, act, ls), None
+        return prepare, update
+
+    def _sync_carry(self) -> None:
+        """Adopt the device-resident chunk carry into the host lane
+        state (inactive lanes were frozen on device, so adopting every
+        row is equivalent to the serial path's skip)."""
+        if self._carry is None:
+            return
+        W = np.asarray(self._carry[0], np.float32)
+        self.w = [W[i] for i in range(self.k)]
+        self.b = np.asarray(self._carry[1], np.float32)
+
     def step(self) -> bool:
-        """Advance every active lane one GD iteration; True when done."""
+        """Advance every active lane one GD iteration — or, with
+        ``fuse_steps`` set, one whole scan chunk of iterations in a
+        single launch; True when done."""
         if self.done:
             return True
-        Wq, Bq = self.pim.broadcast(self._quantize_lanes())
         Xs, ys, mask = self.view
+        if self._program is not None:
+            k = min(self.fuse_steps, self.n_iters - self.it)
+            if self._carry is None:
+                # built from host state once (and again after a lane
+                # cancellation changes the active mask); between chunks
+                # the lane weights stay device-resident — no per-chunk
+                # host round-trip, that is the point of the engine
+                self._carry = (jnp.asarray(np.stack(self.w)),
+                               jnp.asarray(self.b),
+                               jnp.asarray(self.active),
+                               jnp.asarray(self._lane_scale))
+            self._carry, _ = self._program.run(self._carry,
+                                               (Xs, ys, mask), k)
+            self.it += k
+            if self.done:
+                self._sync_carry()
+                self._carry = None
+            return self.done
+        Wq, Bq = self.pim.broadcast(self._quantize_lanes())
         partial = self.pim.map_reduce(self.kernel, (Xs, ys, mask),
                                       (Wq, Bq))
         gw_all, gb_all = self._grads_to_float(partial)
-        for i, cfg in enumerate(self.cfgs):
+        for i in range(self.k):
             if not self.active[i]:
                 continue
-            self.w[i] = self.w[i] - cfg.lr * self.scale * gw_all[i]
-            self.b[i] = self.b[i] - cfg.lr * self.scale * float(gb_all[i])
+            self.w[i] = self.w[i] - self._lane_scale[i] * gw_all[i]
+            self.b[i] = self.b[i] - self._lane_scale[i] * gb_all[i]
         self.it += 1
         return self.done
 
@@ -188,6 +276,11 @@ class FusedGdSweep:
         computes its gradient — one launch is all-or-nothing — but the
         lane's host state freezes and it reports no result)."""
         self.active[lane] = False
+        if self._carry is not None:
+            # pull the surviving state back and rebuild the carry next
+            # chunk so the new active mask reaches the device
+            self._sync_carry()
+            self._carry = None
 
     def result(self, lane: int) -> Optional[FitResult]:
         if not self.active[lane]:

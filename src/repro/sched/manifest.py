@@ -153,6 +153,7 @@ def job_report(handles: List[JobHandle]) -> List[dict]:
             "priority": h.priority,
             "cores": h.n_cores,
             "steps": h.steps,
+            "iters": h.iters,
             "fused": h.fused,
             "modeled_dpu_seconds": h.modeled_seconds,
         }

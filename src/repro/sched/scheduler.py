@@ -60,12 +60,16 @@ _COST_VERSIONS = {"dtree": "fp32", "kmeans": "int16"}
 class JobHandle:
     """Caller-facing view of one submitted training job.
 
-    Fields filled in as the job progresses: ``state``, ``steps``,
+    Fields filled in as the job progresses: ``state``, ``steps``
+    (scheduling turns taken — with step fusion one turn drains a whole
+    ``lax.scan`` chunk), ``iters`` (trainer iterations covered: the
+    ``fit_steps`` generators yield how many iterations each turn
+    advanced, 1 unfused, up to ``fuse_steps`` fused — DESIGN.md §9.3),
     ``result`` (FitResult on DONE), ``error`` (the exception on FAILED),
     ``transfer`` (the job's attributable TransferStats delta; for fused
     jobs this is the whole gang's delta — they share one slice),
-    ``modeled_seconds`` (DpuCostModel cycle accounting), and ``lease``
-    (the core extent while running).
+    ``modeled_seconds`` (DpuCostModel cycle accounting, per iteration),
+    and ``lease`` (the core extent while running).
     """
 
     def __init__(self, job_id: int, workload: Workload, spec: TrainerSpec,
@@ -78,6 +82,7 @@ class JobHandle:
         self.name = name or f"job{job_id}:{workload.name}/{spec.version}"
         self.state = JobState.QUEUED
         self.steps = 0
+        self.iters = 0
         self.result: Optional[FitResult] = None
         self.error: Optional[BaseException] = None
         self.transfer: Optional[TransferStats] = None
@@ -178,7 +183,7 @@ class _SingleRun(_Runnable):
             job.transfer = self._transfer_delta()
             return True
         try:
-            next(self.gen)
+            advanced = next(self.gen)
         except StopIteration as stop:
             job.result = stop.value
             job.state = JobState.DONE
@@ -189,8 +194,14 @@ class _SingleRun(_Runnable):
             job.state = JobState.FAILED
             job.transfer = self._transfer_delta()
             return True
+        # generators yield the iteration count each turn covered (a
+        # fused chunk drains several); tolerate legacy generators that
+        # yield something else by charging one iteration
+        advanced = advanced if isinstance(advanced, int) and advanced > 0 \
+            else 1
         job.steps += 1
-        job.modeled_seconds += self._step_seconds
+        job.iters += advanced
+        job.modeled_seconds += advanced * self._step_seconds
         return False
 
 
@@ -238,11 +249,14 @@ class _FusedRun(_Runnable):
                 job.state = JobState.FAILED
                 job.transfer = delta
             return True
-        if self.gang.it > it_before:     # a launch actually happened
+        advanced = self.gang.it - it_before
+        if advanced:                     # a launch actually happened
             for lane, job in enumerate(self.jobs):
                 if self.gang.active[lane]:
-                    job.steps += 1
-                    job.modeled_seconds += self._step_seconds[lane]
+                    job.steps += 1       # one turn, maybe a whole chunk
+                    job.iters += advanced
+                    job.modeled_seconds += (advanced
+                                            * self._step_seconds[lane])
         if finished:
             self._finish()
         return finished

@@ -1,9 +1,11 @@
 # Developer entry points.  `make check` is the fast gate (~1 min);
 # `make test` is the full tier-1 suite; `make bench` prints the paper
-# figure reproductions as CSV; `make jobs` runs the scheduler demo.
+# figure reproductions as CSV; `make jobs` runs the scheduler demo;
+# `make compare` runs the Fig. 13-17 PIM/host/gpu-model comparison on
+# tiny shapes and records benchmarks/out/compare.json.
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check test bench bench-fusion quickstart jobs
+.PHONY: check test bench bench-fusion compare quickstart jobs
 
 check:
 	./scripts/ci.sh
@@ -16,6 +18,9 @@ bench:
 
 bench-fusion:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.step_fusion_bench
+
+compare:
+	PYTHONPATH=$(PYTHONPATH) python -m repro.launch.compare --tiny
 
 quickstart:
 	PYTHONPATH=$(PYTHONPATH) python examples/quickstart.py

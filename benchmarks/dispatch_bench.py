@@ -16,8 +16,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.core import dtree, kmeans
-from repro.core.pim import PimConfig, PimSystem
 from repro.kernels import dispatch
+from repro.systems import PimConfig, PimSystem
 from .common import row, time_call
 
 _BACKENDS = ("jnp_ref", "pallas_interpret")

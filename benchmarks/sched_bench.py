@@ -45,7 +45,7 @@ def _serial(X, y, lrs):
     coefs = []
     for lr in lrs:
         est = make_estimator("linreg", version=VERSION, lr=lr,
-                             n_iters=N_ITERS, pim=pim).fit(ds)
+                             n_iters=N_ITERS, system=pim).fit(ds)
         coefs.append(est.coef_)
     return coefs
 

@@ -2,8 +2,12 @@
 
 One PimSystem session, one bank-resident PimDataset per training set,
 every version trained through the workload registry — the 60-second tour
-of the reproduction.  (Background on the execution model, dataset
-lifecycle, and reduction strategies: DESIGN.md §2-§3.)
+of the reproduction.  Every CPU baseline below is the SAME workload
+fitted on a ``HostSystem`` (the processor-centric ``System`` target,
+DESIGN.md §10) — there is no separate baseline code path anymore.
+(Background on the execution model, dataset lifecycle, and reduction
+strategies: DESIGN.md §2-§3; the three-way PIM/host/modeled-GPU
+comparison: `python -m repro.launch.compare --tiny`.)
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,8 +15,8 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.api import PimConfig, PimSystem, get_workload, make_estimator
-from repro.core import dtree, kmeans, linreg, logreg
+from repro.api import (PimConfig, PimSystem, get_workload, make_estimator,
+                       make_system)
 from repro.core.metrics import (accuracy, adjusted_rand_index,
                                 training_error_rate)
 from repro.data.synthetic import (make_blobs, make_classification,
@@ -22,17 +26,19 @@ from repro.data.synthetic import (make_blobs, make_classification,
 def main():
     print("=== PIM-ML quickstart (paper: Gomez-Luna et al., 2022) ===\n")
     pim = PimSystem(PimConfig(n_cores=16))
+    host = make_system("host")     # the processor-centric CPU baseline
 
     # -- linear regression (paper §3.1, Fig. 6) ------------------------------
     # The dataset is partitioned across the banks ONCE; the four-version
     # sweep reuses the resident shards (one transfer per data precision).
     X, y, _ = make_linear_dataset(8192, 16, decimals=4, seed=0)
     ds = pim.put(X, y)
+    hds = host.put(X, y)
     print("LIN (8192x16 synthetic, 500 iters)")
-    cpu = linreg.train_cpu_baseline(X, y)
+    cpu = make_estimator("linreg", version="fp32", system=host).fit(hds)
     print(f"  CPU float32      : {training_error_rate(cpu.predict(X), y):.2f}% err")
     for ver in get_workload("linreg").versions:
-        est = make_estimator("linreg", version=ver, pim=pim).fit(ds)
+        est = make_estimator("linreg", version=ver, system=pim).fit(ds)
         print(f"  PIM {ver:6s}       : "
               f"{training_error_rate(est.predict(X), y):.2f}% err")
     print(f"  shard transfers for all 4 versions: "
@@ -41,41 +47,46 @@ def main():
 
     # -- logistic regression (paper §3.2, Fig. 7) -----------------------------
     # Same PimDataset: LOG shares LIN's precision views, so no new
-    # CPU->PIM transfer happens here at all.
+    # CPU->PIM transfer happens here at all.  On the host target, fp32
+    # automatically uses the exact sigmoid (native transcendentals),
+    # exactly as the paper's MKL baseline does.
     print("\nLOG (same resident dataset; LUT sigmoid vs Taylor)")
-    cpu = logreg.train_cpu_baseline(X, y)
+    cpu = make_estimator("logreg", version="fp32", system=host).fit(hds)
     print(f"  CPU float32      : "
-          f"{training_error_rate(cpu.predict(X), y, 0.0):.2f}% err")
+          f"{training_error_rate(cpu.decision_function(X), y, 0.0):.2f}% err")
     for ver in ("int32", "int32_lut_wram", "bui_lut"):
-        est = make_estimator("logreg", version=ver, pim=pim).fit(ds)
+        est = make_estimator("logreg", version=ver, system=pim).fit(ds)
         print(f"  PIM {ver:15s}: "
               f"{training_error_rate(est.decision_function(X), y, 0.0):.2f}% err")
 
     # -- decision tree (paper §3.3) -------------------------------------------
     print("\nDTR (60k x 16, depth 10, extremely randomized)")
     Xc, yc = make_classification(60_000, 16, seed=0, class_sep=1.4)
-    tree = make_estimator("dtree", max_depth=10, pim=pim).fit(Xc, yc)
-    tcpu = dtree.train_cpu_baseline(Xc, yc, dtree.TreeConfig(max_depth=10))
+    tree = make_estimator("dtree", max_depth=10, system=pim).fit(Xc, yc)
+    tcpu = make_estimator("dtree", max_depth=10,
+                          system=make_system("host")).fit(Xc, yc)
     print(f"  PIM accuracy     : {accuracy(tree.predict(Xc), yc):.4f} "
           f"({tree.n_nodes_} nodes)")
     print(f"  CPU accuracy     : {accuracy(tcpu.predict(Xc), yc):.4f}")
 
     # -- k-means (paper §3.4) --------------------------------------------------
+    # int16 = the paper's quantized PIM version; the float baseline is
+    # version="fp32" on the host target — same trainer, no quantization.
     print("\nKME (20k x 16, k=16, int16-quantized PIM vs float CPU)")
     Xb, _, _ = make_blobs(20_000, 16, centers=16, seed=0)
     km = make_estimator("kmeans", n_clusters=16, seed=3, n_init=2,
-                        pim=pim).fit(Xb)
-    rc = kmeans.train_cpu_baseline(
-        Xb, kmeans.KMeansConfig(k=16, seed=3, n_init=2))
+                        system=pim).fit(Xb)
+    rc = make_estimator("kmeans", version="fp32", n_clusters=16, seed=3,
+                        n_init=2, system=make_system("host")).fit(Xb)
     print(f"  adjusted Rand index(PIM, CPU) = "
-          f"{adjusted_rand_index(km.labels_, rc.labels):.4f} "
+          f"{adjusted_rand_index(km.labels_, rc.labels_):.4f} "
           f"(paper: 0.999)")
 
     # -- the PIM execution model is real: host-reduce strategy ----------------
     print("\nHost-orchestrated reduce (the paper's DPU topology):")
     pim_host = PimSystem(PimConfig(n_cores=16, reduce="host"))
     est = make_estimator("linreg", version="int32", n_iters=100,
-                         pim=pim_host).fit(pim_host.put(X, y))
+                         system=pim_host).fit(pim_host.put(X, y))
     print(f"  int32 via host round trip: "
           f"{training_error_rate(est.predict(X), y):.2f}% err;"
           f" bytes host->PIM {pim_host.stats.cpu_to_pim:,},"
@@ -104,6 +115,20 @@ def main():
     print(f"  gang total: {d.kernel_launches} launches for "
           f"{len(handles)} jobs x 500 steps; "
           f"{d.shard_transfers} shard transfers (one resident dataset)")
+
+    # -- mixed PIM + host machine under one scheduler (DESIGN.md §10.3) -------
+    print("\nMixed-target queue (PIM tenants + a host-lane baseline):")
+    mixed = PimScheduler({"pim": PimSystem(PimConfig(n_cores=16)),
+                          "host": make_system("host", n_cores=4)},
+                         rank_size=8)
+    h_pim = mixed.submit("linreg", (X, y), version="int32", n_iters=120)
+    h_cpu = mixed.submit("linreg", (X, y), version="fp32", n_iters=120,
+                         target="host")
+    mixed.drain()
+    for h in (h_pim, h_cpu):
+        print(f"  {h.target:4s} {h.spec.version:6s}: {h.state.value}, "
+              f"dram {h.transfer.dram_bytes:,} B, "
+              f"cpu->pim {h.transfer.cpu_to_pim:,} B")
 
 
 if __name__ == "__main__":

@@ -4,9 +4,11 @@
 # parity (interpret-mode Pallas vs jnp-ref), the small-shape kernel
 # cases, the job-scheduler core (allocator/slices/queue/failure
 # isolation), the step-fusion engine (fused-vs-serial bit parity, the
-# one-launch-per-chunk assertion), and the legacy deprecation surface;
-# large-shape kernel cases, large-K queues, fused-sweep execution, and
-# long fused runs are marked @slow.
+# one-launch-per-chunk assertion), the backend-portable System protocol
+# (PIM/host/modeled-GPU parity, mixed-target scheduling), and the
+# legacy deprecation surface; large-shape kernel cases, large-K queues,
+# fused-sweep execution, long fused runs, and the full compare driver
+# are marked @slow.
 # The LM-stack breadth (arch smoke matrix, serving, multi-device
 # subprocess equivalence) and the quality reproduction run in the full
 # tier-1 suite: `make test` / plain pytest.
@@ -28,4 +30,5 @@ exec python -m pytest -q -m "not slow" \
     tests/test_sched.py \
     tests/test_sgd_and_loader.py \
     tests/test_step_fusion.py \
+    tests/test_systems.py \
     "$@"

@@ -4,6 +4,11 @@ The paper's premise (§2.2, Fig. 3) is that training data is partitioned
 ONCE and stays bank-resident across iterations.  This package makes that
 a first-class object model (DESIGN.md §3):
 
+  System / make_system    backend-portable execution targets (DESIGN.md
+                          §10): PimSystem (default), HostSystem (the
+                          processor-centric CPU baseline), and
+                          ModeledGpuSystem (A100 roofline reporting) —
+                          every workload runs unmodified on any of them
   PimSystem / PimConfig   execution session over N PIM cores
   PimDataset              bank-resident dataset handle (PimSystem.put);
                           quantized views are lazy and cached, so sweeps
@@ -21,12 +26,14 @@ Typical session::
     pim = PimSystem(PimConfig(n_cores=16))
     ds = pim.put(X, y)                       # one CPU->PIM partition
     for lr in (0.05, 0.1, 0.2):              # sweep reuses the banks
-        est = make_estimator("linreg", version="hyb", lr=lr, pim=pim)
+        est = make_estimator("linreg", version="hyb", lr=lr, system=pim)
         est.fit(ds)
 """
-from ..core.pim import (DpuCostModel, FabricReduce, HierarchicalReduce,
-                        HostReduce, PimConfig, PimSystem, ReduceStrategy,
-                        ReduceVia, TransferStats, resolve_reduce_strategy)
+from ..systems import (DpuCostModel, FabricReduce, GpuModelConfig,
+                       HierarchicalReduce, HostConfig, HostReduce,
+                       HostSystem, ModeledGpuSystem, PimConfig, PimSystem,
+                       ReduceStrategy, ReduceVia, System, TransferStats,
+                       make_system, resolve_reduce_strategy)
 from .dataset import PimDataset
 from .estimator import PimEstimator, make_estimator
 from .registry import (FitResult, TrainerSpec, Workload, get_workload,
@@ -49,10 +56,12 @@ def __getattr__(name: str):
 
 
 __all__ = [
-    "DpuCostModel", "FabricReduce", "FitResult", "HierarchicalReduce",
-    "HostReduce", "PimConfig", "PimDataset", "PimEstimator", "PimSystem",
-    "ReduceStrategy", "ReduceVia", "TrainerSpec", "TransferStats",
-    "Workload", "get_workload", "kmeans_sq_distances", "list_workloads",
-    "make_estimator", "register_workload", "resolve_reduce_strategy",
+    "DpuCostModel", "FabricReduce", "FitResult", "GpuModelConfig",
+    "HierarchicalReduce", "HostConfig", "HostReduce", "HostSystem",
+    "ModeledGpuSystem", "PimConfig", "PimDataset", "PimEstimator",
+    "PimSystem", "ReduceStrategy", "ReduceVia", "System", "TrainerSpec",
+    "TransferStats", "Workload", "get_workload", "kmeans_sq_distances",
+    "list_workloads", "make_estimator", "make_system",
+    "register_workload", "resolve_reduce_strategy",
     *_SCHED_EXPORTS,
 ]

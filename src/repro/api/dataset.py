@@ -148,8 +148,25 @@ class PimDataset:
                     self.mask())
         return self._cached(("tree",), build)
 
-    def kmeans_view(self) -> KMeansView:
-        """Symmetric int16 quantization to +-KMEANS_QUANT_RANGE + shards."""
+    def kmeans_view(self, version: str = "int16") -> KMeansView:
+        """K-Means data view, cached per precision.
+
+        ``"int16"``: symmetric quantization to +-KMEANS_QUANT_RANGE
+        (the paper's PIM version).  ``"fp32"``: un-quantized float32 —
+        the processor-centric baseline precision (scale 1.0, no
+        quantization round-trip; DESIGN.md §10.3)."""
+        if version == "fp32":
+            def build():
+                Xf = np.asarray(self.X, np.float32)
+                return KMeansView(shards=self.system.shard_rows(Xf),
+                                  mask=self.mask(),
+                                  host_q=Xf,
+                                  scale=np.float32(1.0))
+            return self._cached(("kmeans", "fp32"), build)
+        if version != "int16":
+            raise ValueError(f"unknown kmeans view precision {version!r}; "
+                             f"known: ('int16', 'fp32')")
+
         def build():
             X = np.asarray(self.X, np.float32)
             amax = float(np.abs(X).max())
@@ -161,7 +178,7 @@ class PimDataset:
                               mask=self.mask(),
                               host_q=Xq,
                               scale=np.float32(scale))
-        return self._cached(("kmeans",), build)
+        return self._cached(("kmeans", "int16"), build)
 
 
 def as_dataset(X, y, system) -> PimDataset:

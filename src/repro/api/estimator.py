@@ -5,9 +5,19 @@ implementations "as Scikit-learn estimator objects", §4; sklearn itself
 is not installable offline, so the fit/predict/score/get_params protocol
 is implemented directly and is duck-type compatible with pipelines).
 
-``fit`` accepts either raw arrays (one CPU->PIM partition per call, like
-the old API) or a :class:`~repro.api.dataset.PimDataset` — the sweep
-path where the partition is paid once per session.
+``fit`` accepts either raw arrays (one placement per call, like the old
+API) or a :class:`~repro.api.dataset.PimDataset` — the sweep path where
+the placement is paid once per session.
+
+The estimator is backend-portable (DESIGN.md §10): ``system=`` accepts
+ANY :class:`~repro.systems.base.System` — the default ``PimSystem``, a
+``HostSystem`` CPU baseline, or a ``ModeledGpuSystem`` — and the fit
+runs there unmodified::
+
+    make_estimator("linreg", version="fp32",
+                   system=make_system("host")).fit(X, y)
+
+(``pim=`` remains accepted as a deprecated alias for one PR.)
 
 Hyperparameters flow through to the trainers untyped, so every knob the
 workload registry declares is available here — including ``fuse_steps``
@@ -19,32 +29,60 @@ versions and ~an order of magnitude faster wall-clock.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Optional
 
-from ..core.pim import PimConfig, PimSystem
+from ..systems import PimConfig, PimSystem, System
 from .dataset import PimDataset
 from .registry import FitResult, Workload, get_workload
 
 
-def _default_pim(n_cores: int = 16) -> PimSystem:
+def _default_system(n_cores: int = 16) -> PimSystem:
     return PimSystem(PimConfig(n_cores=n_cores))
+
+
+def _resolve_system_kwarg(system: Optional[System],
+                          pim: Optional[System]) -> Optional[System]:
+    """Fold the deprecated ``pim=`` alias into ``system=`` (one
+    DeprecationWarning per call site, pattern of core/estimators.py)."""
+    if pim is not None:
+        warnings.warn(
+            "the pim= keyword is deprecated; pass system= (any "
+            "repro.systems.System — PimSystem, HostSystem, "
+            "ModeledGpuSystem)", DeprecationWarning, stacklevel=3)
+        if system is None:
+            system = pim
+    return system
 
 
 class PimEstimator:
     """sklearn-style facade over any registered workload."""
 
     def __init__(self, workload, version: Optional[str] = None,
-                 n_cores: int = 16, pim: Optional[PimSystem] = None,
-                 **params):
+                 n_cores: int = 16, pim: Optional[System] = None,
+                 system: Optional[System] = None, **params):
         self.workload: Workload = (get_workload(workload)
                                    if isinstance(workload, str) else workload)
         # validate eagerly so a typo'd hyperparameter fails at construction
         spec = self.workload.spec(version, **params)
         self.version = spec.version
-        self.pim = pim or _default_pim(n_cores)
-        self.n_cores = self.pim.config.n_cores
+        system = _resolve_system_kwarg(system, pim)
+        self.system: System = system or _default_system(n_cores)
+        self.n_cores = self.system.config.n_cores
         self._params = dict(spec.params)
         self.result_: Optional[FitResult] = None
+
+    # -- legacy alias --------------------------------------------------------
+
+    @property
+    def pim(self) -> System:
+        """Deprecated name for :attr:`system` (kept for one PR)."""
+        return self.system
+
+    @pim.setter
+    def pim(self, value: System) -> None:
+        self.system = value
+        self.n_cores = value.config.n_cores
 
     # -- sklearn parameter protocol -----------------------------------------
 
@@ -58,7 +96,8 @@ class PimEstimator:
         # call leaves the estimator untouched
         version = params.pop("version", self.version)
         n_cores = params.pop("n_cores", None)
-        pim = params.pop("pim", None)
+        system = _resolve_system_kwarg(params.pop("system", None),
+                                       params.pop("pim", None))
         unknown = set(params) - set(self.workload.defaults)
         if unknown:
             raise ValueError(f"invalid parameters {sorted(unknown)} for "
@@ -71,13 +110,14 @@ class PimEstimator:
         self._params = hyper
         if n_cores is not None:
             # rebuild the session at the new core count, preserving the
-            # rest of its config (reduce strategy, backend, threads)
+            # rest of its config (system kind, reduce strategy, backend,
+            # threads)
             self.n_cores = int(n_cores)
-            self.pim = PimSystem(dataclasses.replace(
-                self.pim.config, n_cores=self.n_cores))
-        if pim is not None:
-            self.pim = pim
-            self.n_cores = self.pim.config.n_cores
+            self.system = type(self.system)(dataclasses.replace(
+                self.system.config, n_cores=self.n_cores))
+        if system is not None:
+            self.system = system
+            self.n_cores = self.system.config.n_cores
         return self
 
     # -- estimation protocol -------------------------------------------------
@@ -88,15 +128,16 @@ class PimEstimator:
                 raise ValueError(
                     "y must not be passed alongside a PimDataset — the "
                     "dataset already holds its labels; rebuild it with "
-                    "PimSystem.put(X, y) to change them")
-            # a dataset is bound to the session holding its shards;
+                    "System.put(X, y) to change them")
+            # a dataset is bound to the system holding its shards;
             # training runs there.  Adopt it so the estimator's config
-            # and stats refer to the session that actually trained.
+            # and stats refer to the system that actually trained.
             ds = X
-            self.pim = ds.system
-            self.n_cores = self.pim.config.n_cores
+            self.system = ds.system
+            self.n_cores = self.system.config.n_cores
         else:
-            ds = self.pim.put(X, None if self.workload.unsupervised else y)
+            ds = self.system.put(X, None if self.workload.unsupervised
+                                 else y)
         spec = self.workload.spec(self.version, **self._params)
         self.result_ = self.workload.fit(ds, spec)
         for name, value in self.result_.attributes.items():
@@ -141,10 +182,13 @@ class PimEstimator:
 
 
 def make_estimator(name: str, version: Optional[str] = None,
-                   n_cores: int = 16, pim: Optional[PimSystem] = None,
+                   n_cores: int = 16, pim: Optional[System] = None,
+                   system: Optional[System] = None,
                    **params) -> PimEstimator:
     """Construct an estimator for any registered workload by name.
 
-    ``make_estimator("kmeans", version="int16", n_clusters=8)``"""
+    ``make_estimator("kmeans", version="int16", n_clusters=8)`` — pass
+    ``system=`` to target a specific execution backend (PIM, host CPU,
+    or the modeled GPU; DESIGN.md §10)."""
     return PimEstimator(get_workload(name), version=version,
-                        n_cores=n_cores, pim=pim, **params)
+                        n_cores=n_cores, pim=pim, system=system, **params)

@@ -7,8 +7,10 @@ behind one ``TrainerSpec -> FitResult`` shape:
     (``GdConfig``/``LogRegConfig``/``TreeConfig``/``KMeansConfig``) into a
     (workload, version, params) triple;
   * :class:`Workload` adapts a trainer to the spec: build the native
-    config, fit on a :class:`~repro.api.dataset.PimDataset`, and serve
-    host-side prediction/scoring off the fitted model;
+    config, fit on a :class:`~repro.api.dataset.PimDataset` — whose
+    owning :class:`~repro.systems.base.System` may be any execution
+    target (PIM, host-CPU baseline, modeled GPU — DESIGN.md §10) —
+    and serve host-side prediction/scoring off the fitted model;
   * :func:`register_workload` / :func:`get_workload` is the lookup the
     estimator facade and the launchers resolve names through (aliases
     cover the paper's LIN/LOG/DTR/KME abbreviations).

@@ -149,7 +149,9 @@ class KMeansWorkload(Workload):
 
     name = "kmeans"
     aliases = ("kme",)
-    versions = ("int16",)
+    #: "int16" = the paper's quantized PIM version; "fp32" = the
+    #: processor-centric float baseline (DESIGN.md §10.3)
+    versions = kmeans.VERSIONS
     unsupervised = True
     defaults = {"n_clusters": 16, "max_iter": 300, "tol": 1e-4,
                 "n_init": 1, "seed": 0, "kernel_backend": None,
@@ -161,7 +163,8 @@ class KMeansWorkload(Workload):
                                    max_iters=p["max_iter"], tol=p["tol"],
                                    n_init=p["n_init"], seed=p["seed"],
                                    kernel_backend=p["kernel_backend"],
-                                   fuse_steps=p["fuse_steps"])
+                                   fuse_steps=p["fuse_steps"],
+                                   version=spec.version)
 
     def fit(self, dataset, spec: TrainerSpec) -> FitResult:
         r = kmeans.fit(dataset, self._config(spec))

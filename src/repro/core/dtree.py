@@ -33,7 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import dispatch
-from .pim import PimSystem, run_steps
+from ..systems import System, run_steps
 
 
 @dataclasses.dataclass
@@ -280,7 +280,7 @@ def fit(dataset, cfg: Optional[TreeConfig] = None) -> Tree:
     return run_steps(fit_steps(dataset, cfg))
 
 
-def train(X: np.ndarray, y: np.ndarray, pim: PimSystem,
+def train(X: np.ndarray, y: np.ndarray, pim: System,
           cfg: Optional[TreeConfig] = None) -> Tree:
     """Deprecated shim: re-partitions (X, y) on every call.  Prefer
     ``fit(pim.put(X, y), cfg)`` (repro.api)."""
@@ -290,55 +290,8 @@ def train(X: np.ndarray, y: np.ndarray, pim: PimSystem,
     from ..api.dataset import as_dataset
     return fit(as_dataset(X, y, pim), cfg)
 
-
-def train_cpu_baseline(X: np.ndarray, y: np.ndarray,
-                       cfg: Optional[TreeConfig] = None) -> Tree:
-    """CPU comparison point: the same ERT algorithm, plain numpy (the
-    paper's CPU baseline is sklearn CART; sklearn is unavailable offline —
-    recorded in DESIGN.md.  Accuracy parity bands are asserted instead)."""
-    cfg = cfg or TreeConfig()
-    rng = np.random.RandomState(cfg.seed + 1)
-    n, nf = X.shape
-    max_nodes = 2 ** (cfg.max_depth + 2)
-    X = np.asarray(X, np.float32)
-    y = np.asarray(y, np.int32)
-
-    feature = np.full(max_nodes, -1, np.int32)
-    threshold = np.zeros(max_nodes, np.float32)
-    left = np.zeros(max_nodes, np.int32)
-    right = np.zeros(max_nodes, np.int32)
-    leaf_class = np.zeros(max_nodes, np.int32)
-    depth = np.zeros(max_nodes, np.int32)
-    n_nodes = 1
-    # (leaf, row-index array) worklist
-    work = [(0, np.arange(n))]
-    while work:
-        leaf, idx = work.pop()
-        yy = y[idx]
-        counts = np.bincount(yy, minlength=cfg.n_classes)
-        leaf_class[leaf] = int(counts.argmax())
-        if (idx.size < cfg.min_samples_split or (counts > 0).sum() <= 1
-                or depth[leaf] >= cfg.max_depth or n_nodes + 2 > max_nodes):
-            continue
-        Xl = X[idx]
-        mins, maxs = Xl.min(0), Xl.max(0)
-        ts = mins + rng.uniform(0, 1, nf).astype(np.float32) * (maxs - mins)
-        below = Xl <= ts                                  # (m, F)
-        onehot = np.eye(cfg.n_classes, dtype=np.float64)[yy]  # (m, C)
-        bc = onehot.T @ below                             # (C, F)
-        score = gini_score(bc[None].transpose(0, 1, 2),
-                           counts[None].astype(np.float64))[0]
-        best_f = int(score.argmin())
-        mask = below[:, best_f]
-        if mask.all() or not mask.any():
-            continue
-        li, ri = n_nodes, n_nodes + 1
-        n_nodes += 2
-        feature[leaf] = best_f
-        threshold[leaf] = ts[best_f]
-        left[leaf], right[leaf] = li, ri
-        depth[li] = depth[ri] = depth[leaf] + 1
-        leaf_class[li] = leaf_class[ri] = leaf_class[leaf]
-        work.append((li, idx[mask]))
-        work.append((ri, idx[~mask]))
-    return Tree(feature, threshold, left, right, leaf_class, depth, n_nodes)
+# The CPU comparison point (the paper's baseline is sklearn; sklearn is
+# unavailable offline) is no longer a duplicated numpy worklist here:
+# run this same ERT workload on repro.systems.HostSystem — one resident
+# image, the identical three-command protocol degenerated to plain
+# array ops, e.g. ``dtree.fit(make_system("host").put(X, y), cfg)``.

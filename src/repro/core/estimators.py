@@ -19,7 +19,7 @@ import warnings
 from typing import Optional
 
 from ..api.estimator import PimEstimator
-from .pim import PimSystem
+from ..systems import System
 
 
 def _warn_legacy(cls_name: str, workload: str) -> None:
@@ -34,10 +34,10 @@ class PimLinearRegression(PimEstimator):
 
     def __init__(self, version: str = "fp32", n_iters: int = 500,
                  lr: float = 0.1, n_cores: int = 16,
-                 pim: Optional[PimSystem] = None, **params):
+                 pim: Optional[System] = None, **params):
         _warn_legacy("PimLinearRegression", "linreg")
         super().__init__("linreg", version=version, n_cores=n_cores,
-                         pim=pim, n_iters=n_iters, lr=lr, **params)
+                         system=pim, n_iters=n_iters, lr=lr, **params)
 
 
 class PimLogisticRegression(PimEstimator):
@@ -45,10 +45,10 @@ class PimLogisticRegression(PimEstimator):
 
     def __init__(self, version: str = "fp32", n_iters: int = 500,
                  lr: float = 5.0, n_cores: int = 16,
-                 pim: Optional[PimSystem] = None, **params):
+                 pim: Optional[System] = None, **params):
         _warn_legacy("PimLogisticRegression", "logreg")
         super().__init__("logreg", version=version, n_cores=n_cores,
-                         pim=pim, n_iters=n_iters, lr=lr, **params)
+                         system=pim, n_iters=n_iters, lr=lr, **params)
 
 
 class PimDecisionTreeClassifier(PimEstimator):
@@ -56,11 +56,11 @@ class PimDecisionTreeClassifier(PimEstimator):
 
     def __init__(self, max_depth: int = 10, n_classes: int = 2,
                  seed: int = 0, n_cores: int = 16,
-                 pim: Optional[PimSystem] = None,
+                 pim: Optional[System] = None,
                  version: Optional[str] = None, **params):
         _warn_legacy("PimDecisionTreeClassifier", "dtree")
         super().__init__("dtree", version=version, n_cores=n_cores,
-                         pim=pim, max_depth=max_depth,
+                         system=pim, max_depth=max_depth,
                          n_classes=n_classes, seed=seed, **params)
 
 
@@ -69,10 +69,10 @@ class PimKMeans(PimEstimator):
 
     def __init__(self, n_clusters: int = 16, max_iter: int = 300,
                  tol: float = 1e-4, n_init: int = 1, seed: int = 0,
-                 n_cores: int = 16, pim: Optional[PimSystem] = None,
+                 n_cores: int = 16, pim: Optional[System] = None,
                  version: Optional[str] = None, **params):
         _warn_legacy("PimKMeans", "kmeans")
         super().__init__("kmeans", version=version, n_cores=n_cores,
-                         pim=pim, n_clusters=n_clusters,
+                         system=pim, n_clusters=n_clusters,
                          max_iter=max_iter, tol=tol, n_init=n_init,
                          seed=seed, **params)

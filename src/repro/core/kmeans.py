@@ -28,13 +28,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import dispatch
+from ..systems import System, chunk_schedule, run_steps
 from .metrics import frobenius_shift
-from .pim import PimSystem, chunk_schedule, run_steps
 
 # 12-bit symmetric range stored in int16 (see docstring).  The quantizing
 # + sharding path, PimDataset.kmeans_view (repro/api/dataset.py), imports
 # this constant — single source of truth.
 QUANT_RANGE = 2047
+
+#: "int16" is the paper's PIM version (quantized Lloyd's); "fp32" is the
+#: processor-centric float path — the baseline the paper compares
+#: against (sklearn, §5.1.4), now runnable on ANY System through the
+#: same trainer (DESIGN.md §10.3).
+VERSIONS = ("int16", "fp32")
 
 
 @dataclasses.dataclass
@@ -44,6 +50,10 @@ class KMeansConfig:
     tol: float = 1e-4           # relative Frobenius norm (paper §5.1.4)
     n_init: int = 1
     seed: int = 0
+    #: data/arithmetic precision: "int16" (paper's quantized PIM
+    #: version) or "fp32" (un-quantized float Lloyd's — the processor-
+    #: centric baseline; no quantization round-trip)
+    version: str = "int16"
     #: kernel backend for the assignment hot path (None = auto-select;
     #: see repro.kernels.dispatch) — all backends are numerically
     #: identical (integer ops, asserted by the parity tests)
@@ -68,12 +78,17 @@ class KMeansResult:
     labels: Optional[np.ndarray] = None
 
 
-def _assign_kernel_factory(k: int, backend=None):
-    """Assignment + accumulation routed through the kernel-dispatch
-    layer (op ``kmeans_assign``: Pallas on TPU, jnp oracle elsewhere).
+def _assign_kernel_factory(k: int, backend=None, quantized: bool = True):
+    """Assignment + accumulation.
 
-    The dispatch op has no validity-mask concept, so padding is
-    corrected here: shard padding rows are all-zero vectors (see
+    The int16 (PIM) version routes through the kernel-dispatch layer
+    (op ``kmeans_assign``: Pallas on TPU, jnp oracle elsewhere); the
+    fp32 (processor-centric baseline) version is an inline float
+    distance + one-hot accumulation — no quantization, native float
+    matmul, the paper's sklearn-style hot loop.
+
+    Neither path has a validity-mask concept, so padding is corrected
+    here: shard padding rows are all-zero vectors (see
     ``PimSystem.shard_rows``), which contribute nothing to ``sums`` and
     exactly one spurious count at their assigned label — subtracted via
     a masked one-hot.
@@ -81,8 +96,20 @@ def _assign_kernel_factory(k: int, backend=None):
     be = dispatch.resolve_backend(backend)
 
     def _kernel(Xq, valid, Cq):
-        labels, sums, counts = dispatch.launch(
-            "kmeans_assign", Xq, Cq, backend=be)
+        if quantized:
+            labels, sums, counts = dispatch.launch(
+                "kmeans_assign", Xq, Cq, backend=be)
+        else:
+            x = Xq
+            c = Cq
+            # same tie-breaking expression as the quantized op: the
+            # per-row ||x||^2 constant cannot change an argmin
+            dist = jnp.sum(c * c, axis=1)[None, :] - 2.0 * (x @ c.T)
+            labels = jnp.argmin(dist, axis=1).astype(jnp.int32)
+            oh = (labels[:, None] ==
+                  jnp.arange(k, dtype=jnp.int32)[None, :])
+            sums = oh.astype(jnp.float32).T @ x
+            counts = jnp.sum(oh.astype(jnp.int32), axis=0)
         pad_oh = ((labels[:, None] ==
                    jnp.arange(k, dtype=jnp.int32)[None, :])
                   & ~valid[:, None]).astype(jnp.int32)
@@ -90,10 +117,11 @@ def _assign_kernel_factory(k: int, backend=None):
     return _kernel
 
 
-def _inertia_kernel_factory(k: int):
+def _inertia_kernel_factory(k: int, quantized: bool = True):
     def _kernel(Xq, valid, Cq):
-        x = Xq.astype(jnp.int32)
-        c = Cq.astype(jnp.int32)
+        acc = jnp.int32 if quantized else jnp.float32
+        x = Xq.astype(acc)
+        c = Cq.astype(acc)
         cross = x @ c.T
         xnorm = jnp.sum(x * x, axis=1)
         cnorm = jnp.sum(c * c, axis=1)
@@ -106,15 +134,16 @@ def _inertia_kernel_factory(k: int):
     return _kernel
 
 
-def _labels_kernel_factory(k: int):
+def _labels_kernel_factory(k: int, quantized: bool = True):
     """Labels-only predict path: a plain argmin over the same distance
-    expression the ``kmeans_assign`` op uses (identical tie-breaking),
+    expression the assignment kernel uses (identical tie-breaking),
     WITHOUT routing through the full assign+accumulate kernel — a
     Pallas kernel computes every declared output, so the dispatch op
     would materialize (K, F) sums nobody reads on the inference path."""
     def _kernel(Xq, valid, Cq):
-        x = Xq.astype(jnp.int32)
-        c = Cq.astype(jnp.int32)
+        acc = jnp.int32 if quantized else jnp.float32
+        x = Xq.astype(acc)
+        c = Cq.astype(acc)
         dist = jnp.sum(c * c, axis=1)[None, :] - 2 * (x @ c.T)
         return jnp.argmin(dist, axis=1).astype(jnp.int32)
     return _kernel
@@ -130,10 +159,13 @@ def _make_lloyd_step_fns(cfg: KMeansConfig):
     counts only the steps taken while not yet converged — matching the
     host loop's iteration count exactly."""
     tol = np.float32(cfg.tol)
+    quantized = cfg.version == "int16"
 
     def prepare(carry):
         C, _, _ = carry
-        return (jnp.round(C).astype(jnp.int16),)
+        if quantized:
+            return (jnp.round(C).astype(jnp.int16),)
+        return (C,)
 
     def update(carry, reduced):
         C, done, n_it = carry
@@ -160,29 +192,44 @@ def fit_steps(dataset, cfg: Optional[KMeansConfig] = None,
     The end-of-restart inertia/labels passes don't get their own step;
     they run at the head of the ``next()`` that follows convergence."""
     cfg = cfg or KMeansConfig()
+    assert cfg.version in VERSIONS, cfg.version
+    quantized = cfg.version == "int16"
     pim = dataset.system
     n = dataset.n
     rng = np.random.RandomState(cfg.seed)
-    view = dataset.kmeans_view()
+    view = dataset.kmeans_view(cfg.version)
     Xs, valid = view.shards, view.mask
     Xq_np, scale = view.host_q, view.scale
 
+    def _cast_centroids(C):
+        """Broadcast form of the carry: rounded int16 on the quantized
+        path (the paper's re-quantized centroids), plain float32 on the
+        processor-centric fp32 path."""
+        if quantized:
+            return jnp.asarray(np.round(C).astype(np.int16))
+        return jnp.asarray(C, jnp.float32)
+
     be = dispatch.resolve_backend(cfg.kernel_backend)
     tag = dispatch.backend_tag(be)
+    # the int16 names predate the fp32 version and tests/benchmarks
+    # match them verbatim; fp32 kernels get their own namespace
+    vtag = "" if quantized else "fp32/"
     assign_k = pim.named_kernel(
-        f"kme.assign/k{cfg.k}/{tag}",
-        lambda: _assign_kernel_factory(cfg.k, be))
+        f"kme.assign/{vtag}k{cfg.k}/{tag}",
+        lambda: _assign_kernel_factory(cfg.k, be, quantized))
     inertia_k = pim.named_kernel(
-        f"kme.inertia/k{cfg.k}", lambda: _inertia_kernel_factory(cfg.k))
+        f"kme.inertia/{vtag}k{cfg.k}",
+        lambda: _inertia_kernel_factory(cfg.k, quantized))
     labels_k = pim.named_kernel(
-        f"kme.labels/k{cfg.k}", lambda: _labels_kernel_factory(cfg.k))
+        f"kme.labels/{vtag}k{cfg.k}",
+        lambda: _labels_kernel_factory(cfg.k, quantized))
 
     program = None
     if cfg.fuse_steps > 1:
         prepare, update = _make_lloyd_step_fns(cfg)
         program = pim.step_program(
             assign_k, prepare, update,
-            name=f"kme.step/k{cfg.k}/{tag}/tol{cfg.tol}/n{n}")
+            name=f"kme.step/{vtag}k{cfg.k}/{tag}/tol{cfg.tol}/n{n}")
 
     best: Optional[KMeansResult] = None
     for init in range(cfg.n_init):
@@ -203,8 +250,7 @@ def fit_steps(dataset, cfg: Optional[KMeansConfig] = None,
         else:
             for it in range(cfg.max_iters):
                 n_it = it + 1
-                Cq = pim.broadcast(
-                    (jnp.asarray(np.round(C).astype(np.int16)),))[0]
+                Cq = pim.broadcast((_cast_centroids(C),))[0]
                 part = pim.map_reduce(assign_k, (Xs, valid), (Cq,))
                 sums = np.asarray(part["sums"], np.float64)
                 counts = np.asarray(part["counts"], np.float64)
@@ -216,8 +262,7 @@ def fit_steps(dataset, cfg: Optional[KMeansConfig] = None,
                 if shift < cfg.tol:
                     break
         part = pim.map_reduce(
-            inertia_k, (Xs, valid),
-            (jnp.asarray(np.round(C).astype(np.int16)),))
+            inertia_k, (Xs, valid), (_cast_centroids(C),))
         # inertia needs + ||x||^2 which the kernel includes; convert units
         inertia = float(part["inertia"]) * float(scale) ** 2
         if best is None or inertia < best.inertia:
@@ -225,8 +270,7 @@ def fit_steps(dataset, cfg: Optional[KMeansConfig] = None,
                                 n_iters=n_it)
             if return_labels:
                 lbl = pim.map_elementwise(
-                    labels_k, (Xs, valid),
-                    (jnp.asarray(np.round(C).astype(np.int16)),))
+                    labels_k, (Xs, valid), (_cast_centroids(C),))
                 best.labels = np.asarray(lbl).reshape(-1)[: n]
     return best
 
@@ -239,7 +283,7 @@ def fit(dataset, cfg: Optional[KMeansConfig] = None,
     return run_steps(fit_steps(dataset, cfg, return_labels))
 
 
-def train(X: np.ndarray, pim: PimSystem,
+def train(X: np.ndarray, pim: System,
           cfg: Optional[KMeansConfig] = None,
           return_labels: bool = True) -> KMeansResult:
     """Deprecated shim: re-quantizes + re-partitions X on every call.
@@ -250,36 +294,8 @@ def train(X: np.ndarray, pim: PimSystem,
     from ..api.dataset import as_dataset
     return fit(as_dataset(X, None, pim), cfg, return_labels)
 
-
-def train_cpu_baseline(X: np.ndarray, cfg: Optional[KMeansConfig] = None
-                       ) -> KMeansResult:
-    """CPU comparison point: float32 Lloyd's (paper uses sklearn)."""
-    cfg = cfg or KMeansConfig()
-    rng = np.random.RandomState(cfg.seed)
-    X = np.asarray(X, np.float32)
-    n, nf = X.shape
-    best: Optional[KMeansResult] = None
-    for init in range(cfg.n_init):
-        C = X[rng.choice(n, size=cfg.k, replace=False)].astype(np.float64)
-        n_it = 0
-        for it in range(cfg.max_iters):
-            n_it = it + 1
-            d = ((X[:, None, :] - C[None, :, :]) ** 2).sum(-1) \
-                if n * cfg.k * nf < 5e7 else None
-            if d is None:  # blocked distance for big inputs
-                d = -2.0 * X @ C.T + (C * C).sum(1)[None, :]
-                d = d + (X * X).sum(1)[:, None]
-            lbl = d.argmin(1)
-            newC = np.array([X[lbl == c].mean(0) if (lbl == c).any() else C[c]
-                             for c in range(cfg.k)])
-            shift = frobenius_shift(C, newC)
-            C = newC
-            if shift < cfg.tol:
-                break
-        d = -2.0 * X @ C.T + (C * C).sum(1)[None, :] + (X * X).sum(1)[:, None]
-        lbl = d.argmin(1)
-        inertia = float(d[np.arange(n), lbl].sum())
-        if best is None or inertia < best.inertia:
-            best = KMeansResult(centroids=C.astype(np.float32),
-                                inertia=inertia, n_iters=n_it, labels=lbl)
-    return best
+# The CPU comparison point (float Lloyd's — the paper uses sklearn) is
+# no longer an ad-hoc numpy loop here: run version="fp32" on
+# repro.systems.HostSystem, e.g. ``kmeans.fit(make_system("host").
+# put(X), KMeansConfig(version="fp32"))`` — same trainer, no
+# quantization round-trip.

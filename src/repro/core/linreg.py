@@ -20,13 +20,14 @@ import dataclasses
 import warnings
 from typing import Callable, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import dispatch
+from ..systems import System, chunk_schedule, run_steps
 from .fixed_point import (_shift_round, fx_dot_hybrid, from_fixed,
                           mul_round_f32, to_fixed)
-from .pim import PimSystem, chunk_schedule, run_steps
 
 VERSIONS = ("fp32", "int32", "hyb", "bui")
 
@@ -55,11 +56,14 @@ class GdConfig:
     #: step fusion (DESIGN.md §9): compile this many consecutive GD
     #: iterations into ONE lax.scan launch — the whole kernel -> reduce
     #: -> update -> re-quantize cycle stays on device between chunk
-    #: boundaries.  1 = the host-orchestrated per-step loop; >1 requires
-    #: full-batch GD (minibatch SGD draws host randomness per step and
-    #: falls back to the per-step loop).  Bit-identical to the serial
-    #: loop for the integer versions.  ``record_every`` still works:
-    #: chunks are clipped so recording points land on chunk boundaries.
+    #: boundaries.  1 = the host-orchestrated per-step loop.  Works for
+    #: minibatch SGD too (DESIGN.md §9.5): the host pre-draws each
+    #: chunk's batch offsets from the same rng stream the serial loop
+    #: uses and feeds them through the scan as per-step inputs, so the
+    #: fused trajectory equals the serial one exactly.  Bit-identical
+    #: to the serial loop for the integer versions.  ``record_every``
+    #: still works: chunks are clipped so recording points land on
+    #: chunk boundaries.
     fuse_steps: int = 1
 
 
@@ -206,9 +210,9 @@ def grad_kernel_name(cfg: GdConfig) -> str:
     return f"lin.grad/hyb/x{cfg.x8_frac}.w{cfg.w16_frac}.f{cfg.frac_bits}"
 
 
-def _grad_kernel(pim: PimSystem, cfg: GdConfig):
+def _grad_kernel(pim: System, cfg: GdConfig):
     """Named per-core gradient kernel for the configured version
-    (registered once per PimSystem; reused across fits and sweeps)."""
+    (registered once per System; reused across fits and sweeps)."""
     return pim.named_kernel(grad_kernel_name(cfg),
                             lambda: build_local_grad(cfg))
 
@@ -238,7 +242,9 @@ def fit_steps(dataset, cfg: Optional[GdConfig] = None,
 
     n_pc = Xs.shape[1]
     minibatch = bool(cfg.minibatch and cfg.minibatch < n_pc)
-    n_eff = cfg.minibatch * pim.config.n_cores if minibatch else n
+    # per-shard minibatches: n_shards == n_cores on PIM, 1 on a host
+    # target (one resident image draws one batch)
+    n_eff = cfg.minibatch * pim.n_shards if minibatch else n
     prepare, update = make_gd_step_fns(cfg)
 
     w = jnp.zeros(f, jnp.float32)
@@ -252,15 +258,37 @@ def fit_steps(dataset, cfg: Optional[GdConfig] = None,
             metric = eval_fn(np.asarray(w), float(b)) if eval_fn else None
             history.append((it, metric))
 
-    if cfg.fuse_steps > 1 and not minibatch:
+    if cfg.fuse_steps > 1:
+        select = None
+        if minibatch:
+            # minibatch SGD fuses too (DESIGN.md §9.5): the select hook
+            # slices every shard to the step's batch window; the
+            # offsets arrive as scan xs, pre-drawn per chunk below from
+            # the SAME rng stream the serial loop consumes — the fused
+            # trajectory is the serial one, bit for bit
+            mb = cfg.minibatch
+
+            def select(shards, off):
+                return tuple(
+                    jax.lax.dynamic_slice_in_dim(a, off, mb, axis=1)
+                    for a in shards)
         program = pim.step_program(
             local, prepare, update,
             name=(f"lin.step/{grad_kernel_name(cfg)}"
-                  f"/lr{cfg.lr}/n{n_eff}"))
+                  f"/lr{cfg.lr}/n{n_eff}"
+                  + (f"/mb{cfg.minibatch}" if minibatch else "")),
+            select=select)
+        rng = np.random.RandomState(cfg.seed)
         it = 0
         for k in chunk_schedule(cfg.n_iters, cfg.fuse_steps,
                                 cfg.record_every):
-            (w, b, s), _ = program.run((w, b, s), (Xs, ys, mask), k)
+            xs = None
+            if minibatch:
+                xs = jnp.asarray(
+                    [rng.randint(0, n_pc - cfg.minibatch + 1)
+                     for _ in range(k)], jnp.int32)
+            (w, b, s), _ = program.run((w, b, s), (Xs, ys, mask), k,
+                                       xs=xs)
             it += k
             record(it)
             yield k
@@ -294,7 +322,7 @@ def fit(dataset, cfg: Optional[GdConfig] = None,
     return run_steps(fit_steps(dataset, cfg, eval_fn, _local_override))
 
 
-def train(X: np.ndarray, y: np.ndarray, pim: PimSystem,
+def train(X: np.ndarray, y: np.ndarray, pim: System,
           cfg: Optional[GdConfig] = None,
           eval_fn: Optional[Callable] = None,
           _local_override: Optional[Callable] = None) -> GdResult:
@@ -307,17 +335,7 @@ def train(X: np.ndarray, y: np.ndarray, pim: PimSystem,
     from ..api.dataset import as_dataset
     return fit(as_dataset(X, y, pim), cfg, eval_fn, _local_override)
 
-
-def train_cpu_baseline(X: np.ndarray, y: np.ndarray, n_iters: int = 500,
-                       lr: float = 0.1) -> GdResult:
-    """The CPU comparison point (paper §5.4 uses MKL; here: numpy BLAS)."""
-    n, f = X.shape
-    X = np.asarray(X, np.float32)
-    y = np.asarray(y, np.float32)
-    w = np.zeros(f, np.float32)
-    b = np.float32(0.0)
-    for _ in range(n_iters):
-        err = X @ w + b - y
-        w = w - lr * (2.0 / n) * (X.T @ err)
-        b = b - lr * (2.0 / n) * err.sum()
-    return GdResult(w=w, b=float(b), history=[], n_iters=n_iters)
+# The CPU comparison point (paper §5.4) is no longer an ad-hoc numpy
+# loop here: run this same workload on repro.systems.HostSystem — the
+# processor-centric System target — e.g.
+# ``linreg.fit(make_system("host").put(X, y), GdConfig("fp32"))``.

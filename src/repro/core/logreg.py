@@ -20,14 +20,15 @@ import dataclasses
 import warnings
 from typing import Callable, Optional
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import dispatch
+from ..systems import System, chunk_schedule, run_steps
 from .fixed_point import _shift_round, fx_dot_hybrid
 from .linreg import GdConfig, GdResult, make_gd_step_fns
 from .lut import SigmoidLut, build_sigmoid_lut, taylor_sigmoid_fixed
-from .pim import PimSystem, chunk_schedule, run_steps
 
 VERSIONS = ("fp32", "int32", "int32_lut_mram", "int32_lut_wram",
             "hyb_lut", "bui_lut")
@@ -64,7 +65,8 @@ def _gd_version_of(version: str) -> str:
             "bui_lut": "bui"}[version]
 
 
-def make_local_grad(cfg: LogRegConfig, lut: Optional[SigmoidLut]):
+def make_local_grad(cfg: LogRegConfig, lut: Optional[SigmoidLut],
+                    exact_sigmoid: bool = False):
     """Build the per-core kernel for the configured version.
 
     The two kernel-dispatch hooks (repro.kernels.dispatch):
@@ -74,6 +76,11 @@ def make_local_grad(cfg: LogRegConfig, lut: Optional[SigmoidLut]):
         paper's MRAM variant *is* the HBM-gather ref path, so
         ``int32_lut_mram`` pins ``jnp_ref`` while the WRAM/HYB/BUI
         variants follow the configured backend (VMEM kernel on TPU).
+
+    ``exact_sigmoid`` selects the native-transcendental fp32 sigmoid a
+    processor-centric :class:`~repro.systems.base.System` provides (the
+    paper's MKL baseline, §5.4) instead of the DPU Taylor expansion; it
+    only applies to the fp32 version.
     """
     f = cfg.frac_bits
     be = dispatch.resolve_backend(cfg.kernel_backend)
@@ -85,7 +92,9 @@ def make_local_grad(cfg: LogRegConfig, lut: Optional[SigmoidLut]):
         terms = cfg.taylor_terms
 
         def _local_fp32(Xc, yc, mask, w, b):
-            p = _sigmoid_taylor_f32(Xc @ w + b, terms)
+            z = Xc @ w + b
+            p = (jax.nn.sigmoid(z) if exact_sigmoid
+                 else _sigmoid_taylor_f32(z, terms))
             err = (p - yc) * mask
             return {"gw": Xc.T @ err, "gb": jnp.sum(err)}
         return _local_fp32
@@ -135,31 +144,42 @@ def make_local_grad(cfg: LogRegConfig, lut: Optional[SigmoidLut]):
     return _local_hyb_lut
 
 
-def build_local_grad(cfg: LogRegConfig) -> Callable:
+def build_local_grad(cfg: LogRegConfig,
+                     exact_sigmoid: bool = False) -> Callable:
     """Per-core kernel for ``cfg.version`` with its LUT built in
     (unregistered) — shared by the serial trainer and the scheduler's
     fused gang step (DESIGN.md §7.3)."""
     lut = (build_sigmoid_lut(cfg.lut_boundary, cfg.lut_frac_bits)
            if "lut" in cfg.version else None)
-    return make_local_grad(cfg, lut)
+    return make_local_grad(cfg, lut, exact_sigmoid)
 
 
-def grad_kernel_name(cfg: LogRegConfig) -> str:
+def _exact_sigmoid(system: System, cfg: LogRegConfig) -> bool:
+    """fp32 on a processor-centric target uses the exact sigmoid (the
+    paper's MKL/cuML baselines); every other combination keeps the
+    paper's DPU Taylor expansion."""
+    return cfg.version == "fp32" and system.exact_transcendentals
+
+
+def grad_kernel_name(cfg: LogRegConfig, exact_sigmoid: bool = False) -> str:
     """Registry name encoding every parameter baked into the closure
-    (version, Q formats, Taylor terms, LUT geometry) so the compiled
-    kernel is reused across fits and never served stale."""
-    return (f"log.grad/{cfg.version}/f{cfg.frac_bits}"
+    (version, Q formats, Taylor terms, LUT geometry, sigmoid flavor) so
+    the compiled kernel is reused across fits and never served stale."""
+    return (f"log.grad/{cfg.version}"
+            + ("x" if exact_sigmoid else "")
+            + f"/f{cfg.frac_bits}"
             f".x{cfg.x8_frac}.w{cfg.w16_frac}"
             f".t{cfg.taylor_terms}"
             f".lb{cfg.lut_boundary}.lf{cfg.lut_frac_bits}"
             f"/{dispatch.backend_tag(cfg.kernel_backend)}")
 
 
-def _grad_kernel(pim: PimSystem, cfg: LogRegConfig) -> str:
+def _grad_kernel(pim: System, cfg: LogRegConfig) -> str:
     """Named per-core kernel.  The sigmoid LUT is built inside the
     builder — pay-once like the kernel, not per fit."""
-    return pim.named_kernel(grad_kernel_name(cfg),
-                            lambda: build_local_grad(cfg))
+    exact = _exact_sigmoid(pim, cfg)
+    return pim.named_kernel(grad_kernel_name(cfg, exact),
+                            lambda: build_local_grad(cfg, exact))
 
 
 def fit_steps(dataset, cfg: Optional[LogRegConfig] = None,
@@ -194,7 +214,8 @@ def fit_steps(dataset, cfg: Optional[LogRegConfig] = None,
     if cfg.fuse_steps > 1:
         program = pim.step_program(
             local, prepare, update,
-            name=f"log.step/{grad_kernel_name(cfg)}/lr{cfg.lr}/n{n}")
+            name=(f"log.step/{grad_kernel_name(cfg, _exact_sigmoid(pim, cfg))}"
+                  f"/lr{cfg.lr}/n{n}"))
         it = 0
         for k in chunk_schedule(cfg.n_iters, cfg.fuse_steps,
                                 cfg.record_every):
@@ -221,7 +242,7 @@ def fit(dataset, cfg: Optional[LogRegConfig] = None,
     return run_steps(fit_steps(dataset, cfg, eval_fn))
 
 
-def train(X: np.ndarray, y: np.ndarray, pim: PimSystem,
+def train(X: np.ndarray, y: np.ndarray, pim: System,
           cfg: Optional[LogRegConfig] = None,
           eval_fn: Optional[Callable] = None) -> GdResult:
     """Deprecated shim: re-partitions (X, y) on every call.  Prefer
@@ -232,19 +253,7 @@ def train(X: np.ndarray, y: np.ndarray, pim: PimSystem,
     from ..api.dataset import as_dataset
     return fit(as_dataset(X, y, pim), cfg, eval_fn)
 
-
-def train_cpu_baseline(X: np.ndarray, y: np.ndarray, n_iters: int = 500,
-                       lr: float = 5.0) -> GdResult:
-    """CPU comparison point: float32, *exact* sigmoid (MKL-style)."""
-    n, nf = X.shape
-    X = np.asarray(X, np.float32)
-    y = np.asarray(y, np.float32)
-    w = np.zeros(nf, np.float32)
-    b = np.float32(0.0)
-    for _ in range(n_iters):
-        z = X @ w + b
-        p = 1.0 / (1.0 + np.exp(-z, dtype=np.float32))
-        err = p - y
-        w = w - lr * (1.0 / n) * (X.T @ err)
-        b = b - lr * (1.0 / n) * err.sum()
-    return GdResult(w=w, b=float(b), history=[], n_iters=n_iters)
+# The CPU comparison point (float32, *exact* sigmoid — MKL-style) is no
+# longer an ad-hoc numpy loop here: fp32 on repro.systems.HostSystem
+# selects the exact sigmoid automatically (``exact_transcendentals``),
+# e.g. ``logreg.fit(make_system("host").put(X, y), LogRegConfig("fp32"))``.

@@ -1,858 +1,28 @@
-"""PIM execution model (paper §2.2, Fig. 3) mapped onto JAX.
+"""Compatibility shim — the PIM execution model moved to ``repro.systems``.
 
-The paper's system: N PIM cores, each owning a DRAM bank; training data is
-partitioned once and stays bank-resident; each iteration every core computes
-a partial result over its shard; partials are reduced *via the host* (DPUs
-cannot talk to each other) and the updated model is re-broadcast.
-
-JAX mapping (DESIGN.md §2):
-  PIM core            -> one mesh element of a 1-D "cores" axis
-  bank-resident shard -> device-resident leading-axis shard of the dataset
-  host reduction      -> jax.lax.psum over "cores" (FabricReduce) or an
-                         actual device_get/numpy/device_put round trip
-                         (HostReduce — faithful to UPMEM's topology), or a
-                         two-level rank schedule (HierarchicalReduce)
-
-Execution surface (DESIGN.md §3):
-  ``PimSystem.put(X, y)``      -> a bank-resident :class:`PimDataset` handle
-                                  (repro/api/dataset.py); shards transfer to
-                                  the banks ONCE and are reused across fits.
-  ``register_kernel(name,fn)`` -> named kernels; jit caches are keyed by
-                                  (name, generation) or by the function
-                                  object itself — never by ``id(fn)``, which
-                                  can be reused after GC and silently return
-                                  a stale compiled kernel.
-  ``map_reduce(..., strategy=)``-> reduction strategy selectable per call
-                                  ("fabric" | "host" | "hierarchical"),
-                                  defaulting to the system config.
-
-Backends:
-  "vmap"      single-device semantic model (cores simulated by vmap) — used
-              by unit tests and quality reproduction; bit-identical to the
-              sharded path because the kernels are deterministic integer ops.
-  "shard_map" real multi-device execution over a jax.Mesh "cores" axis —
-              used by the scaling benchmarks and the dry-run.
-
-Also here: ``DpuCostModel``, an instruction-level cost model of the UPMEM
-DPU pipeline (425 MHz, fine-grained multithreaded, throughput saturates at
-11 tasklets) calibrated against the paper's measured version-to-version
-speedups.  The benchmark harness uses it to reproduce Fig. 8-12 shapes
-without UPMEM hardware; the calibration table is printed next to the
-paper's reported ratios so the fit is auditable.
+The ``PimSystem`` surface grew into the backend-portable ``System``
+protocol (DESIGN.md §10): the shared execution machinery lives in
+:mod:`repro.systems.base`, the memory-centric PIM implementation (and
+the DPU cost model) in :mod:`repro.systems.pim`, with the host-CPU and
+modeled-GPU targets alongside.  Every name that used to be defined here
+re-exports unchanged, so ``from repro.core.pim import PimSystem`` keeps
+working — new code should import from :mod:`repro.systems`.
 """
-from __future__ import annotations
-
-import dataclasses
-import enum
-import functools
-from typing import Any, Callable, Optional, Sequence, Union
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-
-from ..compat import shard_map
-from .quantization import storage_bytes
-
-
-class ReduceVia(enum.Enum):
-    """Legacy reduction selector (kept for config compatibility; the
-    per-call ``strategy=`` argument accepts these, their string values,
-    or a :class:`ReduceStrategy` instance)."""
-
-    FABRIC = "fabric"   # on-fabric psum (TPU-native; strictly cheaper)
-    HOST = "host"       # explicit host round trip (paper-faithful schedule)
-    HIERARCHICAL = "hierarchical"  # rank-level fabric sum + host combine
-
-
-@dataclasses.dataclass
-class TransferStats:
-    """Byte counters mirroring the paper's CPU-PIM / PIM-CPU breakdowns.
-
-    ``cpu_to_pim`` counts every host->bank byte (dataset shards AND model
-    broadcasts).  ``shard_transfers``/``shard_bytes`` count only dataset
-    shard materializations, so callers can assert that a hyperparameter
-    sweep over one :class:`PimDataset` pays for the CPU->PIM partition
-    exactly once (DESIGN.md §3).  ``kernel_launches`` counts host-issued
-    kernel dispatches (one per ``map_reduce``/``map_reduce_custom``/
-    ``map_elementwise`` call) — the scheduler's fused gang step is
-    asserted against it (DESIGN.md §7.3).
-
-    ``host_syncs`` counts host synchronization points — places where the
-    host blocks on device results (one per ``map_reduce``/
-    ``map_reduce_custom`` call, one per fused :class:`StepProgram`
-    chunk).  The step-fusion engine's whole point is that a k-step chunk
-    costs ONE sync instead of k (DESIGN.md §9).
-
-    ``snapshot()``/``delta(snapshot)`` make the counters attributable
-    when several jobs share one system: snapshot before the job, delta
-    after, and the job's own bytes fall out even though the globals keep
-    interleaving (DESIGN.md §7.2).
-    """
-
-    cpu_to_pim: int = 0
-    pim_to_cpu: int = 0
-    inter_core_via_host: int = 0
-    shard_transfers: int = 0
-    shard_bytes: int = 0
-    kernel_launches: int = 0
-    host_syncs: int = 0
-
-    def reset(self) -> None:
-        for field in dataclasses.fields(TransferStats):
-            setattr(self, field.name, 0)
-
-    def snapshot(self) -> "TransferStats":
-        """Point-in-time copy of every counter (a plain TransferStats)."""
-        return TransferStats(**{f.name: getattr(self, f.name)
-                                for f in dataclasses.fields(TransferStats)})
-
-    def delta(self, snapshot: "TransferStats") -> "TransferStats":
-        """Counters accumulated since ``snapshot`` was taken."""
-        return TransferStats(
-            **{f.name: getattr(self, f.name) - getattr(snapshot, f.name)
-               for f in dataclasses.fields(TransferStats)})
-
-
-def run_steps(gen):
-    """Drain a trainer step generator and return its result.
-
-    The iterative trainers expose ``fit_steps(dataset, cfg)`` generators
-    (one host-orchestrated PIM iteration per ``next()``) so the job
-    scheduler can gang-step many fits concurrently; ``fit`` is simply
-    this drain loop.  The fitted result travels on ``StopIteration``.
-    """
-    while True:
-        try:
-            next(gen)
-        except StopIteration as stop:
-            return stop.value
-
-
-def chunk_schedule(n_iters: int, fuse_steps: int, record_every: int):
-    """Chunk sizes covering ``n_iters`` fused-step iterations, with
-    record points forced onto chunk boundaries: each chunk is
-    ``min(fuse_steps, next record point, remaining)`` (shared by the GD
-    and K-Means trainers and the fused gang — DESIGN.md §9.3)."""
-    it = 0
-    while it < n_iters:
-        k = min(fuse_steps, n_iters - it)
-        if record_every:
-            next_rec = (it // record_every + 1) * record_every
-            k = min(k, next_rec - it)
-        yield k
-        it += k
-
-
-# ---------------------------------------------------------------------------
-# Reduction strategies (pluggable per map_reduce call).
-# ---------------------------------------------------------------------------
-
-class ReduceStrategy:
-    """How per-core partials are combined into the host-visible result.
-
-    ``device_reduce`` runs inside the compiled step (traced); ``finalize``
-    runs on the host afterwards; ``count_pim_to_cpu`` models the PIM->CPU
-    bytes the schedule moves.  ``cache_token`` namespaces the jit cache.
-
-    Step fusion (DESIGN.md §9): ``fusable`` says whether the schedule can
-    run entirely on device inside a ``lax.scan`` chunk;
-    ``device_reduce_full`` is the fully-on-device reduction the scan body
-    uses (for :class:`HierarchicalReduce` it completes the host-combine
-    leg on fabric); ``count_chunk`` is the analytic per-chunk byte
-    accounting — the reduce still moves k× the single-step bytes even
-    when the host round-trip is fused away.
-    """
-
-    name = "base"
-    #: False when the per-step reduction needs the host (HostReduce): a
-    #: StepProgram then degrades to per-step map_reduce syncs.
-    fusable = True
-
-    def device_reduce(self, partials):
-        return partials
-
-    def device_reduce_full(self, partials):
-        """Complete on-device reduction for use inside a fused scan."""
-        return self.device_reduce(partials)
-
-    def finalize(self, system: "PimSystem", out):
-        return out
-
-    def count_pim_to_cpu(self, system: "PimSystem", out) -> int:
-        raise NotImplementedError
-
-    def count_chunk(self, system: "PimSystem", out, k: int) -> None:
-        """Account k fused steps' reduce movement (``out`` is the
-        abstract per-step ``device_reduce`` result)."""
-        system.stats.pim_to_cpu += k * self.count_pim_to_cpu(system, out)
-
-    def cache_token(self):
-        return self.name
-
-
-def _leaf_bytes(v) -> int:
-    """nbytes of an array OR an abstract value (ShapeDtypeStruct)."""
-    nb = getattr(v, "nbytes", None)
-    if nb is None:
-        nb = int(np.prod(v.shape)) * np.dtype(v.dtype).itemsize
-    return int(nb)
-
-
-def _tree_bytes(tree) -> int:
-    return sum(_leaf_bytes(v) for v in jax.tree_util.tree_leaves(tree))
-
-
-def _host_sum(tree, axis=0):
-    """Promoted numpy reduction (int64 / float64 accumulators)."""
-    return jax.tree_util.tree_map(
-        lambda v: np.sum(np.asarray(v, np.int64)
-                         if np.issubdtype(np.asarray(v).dtype, np.integer)
-                         else np.asarray(v, np.float64), axis=axis),
-        tree)
-
-
-class FabricReduce(ReduceStrategy):
-    """On-device sum over the cores axis (psum under shard_map)."""
-
-    name = "fabric"
-
-    def device_reduce(self, partials):
-        return jax.tree_util.tree_map(lambda v: jnp.sum(v, axis=0),
-                                      partials)
-
-    def count_pim_to_cpu(self, system, out) -> int:
-        # every core ships its partial of the reduced shape to the host
-        return _tree_bytes(out) * system.config.n_cores
-
-    def finalize(self, system, out):
-        return out
-
-
-class HostReduce(ReduceStrategy):
-    """Paper-faithful schedule: per-core partials are copied to the host
-    and reduced with numpy; the result lives on the host (the caller then
-    ``broadcast``s the updated model, completing the round trip).
-
-    Not fusable: the reduce itself IS a host round trip, so a
-    :class:`StepProgram` chunk degrades to k per-step syncs (DESIGN.md
-    §9) — faithful to the UPMEM topology, where fusing the update
-    on-device would still leave per-step host reduction."""
-
-    name = "host"
-    fusable = False
-
-    def count_pim_to_cpu(self, system, out) -> int:
-        return _tree_bytes(out)  # stacked (n_cores, ...) leaves
-
-    def finalize(self, system, out):
-        return _host_sum(jax.device_get(out))
-
-
-class HierarchicalReduce(ReduceStrategy):
-    """Two-level schedule: fabric sum inside each rank of ``group_size``
-    cores, then a host combine of the rank partials — the PIM analogue of
-    the multi-pod RS->AR->AG decomposition in distributed/collectives.py
-    (each rank's leader ships 1/group_size of the flat-host bytes over the
-    host link; see ``cross_pod_bytes``)."""
-
-    def __init__(self, group_size: int = 8):
-        self.group_size = group_size
-        self.name = f"hier{group_size}"
-
-    def cache_token(self):
-        return ("hier", self.group_size)
-
-    def _groups(self, n_cores: int) -> int:
-        g = self.group_size
-        return n_cores // g if g > 1 and n_cores % g == 0 else 0
-
-    def device_reduce(self, partials):
-        def _grouped(v):
-            n_cores = v.shape[0]
-            n_groups = self._groups(n_cores)
-            if not n_groups:        # awkward core count: flat host schedule
-                return v
-            return jnp.sum(
-                v.reshape(n_groups, self.group_size, *v.shape[1:]), axis=1)
-        return jax.tree_util.tree_map(_grouped, partials)
-
-    def count_pim_to_cpu(self, system, out) -> int:
-        return _tree_bytes(out)  # (n_groups, ...) rank partials
-
-    def device_reduce_full(self, partials):
-        """In a fused scan the rank partials combine on fabric instead of
-        on the host (int32 accumulation — exact whenever the flat fabric
-        sum is, which the GD/KME value ranges guarantee)."""
-        return jax.tree_util.tree_map(
-            lambda v: jnp.sum(v, axis=0), self.device_reduce(partials))
-
-    def count_chunk(self, system, out, k: int) -> None:
-        # same per-step movement as the unfused schedule: each step the
-        # rank partials leave the ranks AND cross the (modeled) host
-        # link, k times per chunk
-        system.stats.pim_to_cpu += k * self.count_pim_to_cpu(system, out)
-        if self._groups(system.config.n_cores):
-            system.stats.inter_core_via_host += k * _tree_bytes(out)
-
-    def finalize(self, system, out):
-        # intra-rank movement happened "on fabric"; record the rank->host
-        # leg separately so the hierarchy's saving is visible in the
-        # stats (1/group_size of the flat-host bytes, same napkin as
-        # collectives.cross_pod_bytes).  If the core count forced the
-        # flat fallback, no rank-level reduction occurred — record none.
-        if self._groups(system.config.n_cores):
-            system.stats.inter_core_via_host += _tree_bytes(out)
-        return _host_sum(jax.device_get(out))
-
-
-_STRATEGIES: dict[str, Callable[[], ReduceStrategy]] = {
-    "fabric": FabricReduce,
-    "host": HostReduce,
-    "hierarchical": HierarchicalReduce,
-}
-
-StrategyLike = Union[None, str, ReduceVia, ReduceStrategy]
-
-
-def resolve_reduce_strategy(spec: StrategyLike,
-                            default: StrategyLike = None) -> ReduceStrategy:
-    if spec is None:
-        spec = default if default is not None else "fabric"
-    if isinstance(spec, ReduceStrategy):
-        return spec
-    if isinstance(spec, ReduceVia):
-        spec = spec.value
-    if isinstance(spec, str) and spec in _STRATEGIES:
-        return _STRATEGIES[spec]()
-    raise ValueError(f"unknown reduce strategy {spec!r}; "
-                     f"known: {sorted(_STRATEGIES)}")
-
-
-@dataclasses.dataclass
-class PimConfig:
-    n_cores: int = 64
-    n_threads: int = 16          # tasklets per core (cost model + layouts)
-    reduce: ReduceVia = ReduceVia.FABRIC   # default strategy for map_reduce
-    backend: str = "vmap"        # "vmap" | "shard_map"
-
-
-class PimSystem:
-    """Host-orchestrated data-parallel execution over PIM cores.
-
-    The redesigned surface (DESIGN.md §3):
-      put(X, y)                 -> PimDataset (bank-resident, view-cached)
-      register_kernel(name, fn) -> kernel name usable with map_* calls
-      named_kernel(name, build) -> register-once helper for kernel factories
-      map_reduce(kernel, ...)   -> kernel may be a registered name or a
-                                   callable; ``strategy=`` picks the
-                                   reduction per call
-    """
-
-    def __init__(self, config: PimConfig, devices: Optional[Sequence] = None):
-        self.config = config
-        self.stats = TransferStats()
-        self._mesh = None
-        self._jit_cache: dict = {}
-        self._kernels: dict[str, Callable] = {}
-        self._kernel_gen: dict[str, int] = {}
-        if config.backend == "shard_map":
-            devices = list(devices if devices is not None else jax.devices())
-            if len(devices) < config.n_cores:
-                raise ValueError(
-                    f"shard_map backend needs >= {config.n_cores} devices, "
-                    f"got {len(devices)} (set XLA_FLAGS="
-                    f"--xla_force_host_platform_device_count=...)")
-            self._mesh = Mesh(np.array(devices[: config.n_cores]), ("cores",))
-
-    # -- data placement ------------------------------------------------------
-
-    def put(self, X, y=None) -> "Any":
-        """Partition a dataset across the PIM banks ONCE and return a
-        :class:`repro.api.dataset.PimDataset` handle.
-
-        The handle owns the sharded device arrays, the validity mask, and
-        per-version quantized views (lazily materialized, cached), so
-        repeated fits / n_init restarts / hyperparameter sweeps reuse one
-        CPU->PIM transfer per view (paper §2.2: data is partitioned once
-        and stays bank-resident)."""
-        from ..api.dataset import PimDataset  # local import: api -> core
-        return PimDataset(self, X, y)
-
-    def shard_rows(self, x: np.ndarray, pad_value=0) -> jnp.ndarray:
-        """Partition rows across cores: (n, ...) -> (n_cores, n_pc, ...).
-
-        Equal-size shards (padding as needed) mirror the paper's requirement
-        that parallel CPU->PIM transfers need equal buffer sizes per bank.
-        Counts the modeled CPU->PIM transfer bytes (and the dedicated
-        shard_transfers/shard_bytes counters — see TransferStats)."""
-        c = self.config.n_cores
-        n = x.shape[0]
-        n_pc = -(-n // c)
-        pad = c * n_pc - n
-        if pad:
-            x = np.concatenate(
-                [x, np.full((pad,) + x.shape[1:], pad_value, x.dtype)], 0)
-        out = x.reshape(c, n_pc, *x.shape[1:])
-        self.stats.cpu_to_pim += out.nbytes
-        self.stats.shard_transfers += 1
-        self.stats.shard_bytes += out.nbytes
-        arr = jnp.asarray(out)
-        if self._mesh is not None:
-            arr = jax.device_put(
-                arr, NamedSharding(self._mesh, P("cores")))
-        return arr
-
-    def row_validity_mask(self, n: int) -> jnp.ndarray:
-        """(n_cores, n_pc) bool mask marking real (non-padding) rows."""
-        c = self.config.n_cores
-        n_pc = -(-n // c)
-        idx = np.arange(c * n_pc).reshape(c, n_pc)
-        mask = jnp.asarray(idx < n)
-        if self._mesh is not None:
-            mask = jax.device_put(mask, NamedSharding(self._mesh, P("cores")))
-        return mask
-
-    def broadcast(self, tree: Any) -> Any:
-        """Host -> all cores broadcast of model state (counted per core)."""
-        nbytes = sum(np.asarray(v).nbytes for v in jax.tree_util.tree_leaves(tree))
-        self.stats.cpu_to_pim += nbytes * self.config.n_cores
-        if self._mesh is not None:
-            tree = jax.device_put(
-                tree, NamedSharding(self._mesh, P()))  # replicated
-        return tree
-
-    # -- kernel registry -----------------------------------------------------
-
-    def register_kernel(self, name: str, fn: Callable) -> str:
-        """Register (or replace) a named per-core kernel.
-
-        Re-registering a name with a different function bumps a generation
-        counter, orphaning any compiled entries for the old function — a
-        stale kernel can never be served for a new registration."""
-        if self._kernels.get(name) is not fn:
-            self._kernel_gen[name] = self._kernel_gen.get(name, -1) + 1
-            self._kernels[name] = fn
-        return name
-
-    def named_kernel(self, name: str, builder: Callable[[], Callable]) -> str:
-        """Register ``builder()`` under ``name`` unless already present.
-
-        The idiom for parameterized kernel factories: encode the factory
-        parameters in the name (e.g. ``"kme.assign/k=16"``) and the
-        compiled kernel is reused across fits and restarts."""
-        if name not in self._kernels:
-            self.register_kernel(name, builder())
-        return name
-
-    def registered_kernels(self) -> tuple:
-        """Sorted names of all registered kernels (diagnostics/tests).
-
-        Trainer kernel names encode their dispatch routing — e.g.
-        ``"kme.assign/k16/be=pallas_tpu"`` — so this is also how tests
-        assert that a fit actually went through the kernel tier."""
-        return tuple(sorted(self._kernels))
-
-    def _resolve_kernel(self, kernel) -> tuple[tuple, Callable]:
-        """Map a kernel reference to (stable cache key, callable).
-
-        Named kernels key by (name, generation).  Raw callables key by the
-        function object itself — the cache then holds a strong reference,
-        so the function cannot be collected and its identity can never be
-        recycled for a different kernel (the id()-reuse bug this replaced).
-        """
-        if isinstance(kernel, str):
-            fn = self._kernels.get(kernel)
-            if fn is None:
-                raise KeyError(
-                    f"no kernel registered under {kernel!r}; "
-                    f"known: {sorted(self._kernels)}")
-            return ("named", kernel, self._kernel_gen[kernel]), fn
-        if not callable(kernel):
-            raise TypeError(f"kernel must be a registered name or a "
-                            f"callable, got {type(kernel).__name__}")
-        return ("fn", kernel), kernel
-
-    # -- execution ------------------------------------------------------------
-
-    def map_reduce(self, kernel, sharded: tuple, replicated: tuple,
-                   strategy: StrategyLike = None):
-        """Run ``kernel(*shard_args, *replicated)`` on every core and
-        reduce the resulting pytree across cores.
-
-        ``kernel`` is a registered name or a callable.  ``strategy`` picks
-        the reduction schedule per call ("fabric" | "host" |
-        "hierarchical" | a ReduceStrategy); default is the system config.
-        Transfer bytes are tracked for every schedule."""
-        strat = resolve_reduce_strategy(strategy, self.config.reduce)
-        kkey, fn = self._resolve_kernel(kernel)
-        key = ("map_reduce", kkey, len(sharded), len(replicated),
-               strat.cache_token())
-        step = self._jit_cache.get(key)
-        if step is None:
-            step = self._build_step(fn, strat)
-            self._jit_cache[key] = step
-        self.stats.kernel_launches += 1
-        self.stats.host_syncs += 1
-        out = step(tuple(sharded), tuple(replicated))
-        self.stats.pim_to_cpu += strat.count_pim_to_cpu(self, out)
-        return strat.finalize(self, out)
-
-    def map_reduce_custom(self, kernel, sharded: tuple,
-                          replicated: tuple, reduce: dict):
-        """Like map_reduce but with per-key reduce ops ("sum"|"min"|"max").
-
-        Used by DTR's min-max command (the host reduces per-core extrema).
-        """
-        kkey, fn = self._resolve_kernel(kernel)
-        key = ("custom", kkey, tuple(sorted(reduce.items())))
-        step = self._jit_cache.get(key)
-        if step is None:
-            def _step(sharded_, replicated_, _fn=fn):
-                partials = self._per_core(_fn, sharded_, replicated_)
-                return {k: (jnp.sum(v, axis=0) if reduce[k] == "sum"
-                            else jnp.min(v, axis=0) if reduce[k] == "min"
-                            else jnp.max(v, axis=0))
-                        for k, v in partials.items()}
-            step = jax.jit(_step)
-            self._jit_cache[key] = step
-        self.stats.kernel_launches += 1
-        self.stats.host_syncs += 1
-        out = step(tuple(sharded), tuple(replicated))
-        self.stats.pim_to_cpu += _tree_bytes(out) * self.config.n_cores
-        return out
-
-    def map_elementwise(self, kernel, sharded: tuple, replicated: tuple):
-        """Per-core kernel with *no* reduction: output stays core-resident
-        (DTR's split-commit).  Only the replicated command arguments cross
-        the host<->PIM boundary; counted accordingly."""
-        kkey, fn = self._resolve_kernel(kernel)
-        key = ("elem", kkey)
-        step = self._jit_cache.get(key)
-        if step is None:
-            step = jax.jit(
-                lambda s, r, _fn=fn: self._per_core(_fn, s, r))
-            self._jit_cache[key] = step
-        self.stats.kernel_launches += 1
-        self.stats.cpu_to_pim += sum(
-            np.asarray(v).nbytes for v in replicated) * self.config.n_cores
-        return step(tuple(sharded), tuple(replicated))
-
-    def _per_core(self, local_fn, sharded, replicated):
-        """Trace the per-core kernel under vmap or shard_map."""
-        if self._mesh is None:
-            return jax.vmap(lambda *s: local_fn(*s, *replicated))(*sharded)
-        mesh = self._mesh
-
-        @functools.partial(
-            shard_map, mesh=mesh,
-            in_specs=(tuple(P("cores") for _ in sharded), P()),
-            out_specs=P("cores"))
-        def _shmap(shard_args, rep):
-            local = [jnp.squeeze(a, 0) for a in shard_args]
-            out = local_fn(*local, *rep)
-            return jax.tree_util.tree_map(lambda v: v[None], out)
-        return _shmap(sharded, replicated)
-
-    def _build_step(self, local_fn, strat: ReduceStrategy):
-        """Compile one PIM step: per-core kernel + on-device reduce stage."""
-        def step(sharded, replicated):
-            partials = self._per_core(local_fn, sharded, replicated)
-            return strat.device_reduce(partials)
-        return jax.jit(step)
-
-    def step_program(self, kernel, prepare: Callable, update: Callable,
-                     *, name: str,
-                     strategy: StrategyLike = None) -> "StepProgram":
-        """Build a :class:`StepProgram` over a registered kernel.
-
-        ``prepare(carry) -> replicated`` derives the per-step broadcast
-        arguments (e.g. quantized weights) from the carry; ``update(carry,
-        reduced) -> (carry, out)`` applies the host-update math — both
-        pure jnp functions, traced into the fused chunk.  ``name`` is the
-        jit-cache namespace for the closure pair and must encode every
-        parameter baked into it (same convention as ``named_kernel``)."""
-        return StepProgram(self, kernel, prepare, update, name=name,
-                           strategy=strategy)
-
-
-class StepProgram:
-    """k consecutive training steps compiled into ONE ``lax.scan`` launch.
-
-    The unfused trainers drive every iteration from the host: broadcast
-    the model, launch the kernel, reduce, pull the result back, update in
-    numpy, repeat — the CPU<->PIM synchronization cadence the paper (and
-    PIM-Opt, arXiv:2404.07164) identify as the dominant cost once kernels
-    are resident.  A StepProgram keeps the whole iterate-update-broadcast
-    cycle on device: per scan step it runs ``prepare(carry)`` (weight
-    quantization), the per-core kernel, the strategy's full on-device
-    reduce, and ``update(carry, reduced)`` (dequantize + GD update) —
-    with the carry buffers donated, so k steps cost one dispatch and one
-    host sync instead of k of each (DESIGN.md §9).
-
-    Numerics: prepare/update are the *same* closures the serial loop
-    applies between launches, so for the integer versions a fused chunk
-    is bit-identical to k unfused steps (asserted by
-    tests/test_step_fusion.py).
-
-    Degradation: a non-``fusable`` strategy (HostReduce — the reduce
-    itself is a host round trip) runs the chunk as k ordinary
-    ``map_reduce`` steps with identical accounting to the unfused loop.
-    """
-
-    def __init__(self, system: PimSystem, kernel, prepare: Callable,
-                 update: Callable, *, name: str,
-                 strategy: StrategyLike = None):
-        self.system = system
-        self.prepare = prepare
-        self.update = update
-        self.name = name
-        self.strategy = resolve_reduce_strategy(strategy,
-                                                system.config.reduce)
-        self._kernel = kernel
-        self._kkey, self._fn = system._resolve_kernel(kernel)
-
-    # -- fused chunk ---------------------------------------------------------
-
-    def _build_chunk(self, k: int):
-        prepare, update, strat = self.prepare, self.update, self.strategy
-        per_core, fn = self.system._per_core, self._fn
-
-        def chunk(carry, sharded):
-            def one_step(carry, _):
-                replicated = prepare(carry)
-                partials = per_core(fn, sharded, replicated)
-                reduced = strat.device_reduce_full(partials)
-                return update(carry, reduced)
-            return jax.lax.scan(one_step, carry, None, length=k)
-        # donate the carry: the model state is updated in place on
-        # device, never materialized on the host inside the chunk
-        return jax.jit(chunk, donate_argnums=0)
-
-    def _reduced_shape(self, carry, sharded):
-        """Abstract per-step ``device_reduce`` output (eval_shape, cached)
-        — what the analytic chunk accounting sizes the reduce legs by.
-        Keyed by the operand shapes: one system can run same-named
-        programs over datasets of different widths (and slices share
-        the parent cache), so name alone would serve stale shapes and
-        corrupt the byte accounting."""
-        sig = tuple((v.shape, str(v.dtype)) for v in
-                    jax.tree_util.tree_leaves((carry, sharded)))
-        key = ("step_bytes", self._kkey, self.name,
-               self.strategy.cache_token(), sig,
-               self.system.config.n_cores)
-        out = self.system._jit_cache.get(key)
-        if out is None:
-            def reduce_stage(carry, sharded):
-                partials = self.system._per_core(
-                    self._fn, sharded, self.prepare(carry))
-                return self.strategy.device_reduce(partials)
-            out = jax.eval_shape(reduce_stage, carry, sharded)
-            self.system._jit_cache[key] = out
-        return out
-
-    def run(self, carry, sharded: tuple, k: int):
-        """Advance ``carry`` by ``k`` fused steps over the resident
-        shards; returns ``(carry, outs)`` where ``outs`` stacks the
-        per-step emits (None when ``update`` emits nothing).
-
-        One kernel launch and one host sync for the whole chunk; the
-        analytic byte accounting charges the carry broadcast once, the
-        reduce movement k times, and one chunk-boundary PIM->CPU sync of
-        the final carry + emits (DESIGN.md §9.2)."""
-        sharded = tuple(sharded)
-        if k <= 0:
-            return carry, None
-        if not self.strategy.fusable:
-            return self._run_per_step(carry, sharded, k)
-        # n_cores in the key: slices share the parent jit cache (vmap
-        # backend) and hierarchical rank-partial shapes depend on width
-        key = ("step_program", self._kkey, self.name,
-               self.strategy.cache_token(), len(sharded), k,
-               self.system.config.n_cores)
-        chunk = self.system._jit_cache.get(key)
-        if chunk is None:
-            chunk = self._build_chunk(k)
-            self.system._jit_cache[key] = chunk
-        stats = self.system.stats
-        stats.kernel_launches += 1
-        stats.host_syncs += 1
-        # the carry (model state) enters the banks once per chunk
-        stats.cpu_to_pim += _tree_bytes(carry) * self.system.config.n_cores
-        self.strategy.count_chunk(
-            self.system, self._reduced_shape(carry, sharded), k)
-        carry, outs = chunk(carry, sharded)
-        # one pim->cpu sync per chunk boundary: final carry + emits
-        stats.pim_to_cpu += _tree_bytes(carry) + _tree_bytes(outs)
-        return carry, outs
-
-    def _run_per_step(self, carry, sharded: tuple, k: int):
-        """HostReduce degradation: k single steps, each with the per-step
-        broadcast + host reduce + host-visible update of the unfused
-        loop (byte/launch/sync accounting identical to not fusing)."""
-        outs = []
-        for _ in range(k):
-            replicated = self.system.broadcast(self.prepare(carry))
-            reduced = self.system.map_reduce(
-                self._kernel, sharded, tuple(replicated),
-                strategy=self.strategy)
-            carry, out = self.update(carry, reduced)
-            outs.append(out)
-        if outs and outs[0] is not None:
-            outs = jax.tree_util.tree_map(
-                lambda *xs: jnp.stack(xs), *outs)
-        else:
-            outs = None
-        return carry, outs
-
-
-# ---------------------------------------------------------------------------
-# DPU cost model (benchmark harness only — reproduces Fig. 8-12 shapes).
-# ---------------------------------------------------------------------------
-
-#: instruction-cost table (cycles/op at full pipeline) — calibrated so the
-#: modeled version ratios match the paper's measured speedups:
-#:   LIN-INT32 ~= 10x LIN-FP32 ("order of magnitude", §5.2.1)
-#:   LIN-HYB   ~= 1.41x LIN-INT32 (+41%)
-#:   LIN-BUI   ~= 1.25x LIN-HYB  (+25%)
-#:   LOG LUT   ~= 53x  LOG-INT32 Taylor (§5.2.2)
-#:   LOG-HYB-LUT ~= 1.28x LOG-INT32-LUT(WRAM); LOG-BUI-LUT ~= 1.43x HYB
-DPU_OP_CYCLES: dict[str, float] = {
-    "add32": 1.0,          # native
-    "cmp": 1.0,            # native
-    "load": 1.0,           # WRAM load (per 32-bit word, post-DMA)
-    "mul8_builtin": 4.0,   # custom built-in multiply (Listing 1d)
-    "mul16": 7.0,          # compiler-generated 8/16-bit multiply (Listing 1b)
-    "mul32_emul": 24.0,    # runtime-emulated 32-bit multiply
-    "div32_emul": 56.0,    # runtime-emulated division
-    "fadd_emul": 55.0,     # software float add
-    "fmul_emul": 70.0,     # software float multiply
-    "lut_query_wram": 2.0,   # index clamp + load
-    "lut_query_mram": 6.0,   # + DMA latency amortized over batched queries
-}
-
-#: MRAM streaming bandwidth per DPU, bytes/cycle (≈ 700 MB/s at 425 MHz)
-DPU_MRAM_BYTES_PER_CYCLE = 1.6
-DPU_FREQ_HZ = 425e6
-DPU_PIPELINE_SATURATION_THREADS = 11
-
-#: on-bank storage dtype of the training data per (workload, version) —
-#: the explicit table the cost model's MRAM byte counting reads, with the
-#: per-dtype widths shared with quantization.STORAGE_BYTES.  Mirrors the
-#: quantized views PimDataset materializes (repro/api/dataset.py).
-WORKLOAD_STORAGE_DTYPE: dict[tuple[str, str], str] = {
-    ("lin", "fp32"): "fp32",
-    ("lin", "int32"): "int32",
-    ("lin", "hyb"): "int8",
-    ("lin", "bui"): "int8",
-    ("log", "fp32"): "fp32",
-    ("log", "int32"): "int32",
-    ("log", "int32_lut_mram"): "int32",
-    ("log", "int32_lut_wram"): "int32",
-    ("log", "hyb_lut"): "int8",
-    ("log", "bui_lut"): "int8",
-    ("dtr", "fp32"): "fp32",
-    ("kme", "int16"): "int16",
-}
-
-
-def workload_element_bytes(workload: str, version: str) -> int:
-    """Bytes per stored feature value for a workload version."""
-    try:
-        name = WORKLOAD_STORAGE_DTYPE[(workload, version)]
-    except KeyError:
-        raise ValueError(
-            f"no storage dtype recorded for {workload}/{version}; "
-            f"add it to WORKLOAD_STORAGE_DTYPE") from None
-    return storage_bytes(name)
-
-
-@dataclasses.dataclass
-class DpuCostModel:
-    """Analytic single-DPU kernel-time model.
-
-    ``cycles = max(instr_cycles / throughput(threads), mram_bytes / bw)``
-    where throughput(t) = min(t, 11) / 11  (fine-grained multithreading:
-    one instruction per cycle only once >= 11 tasklets are resident).
-    """
-
-    freq_hz: float = DPU_FREQ_HZ
-    saturation_threads: int = DPU_PIPELINE_SATURATION_THREADS
-
-    def kernel_seconds(self, instr_cycles: float, mram_bytes: float,
-                       n_threads: int) -> float:
-        tp = min(n_threads, self.saturation_threads) / self.saturation_threads
-        compute = instr_cycles / max(tp, 1e-9)
-        memory = mram_bytes / DPU_MRAM_BYTES_PER_CYCLE
-        return max(compute, memory) / self.freq_hz
-
-    # -- per-workload instruction estimates (per sample, F features) --------
-    #
-    # Calibrated against the paper's measured version-to-version speedups
-    # (§5.2.1/§5.2.2) rather than summed from DPU_OP_CYCLES: the compiled
-    # inner loops also contain loads, address arithmetic and loop control,
-    # so the per-feature totals below are the fitted quantities.  Anchors:
-    #   bui  ~ custom mul (4 instr, Listing 1d) + load/acc     -> 8
-    #   hyb  ~ compiler 16-bit mul (7 instr, Listing 1b) + l/a -> 10
-    #   int32~ emulated 32-bit mul + shifts                    -> 14
-    #   fp32 ~ software float mul+add                          -> 120
-    # giving fp32/int32 = 8.6x ("order of magnitude"), int32/hyb = 1.40
-    # (+41%), hyb/bui = 1.25 (+25%).
-    LIN_INSTR_PER_FEATURE = {"fp32": 120.0, "int32": 14.0,
-                             "hyb": 10.0, "bui": 8.0}
-
-    #: per-sample sigmoid cost.  The Taylor numbers are fitted to the
-    #: paper's measured 53x LUT-over-Taylor speedup and the 65% INT32-over-
-    #: FP32 reduction (§5.2.2) — the DPU Taylor loop iterates with emulated
-    #: high-precision arithmetic, which is why it is this expensive.
-    LOG_SIGMOID_CYCLES = {"fp32": 66_000.0, "int32": 24_000.0,
-                          "int32_lut_mram": 6.0, "int32_lut_wram": 2.0,
-                          "hyb_lut": 2.0, "bui_lut": 2.0}
-
-    @staticmethod
-    def lin_instr(version: str, n_features: int) -> float:
-        per_feat = DpuCostModel.LIN_INSTR_PER_FEATURE[version]
-        overhead = 24.0 if version == "fp32" else 10.0
-        # dot product + gradient pass back over features (second pass)
-        return 2 * n_features * per_feat + overhead
-
-    @staticmethod
-    def log_instr(version: str, n_features: int) -> float:
-        base_ver = {"fp32": "fp32", "int32": "int32",
-                    "int32_lut_mram": "int32", "int32_lut_wram": "int32",
-                    "hyb_lut": "hyb", "bui_lut": "bui"}[version]
-        base = DpuCostModel.lin_instr(base_ver, n_features)
-        return base + DpuCostModel.LOG_SIGMOID_CYCLES[version]
-
-    @staticmethod
-    def dtr_split_evaluate_instr(n_points: int) -> float:
-        c = DPU_OP_CYCLES
-        return n_points * (c["load"] + c["cmp"] + c["add32"])
-
-    @staticmethod
-    def kme_instr(n_points: int, n_features: int, k: int) -> float:
-        c = DPU_OP_CYCLES
-        per_pt = k * n_features * (c["load"] + c["mul16"] + c["add32"]) \
-            + k * c["cmp"] + n_features * c["add32"]
-        return n_points * per_pt
-
-    # -- end-to-end modeled time for the scaling benchmarks ------------------
-
-    def workload_seconds(self, workload: str, version: str, n_samples: int,
-                         n_features: int, n_cores: int, n_threads: int,
-                         k: int = 16) -> float:
-        n_pc = -(-n_samples // n_cores)
-        elem_bytes = workload_element_bytes(workload, version)
-        bytes_ = n_pc * n_features * elem_bytes
-        if workload == "lin":
-            instr = n_pc * self.lin_instr(version, n_features)
-        elif workload == "log":
-            instr = n_pc * self.log_instr(version, n_features)
-        elif workload == "dtr":
-            instr = self.dtr_split_evaluate_instr(n_pc) * n_features
-        elif workload == "kme":
-            instr = self.kme_instr(n_pc, n_features, k)
-        else:
-            raise ValueError(workload)
-        return self.kernel_seconds(instr, bytes_, n_threads)
+from ..systems.base import (FabricReduce, HierarchicalReduce, HostReduce,
+                            ReduceStrategy, ReduceVia, StepProgram,
+                            StrategyLike, System, TransferStats,
+                            chunk_schedule, resolve_reduce_strategy,
+                            run_steps, _host_sum, _leaf_bytes, _tree_bytes)
+from ..systems.pim import (DPU_FREQ_HZ, DPU_MRAM_BYTES_PER_CYCLE,
+                           DPU_OP_CYCLES, DPU_PIPELINE_SATURATION_THREADS,
+                           WORKLOAD_STORAGE_DTYPE, DpuCostModel, PimConfig,
+                           PimSystem, workload_element_bytes)
+
+__all__ = [
+    "DPU_FREQ_HZ", "DPU_MRAM_BYTES_PER_CYCLE", "DPU_OP_CYCLES",
+    "DPU_PIPELINE_SATURATION_THREADS", "DpuCostModel", "FabricReduce",
+    "HierarchicalReduce", "HostReduce", "PimConfig", "PimSystem",
+    "ReduceStrategy", "ReduceVia", "StepProgram", "StrategyLike",
+    "System", "TransferStats", "WORKLOAD_STORAGE_DTYPE", "chunk_schedule",
+    "resolve_reduce_strategy", "run_steps", "workload_element_bytes",
+]

@@ -1,10 +1,15 @@
 """Workload-session launcher: train any registered PIM-ML workload.
 
-The CLI face of the unified API (repro/api): one PimSystem session, one
-bank-resident PimDataset, N fits over it — version ladders and
-hyperparameter sweeps pay the CPU->PIM partition once, which is the
-paper's execution model (§2.2) and the enabler for serving many
+The CLI face of the unified API (repro/api): one System session, one
+resident PimDataset, N fits over it — version ladders and
+hyperparameter sweeps pay the data placement once, which is the paper's
+execution model (§2.2) and the enabler for serving many
 training/scoring requests over resident data (ROADMAP north star).
+
+``--system`` picks the execution target (DESIGN.md §10): the default
+PIM machine, the processor-centric host baseline, or the modeled-GPU
+target — the same workloads run unmodified on any of them
+(``repro.launch.compare`` drives all three side by side).
 
   PYTHONPATH=src python -m repro.launch.pim_ml --workload linreg \
       --versions int32,hyb --samples 8192 --features 16 --iters 300 \
@@ -12,14 +17,17 @@ training/scoring requests over resident data (ROADMAP north star).
 
   PYTHONPATH=src python -m repro.launch.pim_ml --workload kmeans \
       --samples 20000 --param n_clusters=16 --param n_init=2
+
+  PYTHONPATH=src python -m repro.launch.pim_ml --workload linreg \
+      --system host --versions fp32
 """
 from __future__ import annotations
 
 import argparse
 import time
 
-from repro.api import (PimConfig, PimSystem, get_workload, list_workloads,
-                       make_estimator)
+from repro.api import (get_workload, list_workloads, make_estimator,
+                       make_system)
 from repro.data.synthetic import (make_blobs, make_classification,
                                   make_linear_dataset)
 
@@ -52,6 +60,11 @@ def main(argv=None):
     ap.add_argument("--samples", type=int, default=8192)
     ap.add_argument("--features", type=int, default=16)
     ap.add_argument("--cores", type=int, default=16)
+    ap.add_argument("--system", default="pim",
+                    choices=("pim", "host", "gpu-model"),
+                    help="execution target (DESIGN.md §10): the PIM "
+                         "machine, the processor-centric host baseline, "
+                         "or the A100-roofline modeled GPU")
     ap.add_argument("--iters", type=int, default=0,
                     help="override n_iters/max_iter when > 0")
     ap.add_argument("--reduce", default="fabric",
@@ -98,11 +111,13 @@ def main(argv=None):
         key, _, vals = args.sweep.partition("=")
         sweep = [(key, _parse_value(v)) for v in vals.split(",")]
 
-    pim = PimSystem(PimConfig(n_cores=args.cores, reduce=args.reduce))
+    system = make_system(args.system, n_cores=args.cores,
+                         reduce=args.reduce)
     X, y = _make_data(wl.name, args.samples, args.features, args.seed)
-    ds = pim.put(X, y)
-    print(f"session: {wl.name} on {args.cores} cores, reduce={args.reduce}, "
-          f"dataset {args.samples}x{args.features} (bank-resident)")
+    ds = system.put(X, y)
+    print(f"session: {wl.name} on {args.system} ({args.cores} cores, "
+          f"reduce={args.reduce}), dataset "
+          f"{args.samples}x{args.features} (resident)")
 
     for ver in versions:
         for skey, sval in sweep:
@@ -110,19 +125,31 @@ def main(argv=None):
             if skey:
                 p[skey] = sval
             t0 = time.perf_counter()
-            est = make_estimator(wl.name, version=ver, pim=pim, **p).fit(ds)
+            est = make_estimator(wl.name, version=ver, system=system,
+                                 **p).fit(ds)
             dt = time.perf_counter() - t0
             score = (est.score(X) if wl.unsupervised else est.score(X, y))
             tag = f" {skey}={sval}" if skey else ""
             print(f"  {ver:16s}{tag:14s} score={score:9.4f}  "
                   f"fit={dt:6.2f}s  shard_transfers="
-                  f"{pim.stats.shard_transfers}")
+                  f"{system.stats.shard_transfers}")
 
-    s = pim.stats
-    print(f"transfers: cpu->pim {s.cpu_to_pim:,} B "
-          f"(dataset shards {s.shard_bytes:,} B in {s.shard_transfers} "
-          f"transfers), pim->cpu {s.pim_to_cpu:,} B, "
-          f"inter-core via host {s.inter_core_via_host:,} B")
+    s = system.stats
+    if system.kind == "pim":
+        print(f"transfers: cpu->pim {s.cpu_to_pim:,} B "
+              f"(dataset shards {s.shard_bytes:,} B in {s.shard_transfers} "
+              f"transfers), pim->cpu {s.pim_to_cpu:,} B, "
+              f"inter-core via host {s.inter_core_via_host:,} B")
+    else:
+        print(f"traffic: DRAM {s.dram_bytes:,} B streamed over "
+              f"{s.kernel_launches} launches "
+              f"({s.shard_transfers} view materializations, "
+              f"{s.shard_bytes:,} B resident)")
+    if system.kind == "gpu-model":
+        g = system.gpu
+        print(f"modeled A100: {g.modeled_seconds * 1e3:.3f} ms, "
+              f"{g.modeled_energy_j:.3f} J over {g.launches} launches "
+              f"({g.flops:.3e} FLOPs, {g.hbm_bytes:.3e} HBM B)")
 
 
 if __name__ == "__main__":

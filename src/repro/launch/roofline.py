@@ -26,6 +26,7 @@ axis); single-link numbers are 2x larger, noted in the table.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 from typing import Optional
 
@@ -35,6 +36,50 @@ ICI_LINK_BW = 50e9           # B/s per link
 ICI_LINKS = 2                # concurrent links charged for collectives
 
 RESULTS_PATH = "experiments/dryrun_results.json"
+
+
+# ---------------------------------------------------------------------------
+# GPU roofline (the ModeledGpuSystem target — DESIGN.md §10.4).
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GpuRoofline:
+    """Calibrated kernel-time/energy model of a discrete GPU.
+
+    ``kernel_seconds(flops, bytes)`` prices one launch at
+    ``launch_overhead + max(flops/peak, bytes/hbm_bw)`` — the classic
+    roofline with a fixed dispatch cost.  The overhead term is what the
+    paper's comparison turns on for the small iterative workloads: a GD
+    step whose math takes microseconds still pays the full kernel-launch
+    latency every iteration, which is exactly when PIM wins (Figs.
+    13-17) and why the fused step engine matters on every target.
+
+    Used by :class:`repro.systems.gpu_model.ModeledGpuSystem` to price
+    real compiled HLO programs, replacing the previously hard-coded
+    paper speedup constants in benchmarks/fig13_17_compare.py with a
+    model whose inputs (FLOPs, bytes) are measured from the very
+    programs the workloads execute.
+    """
+
+    name: str = "a100-sxm4-40g"
+    peak_flops: float = 19.5e12      # fp32 (non-TC: the paper's ML
+    #                                  kernels are fp32 BLAS-style loops)
+    hbm_bw: float = 1.555e12         # B/s (40 GB HBM2e)
+    launch_overhead_s: float = 5e-6  # CUDA kernel-launch latency
+    tdp_w: float = 400.0             # board power for the energy model
+
+    def kernel_seconds(self, flops: float, bytes_: float) -> float:
+        return self.launch_overhead_s + max(flops / self.peak_flops,
+                                            bytes_ / self.hbm_bw)
+
+    def kernel_energy_j(self, seconds: float) -> float:
+        return seconds * self.tdp_w
+
+
+def a100() -> GpuRoofline:
+    """The default calibration: NVIDIA A100-SXM4 (the class of GPU the
+    paper's Table 4 comparison machine carries)."""
+    return GpuRoofline()
 
 
 def terms(entry: dict, n_chips: int, arch: str = "",

@@ -20,7 +20,8 @@ from __future__ import annotations
 import dataclasses
 from typing import List, Optional
 
-from ..core.pim import PimSystem, TransferStats
+from ..systems import PimSystem, TransferStats
+from ..systems.base import _MirrorStats
 
 #: UPMEM hands workloads DPUs in ranks of 64 (paper §2.2).
 DEFAULT_RANK_SIZE = 64
@@ -167,25 +168,9 @@ class BankAllocator:
 # Slice view.
 # ---------------------------------------------------------------------------
 
-_STAT_FIELDS = tuple(f.name for f in dataclasses.fields(TransferStats))
-
-
-class _MirrorStats(TransferStats):
-    """Slice-local counters that forward every *increment* to the parent
-    system's stats.  ``reset()`` zeroes only the slice view — cumulative
-    parent totals are never rolled back (only positive deltas mirror)."""
-
-    def __init__(self, parent: TransferStats):
-        object.__setattr__(self, "_parent", parent)
-        super().__init__()
-
-    def __setattr__(self, name, value):
-        if name in _STAT_FIELDS:
-            delta = value - getattr(self, name, 0)
-            if delta > 0:
-                setattr(self._parent, name,
-                        getattr(self._parent, name) + delta)
-        object.__setattr__(self, name, value)
+# _MirrorStats moved to repro.systems.base so every System's slice view
+# (PimSlice here, HostSlice/GpuModelSlice in repro/systems) shares one
+# mirroring implementation; re-exported above for compatibility.
 
 
 class PimSlice(PimSystem):

@@ -8,8 +8,8 @@ the ``repro.launch.pim_jobs`` CLI (DESIGN.md §7.4).
 
 Schema (all sections optional except ``jobs``/``sweeps`` — at least one)::
 
-    system:   {cores: 64, rank_size: 16, reduce: fabric,
-               backfill: false}
+    system:   {kind: pim|host|gpu-model, cores: 64, rank_size: 16,
+               reduce: fabric, backfill: false}
     datasets: {name: {kind: linear|classification|blobs,
                       samples: N, features: F, seed: S, ...}}
     jobs:     [{workload: linreg, version: int32, dataset: name,
@@ -27,9 +27,9 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from ..core.pim import PimConfig, PimSystem
 from ..data.synthetic import (make_blobs, make_classification,
                               make_linear_dataset)
+from ..systems import System, make_system
 from .scheduler import JobHandle, PimScheduler
 
 
@@ -73,13 +73,23 @@ def build_dataset(spec: dict) -> Tuple[np.ndarray, Optional[np.ndarray]]:
                      f"known: linear, classification, blobs")
 
 
-def build_system(spec: Optional[dict]) -> Tuple[PimSystem, dict]:
-    """``system:`` entry -> (PimSystem, scheduler kwargs)."""
+def build_system(spec: Optional[dict]) -> Tuple[System, dict]:
+    """``system:`` entry -> (System, scheduler kwargs).
+
+    ``kind: pim | host | gpu-model`` selects the execution target
+    (default pim — DESIGN.md §10); the remaining keys fill its config."""
     spec = dict(spec or {})
-    cfg = PimConfig(n_cores=int(spec.pop("cores", 64)),
-                    n_threads=int(spec.pop("threads", 16)),
-                    reduce=spec.pop("reduce", "fabric"),
-                    backend=spec.pop("backend", "vmap"))
+    kind = str(spec.pop("kind", "pim"))
+    kwargs = dict(n_cores=int(spec.pop("cores", 64)),
+                  n_threads=int(spec.pop("threads", 16)),
+                  reduce=spec.pop("reduce", "fabric"))
+    backend = spec.pop("backend", None)
+    if backend is not None:
+        if kind != "pim":
+            raise ValueError(
+                f"system backend: {backend!r} only applies to kind: pim "
+                f"(a {kind!r} target always runs single-image)")
+        kwargs["backend"] = backend
     sched_kw = {}
     if "rank_size" in spec:
         sched_kw["rank_size"] = int(spec.pop("rank_size"))
@@ -87,7 +97,7 @@ def build_system(spec: Optional[dict]) -> Tuple[PimSystem, dict]:
         sched_kw["backfill"] = bool(spec.pop("backfill"))
     if spec:
         raise ValueError(f"unknown system keys {sorted(spec)}")
-    return PimSystem(cfg), sched_kw
+    return make_system(kind, **kwargs), sched_kw
 
 
 def run_manifest(doc: dict, drain: bool = True

@@ -1,10 +1,13 @@
 """Multi-tenant PIM training-job scheduler (DESIGN.md §7.2).
 
 ``PimScheduler`` layers job management on the unified workload API: it
-owns a :class:`~repro.sched.allocator.BankAllocator` over one parent
-:class:`~repro.core.pim.PimSystem`, admits queued jobs when rank-aligned
-capacity exists, runs each admitted job on its own
-:class:`~repro.sched.allocator.PimSlice`, and gang-steps all running
+owns a :class:`~repro.sched.allocator.BankAllocator` per parent
+:class:`~repro.systems.base.System` (a single PimSystem, or a mixed
+``{"pim": ..., "host": ...}`` machine — DESIGN.md §10.3), admits queued
+jobs when rank-aligned capacity exists, runs each admitted job on its
+own slice (``System.slice``: a
+:class:`~repro.sched.allocator.PimSlice` core extent on PIM, a
+thread-pool lane scope on a host target), and gang-steps all running
 jobs round-robin — one trainer iteration per job per turn — so K
 concurrent fits interleave on a single host thread, exactly the way the
 UPMEM host serially orchestrates many tenants' rank allocations
@@ -28,11 +31,11 @@ from __future__ import annotations
 
 import enum
 import itertools
-from typing import List, Optional, Union
+from typing import List, Mapping, Optional, Union
 
 from ..api.dataset import PimDataset
 from ..api.registry import FitResult, TrainerSpec, Workload, get_workload
-from ..core.pim import DpuCostModel, PimSystem, TransferStats
+from ..systems import DpuCostModel, System, TransferStats
 from .allocator import BankAllocator, BankLease, FragmentationStats, PimSlice
 from .gang import FusedGdSweep, plan_fusion
 
@@ -80,6 +83,7 @@ class JobHandle:
         self.priority = priority
         self.n_cores = n_cores
         self.name = name or f"job{job_id}:{workload.name}/{spec.version}"
+        self.target = "pim"     # execution target on a mixed machine
         self.state = JobState.QUEUED
         self.steps = 0
         self.iters = 0
@@ -109,9 +113,12 @@ class JobHandle:
 
 
 def _modeled_step_seconds(handle: JobHandle, dataset: PimDataset,
-                          slice_: PimSlice) -> float:
+                          slice_: System) -> float:
     """Per-pass DPU kernel seconds for one gang step of this job (0.0
-    for workloads outside the paper's cost model)."""
+    for workloads outside the paper's cost model, and for jobs running
+    on a non-PIM target — DPU cycle accounting is meaningless there)."""
+    if getattr(slice_, "kind", None) != "pim":
+        return 0.0
     wl_key = _COST_KEYS.get(handle.workload.name)
     if wl_key is None:
         return 0.0
@@ -131,23 +138,26 @@ class _Runnable:
     """Base: owns a lease + slice + dataset and advances by one step."""
 
     def __init__(self, jobs: List[JobHandle], data, priority: int,
-                 seq: int, n_cores: int):
+                 seq: int, n_cores: int, target: str = "pim"):
         self.jobs = jobs
         self.data = data
         self.priority = priority
         self.seq = seq
         self.n_cores = n_cores
+        self.target = target
         self.lease: Optional[BankLease] = None
-        self.slice: Optional[PimSlice] = None
+        self.slice: Optional[System] = None
         self._snapshot: Optional[TransferStats] = None
 
     @property
     def live_jobs(self) -> List[JobHandle]:
         return [j for j in self.jobs if not j.done]
 
-    def start(self, system: PimSystem, lease: BankLease) -> None:
+    def start(self, system: System, lease: BankLease) -> None:
         self.lease = lease
-        self.slice = PimSlice(system, lease)
+        # the system hands out its own slice type: PimSlice over a core
+        # extent, HostSlice over thread-pool lanes (DESIGN.md §10.3)
+        self.slice = system.slice(lease)
         self._snapshot = self.slice.stats.snapshot()
         X, y = self.data
         self.dataset = self.slice.put(X, y)
@@ -267,21 +277,47 @@ class _FusedRun(_Runnable):
 # ---------------------------------------------------------------------------
 
 class PimScheduler:
-    """FIFO+priority scheduler of training jobs over one PimSystem.
+    """FIFO+priority scheduler of training jobs over one or more Systems.
 
-    ``rank_size=None`` auto-selects the largest divisor of the machine
-    not exceeding UPMEM's 64-DPU rank (see ``default_rank_size``);
+    ``system`` is a single :class:`~repro.systems.base.System` (the
+    original surface) or a ``{target_name: System}`` mapping — a *mixed*
+    machine, e.g. ``{"pim": PimSystem(...), "host": HostSystem(...)}``:
+    one queue, one drain loop, per-target bank allocators, and
+    ``submit(..., target="host")`` routes a job to the named target
+    (default: the first/only one).  A HostSystem is schedulable too —
+    its "cores" are thread-pool lanes and its slices are accounting
+    scopes over the same single-image execution (DESIGN.md §10.3).
+
+    ``rank_size=None`` auto-selects the largest divisor of each machine
+    not exceeding UPMEM's 64-DPU rank (see ``default_rank_size``; an
+    explicit ``rank_size`` applies to the default target only);
     ``backfill=True`` lets smaller jobs jump a queue head that doesn't
     fit (better utilization, admission no longer strictly ordered —
-    off by default to keep head-of-line semantics).
+    off by default to keep head-of-line semantics, which with multiple
+    targets is per target: a full PIM machine never stalls host-lane
+    admissions).
     """
 
-    def __init__(self, system: PimSystem, rank_size: Optional[int] = None,
+    def __init__(self,
+                 system: Union[System, Mapping[str, System]],
+                 rank_size: Optional[int] = None,
                  backfill: bool = False):
-        self.system = system
+        if isinstance(system, Mapping):
+            if not system:
+                raise ValueError("need at least one system to schedule on")
+            self.systems = dict(system)
+        else:
+            self.systems = {getattr(system, "kind", "pim"): system}
+        self.default_target = next(iter(self.systems))
         # rank_size=None -> the allocator's auto rank (largest divisor
         # of the machine <= the 64-DPU UPMEM rank)
-        self.allocator = BankAllocator(system.config.n_cores, rank_size)
+        self._allocators = {
+            name: BankAllocator(
+                sys_.config.n_cores,
+                rank_size if name == self.default_target else None)
+            for name, sys_ in self.systems.items()}
+        self.system = self.systems[self.default_target]
+        self.allocator = self._allocators[self.default_target]
         self.backfill = backfill
         self._queue: List[_Runnable] = []
         self._running: List[_Runnable] = []
@@ -292,14 +328,24 @@ class PimScheduler:
 
     # -- submission ----------------------------------------------------------
 
-    def _sized(self, n_cores: Optional[int]) -> int:
+    def _resolve_target(self, target: Optional[str]) -> str:
+        if target is None:
+            return self.default_target
+        if target not in self.systems:
+            raise ValueError(f"unknown target {target!r}; known: "
+                             f"{sorted(self.systems)}")
+        return target
+
+    def _sized(self, n_cores: Optional[int],
+               target: Optional[str] = None) -> int:
         """Rank-align a request, rejecting unschedulable sizes at
         submission time (an over-machine job would livelock admission)."""
-        size = self.allocator.align(n_cores)
-        if size > self.allocator.n_cores:
+        alloc = self._allocators[self._resolve_target(target)]
+        size = alloc.align(n_cores)
+        if size > alloc.n_cores:
             raise ValueError(
                 f"job needs {size} cores (rank-aligned) but the machine "
-                f"has {self.allocator.n_cores}")
+                f"has {alloc.n_cores}")
         return size
 
     @staticmethod
@@ -328,14 +374,16 @@ class PimScheduler:
                spec: Optional[TrainerSpec] = None, *,
                version: Optional[str] = None, n_cores: Optional[int] = None,
                priority: int = 0, name: Optional[str] = None,
+               target: Optional[str] = None,
                **params) -> JobHandle:
         """Queue one training job; returns its :class:`JobHandle`.
 
         ``spec`` wins when given; otherwise one is built from
         ``version``/``**params`` exactly as ``make_estimator`` would.
         ``n_cores`` is rounded up to whole ranks at admission (None =
-        one rank).  Jobs run when capacity exists, in (priority desc,
-        submission order).
+        one rank).  ``target`` picks the execution System on a mixed
+        machine (None = the default target).  Jobs run when capacity
+        exists, in (priority desc, submission order).
         """
         wl = self._resolve_workload(workload)
         if spec is None:
@@ -343,11 +391,13 @@ class PimScheduler:
         elif version is not None or params:
             raise TypeError("pass either spec= or version=/params, "
                             "not both")
-        size = self._sized(n_cores)
+        target = self._resolve_target(target)
+        size = self._sized(n_cores, target)
         handle = JobHandle(next(self._next_job_id), wl, spec, priority,
                           size, name)
+        handle.target = target
         run = _SingleRun([handle], self._host_arrays(data), priority,
-                         next(self._seq), size)
+                         next(self._seq), size, target)
         self._queue.append(run)
         self.handles.append(handle)
         return handle
@@ -355,6 +405,7 @@ class PimScheduler:
     def sweep(self, workload: Union[str, Workload], data, grid: dict, *,
               version: Optional[str] = None, n_cores: Optional[int] = None,
               fused: bool = True, priority: int = 0,
+              target: Optional[str] = None,
               **base_params) -> List[JobHandle]:
         """Submit the cartesian product of ``grid`` as one job per point.
 
@@ -371,7 +422,8 @@ class PimScheduler:
                   for values in itertools.product(*(grid[k] for k in keys))]
         specs = [wl.spec(version, **{**base_params, **combo})
                  for combo in combos]
-        size = self._sized(n_cores)
+        target = self._resolve_target(target)
+        size = self._sized(n_cores, target)
         data = self._host_arrays(data)
 
         groups = (plan_fusion(wl, specs) if fused
@@ -382,12 +434,13 @@ class PimScheduler:
             for i in group:
                 handle = JobHandle(next(self._next_job_id), wl, specs[i],
                                    priority, size)
+                handle.target = target
                 handles[i] = handle
                 group_handles.append(handle)
                 self.handles.append(handle)
             cls = _FusedRun if len(group) > 1 else _SingleRun
             self._queue.append(cls(group_handles, data, priority,
-                                   next(self._seq), size))
+                                   next(self._seq), size, target))
         return handles
 
     # -- execution -----------------------------------------------------------
@@ -396,18 +449,22 @@ class PimScheduler:
         self._queue = [r for r in self._queue if r.live_jobs]
         pending = sorted(self._queue,
                          key=lambda r: (-r.priority, r.seq))
+        blocked: set = set()    # head-of-line blocking is per target
         for run in pending:
-            lease = self.allocator.allocate(run.n_cores)
+            if run.target in blocked:
+                continue
+            alloc = self._allocators[run.target]
+            lease = alloc.allocate(run.n_cores)
             if lease is None:
-                if self.backfill:
-                    continue
-                break
+                if not self.backfill:
+                    blocked.add(run.target)
+                continue
             self._queue.remove(run)
             try:
-                run.start(self.system, lease)
+                run.start(self.systems[run.target], lease)
             except Exception as err:  # noqa: BLE001 — bad data/spec must
                 # fail the job, not unwind the other tenants' drain
-                self.allocator.release(lease)
+                alloc.release(lease)
                 for job in run.live_jobs:
                     job.error = err
                     job.state = JobState.FAILED
@@ -423,7 +480,7 @@ class PimScheduler:
         still_running: List[_Runnable] = []
         for run in self._running:
             if run.advance():
-                self.allocator.release(run.lease)
+                self._allocators[run.target].release(run.lease)
                 self._finished.append(run)
             else:
                 still_running.append(run)
@@ -450,9 +507,13 @@ class PimScheduler:
         return self.allocator.fragmentation()
 
     def stats(self) -> dict:
-        """Operator snapshot: job counts, occupancy, queue depth."""
+        """Operator snapshot: job counts, occupancy, queue depth.
+
+        The top-level occupancy keys describe the default target (the
+        original single-system surface); ``targets`` breaks occupancy
+        out per execution System on a mixed machine."""
         frag = self.fragmentation()
-        return {
+        out = {
             "jobs": self.counts(),
             "queued_runnables": len(self._queue),
             "running_runnables": len(self._running),
@@ -460,3 +521,13 @@ class PimScheduler:
             "cores_free": frag.free_cores,
             "external_fragmentation": frag.external_fragmentation,
         }
+        out["targets"] = {
+            name: {
+                "kind": getattr(self.systems[name], "kind", "pim"),
+                "cores_used": f.used_cores,
+                "cores_free": f.free_cores,
+                "external_fragmentation": f.external_fragmentation,
+            }
+            for name, f in ((n, a.fragmentation())
+                            for n, a in self._allocators.items())}
+        return out

@@ -1,0 +1,64 @@
+"""Execution targets behind the backend-portable System protocol.
+
+One API, three implementations (DESIGN.md §10):
+
+  PimSystem         the paper's memory-centric PIM machine (systems/pim.py)
+  HostSystem        the processor-centric CPU baseline (systems/host.py)
+  ModeledGpuSystem  HostSystem numerics + A100 roofline time/energy
+                    (systems/gpu_model.py)
+
+``make_system("pim" | "host" | "gpu-model", n_cores=..., ...)`` is the
+construction path the launchers use; every workload, the estimator
+facade, the job scheduler, and the fused step engine run unmodified on
+any of the three — the paper's CPU-vs-GPU-vs-PIM comparison as a
+first-class API call (``repro.launch.compare``).
+"""
+from __future__ import annotations
+
+from .base import (FabricReduce, HierarchicalReduce, HostReduce,
+                   ReduceStrategy, ReduceVia, StepProgram, System,
+                   TransferStats, chunk_schedule, resolve_reduce_strategy,
+                   run_steps)
+from .gpu_model import GpuModelConfig, GpuModelReport, ModeledGpuSystem
+from .host import HostConfig, HostSlice, HostSystem
+from .pim import (DPU_FREQ_HZ, DPU_MRAM_BYTES_PER_CYCLE, DPU_OP_CYCLES,
+                  DPU_PIPELINE_SATURATION_THREADS, WORKLOAD_STORAGE_DTYPE,
+                  DpuCostModel, PimConfig, PimSystem,
+                  workload_element_bytes)
+
+#: CLI spelling -> (config class, system class); aliases included so
+#: both "gpu-model" (flag spelling) and "gpu_model" (identifier
+#: spelling) resolve.
+SYSTEM_KINDS = {
+    "pim": (PimConfig, PimSystem),
+    "host": (HostConfig, HostSystem),
+    "gpu-model": (GpuModelConfig, ModeledGpuSystem),
+    "gpu_model": (GpuModelConfig, ModeledGpuSystem),
+}
+
+
+def make_system(kind: str = "pim", **config_kwargs) -> System:
+    """Construct an execution target by name.
+
+    ``make_system("host", n_cores=8)`` — keyword arguments are the
+    fields of the target's config dataclass (``PimConfig`` /
+    ``HostConfig`` / ``GpuModelConfig``)."""
+    try:
+        cfg_cls, sys_cls = SYSTEM_KINDS[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown system kind {kind!r}; known: "
+            f"{sorted(set(SYSTEM_KINDS) - {'gpu_model'})}") from None
+    return sys_cls(cfg_cls(**config_kwargs))
+
+
+__all__ = [
+    "DPU_FREQ_HZ", "DPU_MRAM_BYTES_PER_CYCLE", "DPU_OP_CYCLES",
+    "DPU_PIPELINE_SATURATION_THREADS", "DpuCostModel", "FabricReduce",
+    "GpuModelConfig", "GpuModelReport", "HierarchicalReduce", "HostConfig",
+    "HostReduce", "HostSlice", "HostSystem", "ModeledGpuSystem",
+    "PimConfig", "PimSystem", "ReduceStrategy", "ReduceVia",
+    "SYSTEM_KINDS", "StepProgram", "System", "TransferStats",
+    "WORKLOAD_STORAGE_DTYPE", "chunk_schedule", "make_system",
+    "resolve_reduce_strategy", "run_steps", "workload_element_bytes",
+]

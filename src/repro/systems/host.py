@@ -1,0 +1,151 @@
+"""Processor-centric host-CPU baseline (paper §5.4; DESIGN.md §10.3).
+
+The paper's comparison points run the *same algorithms* on a
+conventional CPU: one resident copy of the data, fp32 BLAS-style hot
+loops, no partitioning, no quantization round-trip, no host<->device
+command traffic.  :class:`HostSystem` is that target expressed through
+the :class:`~repro.systems.base.System` protocol, replacing the ad-hoc
+``train_cpu_baseline`` functions that used to live in every trainer —
+now a LIN/LOG/DTR/KME ``Workload`` object fits on a HostSystem
+unmodified, through the identical harness (the matched-baseline
+discipline PIM-Opt, arXiv:2404.07164, argues for).
+
+Semantics relative to PIM:
+  shard_rows      no partitioning: (n, ...) -> (1, n, ...), one resident
+                  image (``n_shards == 1``); the shared vmap machinery
+                  then traces the kernel over the whole dataset at once
+                  — i.e. a plain fp32 jnp hot loop.
+  broadcast       free: the model lives in the same address space.
+  reduce          degenerate (a sum over one shard); every strategy is
+                  numerically a no-op, so ``fuse_steps`` chunks collapse
+                  to a plain k-iteration scan ("fuses trivially").
+  TransferStats   ``cpu_to_pim``/``pim_to_cpu`` stay 0; ``dram_bytes``
+                  counts the dataset bytes each training pass streams
+                  from DRAM — the processor-centric bottleneck (what a
+                  roofline model prices).  ``shard_transfers``/
+                  ``shard_bytes``/``kernel_launches``/``host_syncs``
+                  keep their cross-system meaning.
+  transcendentals native (``exact_transcendentals``): the LOG fp32
+                  baseline uses the exact sigmoid, as the paper's
+                  MKL baseline does, not the DPU Taylor expansion.
+
+Scheduling: ``config.n_cores`` is the *lane count* — thread-pool
+capacity the :class:`~repro.sched.scheduler.PimScheduler`'s bank
+allocator carves, NOT a data-parallel width.  A :class:`HostSlice`
+lease is therefore an accounting scope (mirrored stats, shared caches)
+over the same single-image execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .base import (ReduceVia, System, _tree_bytes, adopt_parent_session,
+                   check_lease_bounds)
+
+
+@dataclasses.dataclass
+class HostConfig:
+    """Host-CPU target configuration.
+
+    ``n_cores`` is scheduling capacity (thread-pool lanes for the job
+    scheduler), not a shard width — execution always runs over one
+    resident image.  ``reduce`` is accepted for config compatibility;
+    every strategy is degenerate over a single shard."""
+
+    n_cores: int = 8
+    n_threads: int = 1
+    reduce: ReduceVia = ReduceVia.FABRIC
+    backend: str = "host"
+
+
+class HostSystem(System):
+    """One-image processor-centric execution of the System surface."""
+
+    kind = "host"
+    exact_transcendentals = True
+
+    def __init__(self, config: Optional[HostConfig] = None,
+                 devices: Optional[Sequence] = None):
+        super().__init__(config or HostConfig())
+
+    @property
+    def n_shards(self) -> int:
+        return 1
+
+    # -- data placement ------------------------------------------------------
+
+    def shard_rows(self, x: np.ndarray, pad_value=0) -> jnp.ndarray:
+        """No partitioning: (n, ...) -> (1, n, ...), one resident image.
+
+        Counted as a view materialization (shard_transfers/shard_bytes)
+        so sweep-reuse assertions work on every system; no CPU->PIM
+        bytes — the data never leaves the host address space."""
+        out = np.asarray(x)[None]
+        self.stats.shard_transfers += 1
+        self.stats.shard_bytes += out.nbytes
+        return jnp.asarray(out)
+
+    def row_validity_mask(self, n: int) -> jnp.ndarray:
+        """(1, n) all-true mask: a single image needs no padding."""
+        return jnp.ones((1, n), bool)
+
+    def broadcast(self, tree: Any) -> Any:
+        """Free: host model state is already where the kernel runs."""
+        return tree
+
+    # -- accounting: DRAM traffic instead of CPU<->PIM transfers -------------
+
+    def _charge_launch_operands(self, sharded, replicated) -> None:
+        # each training pass streams the resident operands from DRAM
+        self.stats.dram_bytes += _tree_bytes(tuple(sharded)) \
+            + _tree_bytes(tuple(replicated))
+
+    def _charge_reduce(self, strat, out) -> None:
+        pass  # no PIM->CPU boundary to cross
+
+    def _charge_reduce_custom(self, out) -> None:
+        pass
+
+    def _charge_inter_core(self, nbytes: int) -> None:
+        pass  # no host link between shards of one resident image
+
+    def _charge_elementwise(self, sharded, replicated) -> None:
+        self.stats.dram_bytes += _tree_bytes(tuple(sharded)) \
+            + _tree_bytes(tuple(replicated))
+
+    def _charge_chunk(self, carry, sharded, reduced_shape, strat,
+                      k: int) -> None:
+        # a fused k-step chunk still streams the dataset k times
+        self.stats.dram_bytes += k * _tree_bytes(tuple(sharded))
+
+    def _charge_chunk_boundary(self, carry, outs) -> None:
+        pass
+
+    # -- multi-tenancy -------------------------------------------------------
+
+    def slice(self, lease) -> "HostSystem":
+        return HostSlice(self, lease)
+
+
+class HostSlice(HostSystem):
+    """A lane-scoped accounting view of a parent :class:`HostSystem`.
+
+    There is no core axis to carve on a host target, so a lease
+    degrades to a thread-pool lane grant: the slice shares the parent's
+    kernel registry and jit cache (one compile serves every tenant),
+    executes identically over the single resident image, and mirrors
+    its ``TransferStats`` into the parent's so per-job deltas stay
+    attributable (DESIGN.md §7.2, §10.3)."""
+
+    def __init__(self, parent: HostSystem, lease):
+        check_lease_bounds(parent, lease, "lanes")
+        self.parent = parent
+        self.lease = lease
+        super().__init__(dataclasses.replace(parent.config,
+                                             n_cores=lease.n_cores))
+        adopt_parent_session(self, parent)

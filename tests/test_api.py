@@ -30,16 +30,16 @@ def _tiny_fit(name, version, pim):
     if name == "kmeans":
         X, _, _ = make_blobs(256, 4, centers=4, seed=0)
         est = make_estimator(name, version=version, n_clusters=4,
-                             max_iter=10, pim=pim).fit(X)
+                             max_iter=10, system=pim).fit(X)
         return est, X, None
     if name == "dtree":
         X, y = make_classification(512, 16, seed=0)
         est = make_estimator(name, version=version, max_depth=3,
-                             pim=pim).fit(X, y)
+                             system=pim).fit(X, y)
         return est, X, y
     X, y, _ = make_linear_dataset(512, 4, seed=0)
     est = make_estimator(name, version=version, n_iters=5,
-                         pim=pim).fit(X, y)
+                         system=pim).fit(X, y)
     return est, X, y
 
 
@@ -111,13 +111,13 @@ def test_dataset_reuse_single_shard_transfer():
     ds = pim.put(X, y)
     assert pim.stats.shard_transfers == 0     # lazy: nothing moved yet
 
-    make_estimator("linreg", version="int32", n_iters=5, pim=pim).fit(ds)
+    make_estimator("linreg", version="int32", n_iters=5, system=pim).fit(ds)
     t1, b1 = pim.stats.shard_transfers, pim.stats.shard_bytes
     assert t1 == 2                            # X and y, one partition each
 
     # hyperparameter sweep: second fit must add ZERO shard bytes
     make_estimator("linreg", version="int32", n_iters=9, lr=0.3,
-                   pim=pim).fit(ds)
+                   system=pim).fit(ds)
     assert (pim.stats.shard_transfers, pim.stats.shard_bytes) == (t1, b1)
 
 
@@ -126,10 +126,10 @@ def test_dataset_view_shared_across_workloads():
     pim = _pim()
     X, y, _ = make_linear_dataset(512, 4, seed=1)
     ds = pim.put(X, y)
-    make_estimator("linreg", version="int32", n_iters=3, pim=pim).fit(ds)
+    make_estimator("linreg", version="int32", n_iters=3, system=pim).fit(ds)
     t1 = pim.stats.shard_transfers
     make_estimator("logreg", version="int32_lut_wram", n_iters=3,
-                   pim=pim).fit(ds)
+                   system=pim).fit(ds)
     assert pim.stats.shard_transfers == t1
 
 
@@ -152,15 +152,15 @@ def test_kmeans_restarts_share_one_transfer():
     X, _, _ = make_blobs(512, 4, centers=4, seed=0)
     ds = pim.put(X)
     make_estimator("kmeans", n_clusters=4, n_init=3, max_iter=10,
-                   pim=pim).fit(ds)
+                   system=pim).fit(ds)
     assert pim.stats.shard_transfers == 1
 
 
 def test_estimator_accepts_dataset_or_arrays():
     pim = _pim()
     X, y, _ = make_linear_dataset(256, 4, seed=3)
-    e1 = make_estimator("linreg", n_iters=10, pim=pim).fit(X, y)
-    e2 = make_estimator("linreg", n_iters=10, pim=pim).fit(pim.put(X, y))
+    e1 = make_estimator("linreg", n_iters=10, system=pim).fit(X, y)
+    e2 = make_estimator("linreg", n_iters=10, system=pim).fit(pim.put(X, y))
     np.testing.assert_array_equal(e1.coef_, e2.coef_)
 
 

@@ -255,6 +255,6 @@ def test_estimator_exposes_kernel_backend():
     X, _ = _toy()
     est = make_estimator("kmeans", n_clusters=3, max_iter=4,
                          kernel_backend="jnp_ref",
-                         pim=PimSystem(PimConfig(n_cores=2)))
+                         system=PimSystem(PimConfig(n_cores=2)))
     est.fit(X)
     assert est.get_params()["kernel_backend"] == "jnp_ref"

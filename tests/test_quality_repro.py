@@ -21,9 +21,9 @@ from repro.core import dtree, kmeans, linreg, logreg
 pytestmark = pytest.mark.slow
 from repro.core.metrics import (accuracy, adjusted_rand_index,
                                 calinski_harabasz, training_error_rate)
-from repro.core.pim import PimConfig, PimSystem
 from repro.data.synthetic import (make_blobs, make_classification,
                                   make_linear_dataset)
+from repro.systems import PimConfig, PimSystem, make_system
 
 N_ITERS = 600
 
@@ -39,16 +39,25 @@ def pim():
     return PimSystem(PimConfig(n_cores=16))
 
 
+@pytest.fixture(scope="module")
+def host():
+    """The processor-centric CPU baseline: the same workloads on a
+    HostSystem (fp32, exact transcendentals) — DESIGN.md §10.3."""
+    return make_system("host")
+
+
 class TestLinQuality:
     @pytest.fixture(scope="class")
-    def errors(self, linlog_data, pim):
+    def errors(self, linlog_data, pim, host):
         X, y, _ = linlog_data
         out = {}
-        cpu = linreg.train_cpu_baseline(X, y, n_iters=N_ITERS)
+        cpu = linreg.fit(host.put(X, y),
+                         linreg.GdConfig(version="fp32", n_iters=N_ITERS))
         out["cpu"] = training_error_rate(cpu.predict(X), y)
+        ds = pim.put(X, y)
         for ver in linreg.VERSIONS:
-            r = linreg.train(X, y, pim,
-                             linreg.GdConfig(version=ver, n_iters=N_ITERS))
+            r = linreg.fit(ds,
+                           linreg.GdConfig(version=ver, n_iters=N_ITERS))
             out[ver] = training_error_rate(r.predict(X), y)
         return out
 
@@ -72,15 +81,19 @@ class TestLinQuality:
 
 class TestLogQuality:
     @pytest.fixture(scope="class")
-    def errors(self, linlog_data, pim):
+    def errors(self, linlog_data, pim, host):
         X, y, _ = linlog_data
         out = {}
-        cpu = logreg.train_cpu_baseline(X, y, n_iters=N_ITERS)
+        # fp32 on the host target selects the exact sigmoid (the
+        # paper's MKL baseline), not the DPU Taylor expansion
+        cpu = logreg.fit(
+            host.put(X, y),
+            logreg.LogRegConfig(version="fp32", n_iters=N_ITERS))
         out["cpu"] = training_error_rate(cpu.predict(X), y, threshold=0.0)
+        ds = pim.put(X, y)
         for ver in logreg.VERSIONS:
-            r = logreg.train(
-                X, y, pim,
-                logreg.LogRegConfig(version=ver, n_iters=N_ITERS))
+            r = logreg.fit(
+                ds, logreg.LogRegConfig(version=ver, n_iters=N_ITERS))
             out[ver] = training_error_rate(r.predict(X), y, threshold=0.0)
         return out
 
@@ -110,23 +123,23 @@ class TestLogDecimalsEffect:
         errs = {}
         for dec in (4, 2):
             X, y, _ = make_linear_dataset(4096, 16, decimals=dec, seed=7)
-            r = logreg.train(
-                X, y, pim,
+            r = logreg.fit(
+                pim.put(X, y),
                 logreg.LogRegConfig(version="hyb_lut", n_iters=400))
             errs[dec] = training_error_rate(r.predict(X), y, threshold=0.0)
         assert errs[2] <= errs[4] + 0.3
 
 
 class TestDtrQuality:
-    def test_pim_matches_cpu_accuracy(self, pim):
+    def test_pim_matches_cpu_accuracy(self, pim, host):
         """Paper §5.1.3: 0.90008 (PIM) vs 0.90175 (CPU) at depth 10."""
         X, y = make_classification(60_000, 16, seed=0, class_sep=1.4)
         accs = []
         for seed in (0, 1):
-            t_pim = dtree.train(X, y, pim,
-                                dtree.TreeConfig(max_depth=10, seed=seed))
-            t_cpu = dtree.train_cpu_baseline(
-                X, y, dtree.TreeConfig(max_depth=10, seed=seed))
+            t_pim = dtree.fit(pim.put(X, y),
+                              dtree.TreeConfig(max_depth=10, seed=seed))
+            t_cpu = dtree.fit(host.put(X, y),
+                              dtree.TreeConfig(max_depth=10, seed=seed))
             accs.append((accuracy(t_pim.predict(X), y),
                          accuracy(t_cpu.predict(X), y)))
         pim_acc = np.mean([a for a, _ in accs])
@@ -136,17 +149,19 @@ class TestDtrQuality:
 
     def test_depth_limit_respected(self, pim):
         X, y = make_classification(10_000, 16, seed=2)
-        t = dtree.train(X, y, pim, dtree.TreeConfig(max_depth=4, seed=0))
+        t = dtree.fit(pim.put(X, y), dtree.TreeConfig(max_depth=4, seed=0))
         assert int(t.depth[: t.n_nodes].max()) <= 4
 
 
 class TestKmeQuality:
-    def test_pim_cpu_clusterings_nearly_identical(self, pim):
+    def test_pim_cpu_clusterings_nearly_identical(self, pim, host):
         """Paper §5.1.4: ARI ~= 0.999, equal CH scores despite quantization."""
         X, _, _ = make_blobs(20_000, 16, centers=16, seed=0)
         cfg = kmeans.KMeansConfig(k=16, seed=3, n_init=2)
-        r_pim = kmeans.train(X, pim, cfg)
-        r_cpu = kmeans.train_cpu_baseline(X, cfg)
+        r_pim = kmeans.fit(pim.put(X), cfg)
+        r_cpu = kmeans.fit(host.put(X),
+                           kmeans.KMeansConfig(k=16, seed=3, n_init=2,
+                                               version="fp32"))
         ari = adjusted_rand_index(r_pim.labels, r_cpu.labels)
         assert ari > 0.95
         ch_pim = calinski_harabasz(X, r_pim.labels)
@@ -155,5 +170,5 @@ class TestKmeQuality:
 
     def test_converges_under_max_iters(self, pim):
         X, _, _ = make_blobs(8_000, 16, centers=16, seed=1)
-        r = kmeans.train(X, pim, kmeans.KMeansConfig(k=16, seed=0))
+        r = kmeans.fit(pim.put(X), kmeans.KMeansConfig(k=16, seed=0))
         assert r.n_iters < 300  # paper: always < 40 in practice

@@ -133,9 +133,9 @@ def test_disjoint_slices_bit_identical_to_whole_mesh():
 
     ref = PimSystem(PimConfig(n_cores=16))
     ref_lin = make_estimator("linreg", version="int32", n_iters=15,
-                             pim=ref).fit(ref.put(X, y))
+                             system=ref).fit(ref.put(X, y))
     ref_kme = make_estimator("kmeans", n_clusters=4, max_iter=8,
-                             pim=ref).fit(Xb)
+                             system=ref).fit(Xb)
     # integer GD / integer Lloyd's are partition-invariant: the sliced
     # fits must equal the whole-mesh fits bit for bit
     assert np.array_equal(h_lin.result.attributes["coef_"], ref_lin.coef_)

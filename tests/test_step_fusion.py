@@ -246,16 +246,32 @@ def test_host_reduce_degrades_to_per_step(lin_data):
     assert dk.host_syncs == d1.host_syncs == k
 
 
-def test_minibatch_falls_back_to_per_step(lin_data):
-    """SGD draws host randomness per step: fuse_steps is ignored and
-    the trajectory equals the unfused SGD loop exactly."""
+def test_minibatch_fuses_with_offset_scan_xs(lin_data):
+    """Minibatch SGD no longer falls back (DESIGN.md §9.5): each chunk's
+    batch offsets are pre-drawn from the serial loop's rng stream and
+    fed through the scan as xs — bit-identical trajectory, and the
+    launch count collapses to one per chunk."""
     X, y = lin_data
     r1, p1 = _lin_pair(X, y, "int32", fuse=1, n_iters=10, minibatch=8,
                        seed=7)
     rk, pk = _lin_pair(X, y, "int32", fuse=8, n_iters=10, minibatch=8,
                        seed=7)
     assert np.array_equal(r1.w, rk.w) and r1.b == rk.b
-    assert pk.stats.kernel_launches == p1.stats.kernel_launches
+    # 10 iterations at fuse_steps=8 -> chunks of 8 + 2: TWO launches
+    # (and syncs) where the serial SGD loop pays ten of each
+    assert p1.stats.kernel_launches == 10 and p1.stats.host_syncs == 10
+    assert pk.stats.kernel_launches == 2 and pk.stats.host_syncs == 2
+
+
+@pytest.mark.parametrize("ver", ("int32", "hyb"))
+def test_minibatch_fused_bit_identical_versions(lin_data, ver):
+    """Fused minibatch SGD == serial minibatch SGD, bit for bit, with a
+    non-dividing tail chunk and record_every landing mid-stream."""
+    X, y = lin_data
+    kw = dict(n_iters=21, minibatch=8, seed=3, record_every=10)
+    r1, _ = _lin_pair(X, y, ver, fuse=1, **kw)
+    rk, _ = _lin_pair(X, y, ver, fuse=8, **kw)
+    assert np.array_equal(r1.w, rk.w) and r1.b == rk.b
 
 
 # ---------------------------------------------------------------------------

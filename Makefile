@@ -1,11 +1,12 @@
 # Developer entry points.  `make check` is the fast gate (~1 min);
 # `make test` is the full tier-1 suite; `make bench` prints the paper
 # figure reproductions as CSV; `make jobs` runs the scheduler demo;
+# `make elastic-demo` walks preempt/migrate/fault/crash-resume;
 # `make compare` runs the Fig. 13-17 PIM/host/gpu-model comparison on
 # tiny shapes and records benchmarks/out/compare.json.
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check test bench bench-fusion compare quickstart jobs
+.PHONY: check test bench bench-fusion compare quickstart jobs elastic-demo
 
 check:
 	./scripts/ci.sh
@@ -27,3 +28,6 @@ quickstart:
 
 jobs:
 	PYTHONPATH=$(PYTHONPATH) python -m repro.launch.pim_jobs --demo
+
+elastic-demo:
+	PYTHONPATH=$(PYTHONPATH) python examples/elastic_jobs.py

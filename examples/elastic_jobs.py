@@ -1,0 +1,142 @@
+"""Elastic job runtime walkthrough (DESIGN.md §11).
+
+One script, five acts on a small PIM machine:
+
+  1. preempt a running fit at a chunk boundary and resume it on a
+     FRESH scheduler — bit-identical to never stopping;
+  2. priority eviction: a high-priority submit evicts a low-priority
+     tenant, which requeues from its snapshot and still finishes;
+  3. cross-System migration: an fp32 fit checkpointed on PIM finishes
+     on the host baseline (integer fits are refused — the quantization
+     contract differs);
+  4. survive an injected fault via supervised retry;
+  5. kill a checkpointed manifest run mid-queue and --resume it.
+
+Run:  PYTHONPATH=src python examples/elastic_jobs.py
+"""
+import os
+import tempfile
+
+import numpy as np
+
+from repro.elastic import FaultInjector
+from repro.sched import JobState, PimScheduler, run_manifest
+from repro.systems import (HostConfig, HostSystem, PimConfig, PimSystem)
+
+rng = np.random.RandomState(0)
+X = rng.randn(512, 16).astype(np.float32)
+y = (X @ rng.randn(16) + 0.1 * rng.randn(512)).astype(np.float32)
+
+
+def pim(cores=16):
+    return PimScheduler(PimSystem(PimConfig(n_cores=cores)), rank_size=4)
+
+
+# -- 1. preempt / resume, bit-identical -----------------------------------
+print("== 1. preempt at a chunk boundary, resume elsewhere ==")
+sched = pim()
+job = sched.submit("linreg", (X, y), version="int32", n_iters=200,
+                   fuse_steps=16)
+for _ in range(5):
+    sched.step()
+job.preempt()
+sched.step()
+print(f"   parked: {job.state.value} at iteration {job.iters}, "
+      f"snapshot kind {job.snapshot_kind!r}")
+
+fresh = pim()                       # a brand new scheduler + System
+fresh.resume(job, data=(X, y))
+fresh.drain()
+
+ref_sched = pim()
+ref = ref_sched.submit("linreg", (X, y), version="int32", n_iters=200,
+                       fuse_steps=16)
+ref_sched.drain()
+same = np.array_equal(np.asarray(job.result.model.w),
+                      np.asarray(ref.result.model.w))
+print(f"   resumed -> {job.state.value} at {job.iters} iters; "
+      f"bit-identical to uninterrupted: {same}")
+
+# -- 2. priority eviction --------------------------------------------------
+print("== 2. priority eviction (preemptive=True) ==")
+sched = PimScheduler(PimSystem(PimConfig(n_cores=8)), rank_size=4,
+                     preemptive=True)
+tenants = [sched.submit("linreg", (X, y), version="int32", n_iters=120,
+                        name=f"tenant{i}") for i in range(2)]
+sched.step()                                   # machine is now full
+urgent = sched.submit("linreg", (X, y), version="int32", n_iters=40,
+                      priority=10, name="urgent")
+sched.step()
+evicted = next(t for t in tenants if t.preemptions)
+print(f"   urgent: {urgent.state.value}; evicted {evicted.name} "
+      f"(requeued from its snapshot)")
+sched.drain()
+print(f"   all done: {[t.state.value for t in tenants + [urgent]]}")
+
+# -- 3. cross-System migration --------------------------------------------
+print("== 3. fp32 PIM -> host migration ==")
+mixed = PimScheduler({"pim": PimSystem(PimConfig(n_cores=8)),
+                      "host": HostSystem(HostConfig(n_cores=4))},
+                     rank_size=4)
+mig = mixed.submit("linreg", (X, y), version="fp32", n_iters=100,
+                   fuse_steps=8, target="pim")
+mixed.step(); mixed.step()
+mig.preempt(); mixed.step()
+mixed.resume(mig, target="host")               # fp32: allowed
+mixed.drain()
+print(f"   finished on {mig.target!r}: {mig.state.value}")
+
+intjob = mixed.submit("linreg", (X, y), version="int32", n_iters=20,
+                      target="pim")
+mixed.step(); intjob.preempt(); mixed.step()
+try:
+    mixed.resume(intjob, target="host")
+except ValueError as err:
+    print(f"   int32 migration refused: {str(err)[:64]}...")
+mixed.resume(intjob, target="pim")
+mixed.drain()
+
+# -- 4. injected fault, supervised retry ----------------------------------
+print("== 4. fault injection + retry budget ==")
+injector = FaultInjector.parse("flaky:4")      # die at scheduling step 4
+sched = PimScheduler(PimSystem(PimConfig(n_cores=8)), rank_size=4,
+                     fault_injector=injector)
+flaky = sched.submit("linreg", (X, y), version="int32", n_iters=100,
+                     fuse_steps=8, retry_budget=2, name="flaky")
+sched.drain()
+print(f"   {flaky.state.value} after {flaky.recoveries} recovery "
+      f"(last fault on record: {type(flaky.error).__name__})")
+
+# -- 5. crash-survivable manifest queue -----------------------------------
+print("== 5. kill a manifest run, then --resume ==")
+manifest = {
+    "system": {"cores": 16, "rank_size": 4},
+    "datasets": {"lin": {"kind": "linear", "samples": 512,
+                         "features": 16, "seed": 0}},
+    "jobs": [
+        {"workload": "linreg", "dataset": "lin", "cores": 4,
+         "name": "quick", "version": "int32",
+         "params": {"n_iters": 8, "fuse_steps": 2}},
+        {"workload": "linreg", "dataset": "lin", "cores": 4,
+         "name": "long", "version": "int32",
+         "params": {"n_iters": 200, "fuse_steps": 2}},
+    ],
+}
+ckpt = tempfile.mkdtemp(prefix="elastic_demo_")
+crashed, handles = run_manifest(manifest, drain=False,
+                                checkpoint_dir=ckpt)
+for _ in range(8):
+    crashed.step()
+print(f"   'crash' with "
+      f"{ {h.name: h.state.value for h in handles} }; "
+      f"queue record: {os.path.join(ckpt, 'queue.json')}")
+del crashed
+
+sched2, handles2 = run_manifest(manifest, checkpoint_dir=ckpt,
+                                resume=True)
+for h in handles2:
+    extra = " (restored, not re-run)" if h.restored else \
+        f" (resumed, {h.iters} iters total)"
+    print(f"   {h.name}: {h.state.value}{extra}")
+assert all(h.state is JobState.DONE for h in handles2)
+print("done.")

@@ -3,7 +3,9 @@
 # execution model, numerics, metrics — plus the kernel tier's dispatch
 # parity (interpret-mode Pallas vs jnp-ref), the small-shape kernel
 # cases, the job-scheduler core (allocator/slices/queue/failure
-# isolation), the step-fusion engine (fused-vs-serial bit parity, the
+# isolation), the elastic runtime (preempt/resume bit-identity,
+# migration matrix, fault injection, crash-resume; sustained churn is
+# @slow), the step-fusion engine (fused-vs-serial bit parity, the
 # one-launch-per-chunk assertion), the backend-portable System protocol
 # (PIM/host/modeled-GPU parity, mixed-target scheduling), and the
 # legacy deprecation surface; large-shape kernel cases, large-K queues,
@@ -20,6 +22,7 @@ exec python -m pytest -q -m "not slow" \
     tests/test_collectives.py \
     tests/test_deprecation.py \
     tests/test_dispatch.py \
+    tests/test_elastic.py \
     tests/test_estimators.py \
     tests/test_fixed_point.py \
     tests/test_kernels.py \

@@ -76,6 +76,12 @@ class Workload:
     defaults: Mapping[str, Any] = {}
     #: True when fit consumes (X,) only — no targets (K-Means)
     unsupervised: bool = False
+    #: True when ``fit_steps`` accepts ``state=`` and yields
+    #: :class:`~repro.systems.base.ChunkTick` snapshots — the elastic
+    #: runtime can preempt/checkpoint/migrate the job (DESIGN.md §11).
+    #: Non-resumable workloads (DTR builds a tree host-side in one
+    #: macro-step) lose progress on preemption and restart from scratch.
+    resumable: bool = False
 
     def spec(self, version: Optional[str] = None, **params) -> TrainerSpec:
         version = version or self.versions[0]
@@ -95,14 +101,23 @@ class Workload:
     def fit(self, dataset: PimDataset, spec: TrainerSpec) -> FitResult:
         raise NotImplementedError
 
-    def fit_steps(self, dataset: PimDataset, spec: TrainerSpec):
+    def fit_steps(self, dataset: PimDataset, spec: TrainerSpec, *,
+                  state: Optional[dict] = None):
         """Generator: advance the fit by one host-orchestrated PIM step
         per ``next()``; the FitResult travels on StopIteration.
 
         This is the surface the job scheduler gang-steps (DESIGN.md
         §7.3).  The default runs :meth:`fit` as a single macro-step, so
         every workload is schedulable; iterative workloads override it
-        with their trainer's true per-iteration generator."""
+        with their trainer's true per-iteration generator.
+
+        ``state`` is a chunk-boundary snapshot from a previous run's
+        ``ChunkTick.snapshot()`` — only :attr:`resumable` workloads
+        accept one (DESIGN.md §11.2)."""
+        if state is not None:
+            raise ValueError(
+                f"workload {self.name!r} is not resumable; it cannot "
+                f"accept a checkpoint state")
         result = self.fit(dataset, spec)
         yield 1
         return result

@@ -50,6 +50,7 @@ class LinRegWorkload(Workload):
     name = "linreg"
     aliases = ("lin", "linear_regression")
     versions = linreg.VERSIONS
+    resumable = True
     defaults = {"n_iters": 500, "lr": 0.1, "frac_bits": 10, "x8_frac": 7,
                 "w16_frac": 8, "record_every": 0, "minibatch": 0, "seed": 0,
                 "kernel_backend": None, "fuse_steps": 1}
@@ -61,8 +62,9 @@ class LinRegWorkload(Workload):
         r = linreg.fit(dataset, self._config(spec))
         return FitResult(spec, r, {"coef_": r.w, "intercept_": r.b})
 
-    def fit_steps(self, dataset, spec: TrainerSpec):
-        r = yield from linreg.fit_steps(dataset, self._config(spec))
+    def fit_steps(self, dataset, spec: TrainerSpec, *, state=None):
+        r = yield from linreg.fit_steps(dataset, self._config(spec),
+                                        state=state)
         return FitResult(spec, r, {"coef_": r.w, "intercept_": r.b})
 
     def predict(self, result: FitResult, X):
@@ -83,6 +85,7 @@ class LogRegWorkload(Workload):
     name = "logreg"
     aliases = ("log", "logistic_regression")
     versions = logreg.VERSIONS
+    resumable = True
     defaults = {"n_iters": 500, "lr": 5.0, "frac_bits": 10, "x8_frac": 7,
                 "w16_frac": 8, "record_every": 0, "minibatch": 0, "seed": 0,
                 "taylor_terms": 8, "lut_boundary": 20, "lut_frac_bits": 10,
@@ -95,8 +98,9 @@ class LogRegWorkload(Workload):
         r = logreg.fit(dataset, self._config(spec))
         return FitResult(spec, r, {"coef_": r.w, "intercept_": r.b})
 
-    def fit_steps(self, dataset, spec: TrainerSpec):
-        r = yield from logreg.fit_steps(dataset, self._config(spec))
+    def fit_steps(self, dataset, spec: TrainerSpec, *, state=None):
+        r = yield from logreg.fit_steps(dataset, self._config(spec),
+                                        state=state)
         return FitResult(spec, r, {"coef_": r.w, "intercept_": r.b})
 
     def decision_function(self, result: FitResult, X):
@@ -132,7 +136,13 @@ class DecisionTreeWorkload(Workload):
         return FitResult(spec, tree,
                          {"tree_": tree, "n_nodes_": tree.n_nodes})
 
-    def fit_steps(self, dataset, spec: TrainerSpec):
+    def fit_steps(self, dataset, spec: TrainerSpec, *, state=None):
+        # DTR is not resumable: the tree builds host-side in one macro
+        # pass; a preempted tree job restarts from scratch (state must
+        # be None — enforced here as in the Workload base).
+        if state is not None:
+            raise ValueError("dtree is not resumable; it cannot accept "
+                             "a checkpoint state")
         tree = yield from dtree.fit_steps(dataset, self._config(spec))
         return FitResult(spec, tree,
                          {"tree_": tree, "n_nodes_": tree.n_nodes})
@@ -153,6 +163,7 @@ class KMeansWorkload(Workload):
     #: processor-centric float baseline (DESIGN.md §10.3)
     versions = kmeans.VERSIONS
     unsupervised = True
+    resumable = True
     defaults = {"n_clusters": 16, "max_iter": 300, "tol": 1e-4,
                 "n_init": 1, "seed": 0, "kernel_backend": None,
                 "fuse_steps": 1}
@@ -173,8 +184,9 @@ class KMeansWorkload(Workload):
                                    "labels_": r.labels,
                                    "n_iter_": r.n_iters})
 
-    def fit_steps(self, dataset, spec: TrainerSpec):
-        r = yield from kmeans.fit_steps(dataset, self._config(spec))
+    def fit_steps(self, dataset, spec: TrainerSpec, *, state=None):
+        r = yield from kmeans.fit_steps(dataset, self._config(spec),
+                                        state=state)
         return FitResult(spec, r, {"cluster_centers_": r.centroids,
                                    "inertia_": r.inertia,
                                    "labels_": r.labels,

@@ -27,8 +27,9 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
+from ..elastic.state import pack_rng, unpack_rng
 from ..kernels import dispatch
-from ..systems import System, chunk_schedule, run_steps
+from ..systems import ChunkTick, System, chunk_schedule, run_steps
 from .metrics import frobenius_shift
 
 # 12-bit symmetric range stored in int16 (see docstring).  The quantizing
@@ -183,12 +184,19 @@ def _make_lloyd_step_fns(cfg: KMeansConfig):
 
 
 def fit_steps(dataset, cfg: Optional[KMeansConfig] = None,
-              return_labels: bool = True):
+              return_labels: bool = True, *,
+              state: Optional[dict] = None):
     """Generator form of Lloyd's: one assign/update scheduling step per
     ``next()`` (across all ``n_init`` restarts), KMeansResult on
     StopIteration — the gang-stepping surface; :func:`fit` drains it.
-    Each ``next()`` yields the number of Lloyd's iterations it covered
-    (1, or a whole ``cfg.fuse_steps`` scan chunk — DESIGN.md §9).
+    Each ``next()`` yields a :class:`~repro.systems.base.ChunkTick`:
+    the number of Lloyd's iterations it covered (1, or a whole
+    ``cfg.fuse_steps`` scan chunk — DESIGN.md §9) with a lazy snapshot
+    of the restart state (centroids, done-latch, restart index, rng
+    stream, best-so-far).  Pass a snapshot back as ``state`` to resume
+    mid-restart bit-exactly: the rng restores to the same stream
+    position, so later restarts draw the same init points an
+    uninterrupted fit would (DESIGN.md §11.2).
     The end-of-restart inertia/labels passes don't get their own step;
     they run at the head of the ``next()`` that follows convergence."""
     cfg = cfg or KMeansConfig()
@@ -232,24 +240,90 @@ def fit_steps(dataset, cfg: Optional[KMeansConfig] = None,
             name=f"kme.step/{vtag}k{cfg.k}/{tag}/tol{cfg.tol}/n{n}")
 
     best: Optional[KMeansResult] = None
-    for init in range(cfg.n_init):
-        # host picks random points as initial centroids (paper: random init)
-        idx = rng.choice(n, size=cfg.k, replace=False)
-        C = Xq_np[idx].astype(np.float32)               # quantized units
-        n_it = 0
+    init0 = 0
+    it_total = 0        # iterations yielded across all restarts
+    resume: Optional[dict] = None
+    if state is not None:
+        arrays, meta = state["arrays"], state["meta"]
+        init0 = int(meta["init"])
+        it_total = int(meta["iters"])
+        resume = {"C": np.asarray(arrays["C"], np.float32),
+                  "done": bool(meta["done"]),
+                  "n_it": int(meta["n_it"]),
+                  "it_sched": int(meta["it_sched"])}
+        if meta.get("has_best"):
+            best = KMeansResult(
+                centroids=np.asarray(arrays["best_centroids"],
+                                     np.float32),
+                inertia=float(meta["best_inertia"]),
+                n_iters=int(meta["best_n_iters"]),
+                labels=(np.asarray(arrays["best_labels"])
+                        if "best_labels" in arrays else None))
+        restored = unpack_rng(arrays, meta)
+        if restored is not None:
+            rng = restored
+
+    carry = None        # device-resident fused chunk state (lazy pull)
+    init = init0
+    C = None
+    done = False
+    n_it = 0
+    it_sched = 0        # chunk-scheduled iterations (fused resume key)
+
+    def _snapshot():
+        if carry is not None:   # fused: pull the device carry on demand
+            C_v = np.asarray(carry[0], np.float32)
+            done_v, n_it_v = bool(carry[1]), int(carry[2])
+        else:
+            C_v, done_v, n_it_v = np.asarray(C, np.float32), done, n_it
+        arrays = {"C": C_v}
+        meta = {"iters": int(it_total), "init": int(init),
+                "done": bool(done_v), "n_it": int(n_it_v),
+                "it_sched": int(it_sched), "has_best": best is not None}
+        if best is not None:
+            arrays["best_centroids"] = np.asarray(best.centroids,
+                                                  np.float32)
+            meta["best_inertia"] = float(best.inertia)
+            meta["best_n_iters"] = int(best.n_iters)
+            if best.labels is not None:
+                arrays["best_labels"] = np.asarray(best.labels)
+        ra, rm = pack_rng(rng)
+        arrays.update(ra)
+        meta.update(rm)
+        return {"arrays": arrays, "meta": meta}
+
+    for init in range(init0, cfg.n_init):
+        if resume is not None:
+            # re-enter the preempted restart: NO new init draw — the
+            # rng stream was saved post-draw, so later restarts stay
+            # aligned with an uninterrupted fit
+            C, done = resume["C"], resume["done"]
+            n_it, it_sched = resume["n_it"], resume["it_sched"]
+            resume = None
+        else:
+            # host picks random points as initial centroids (paper:
+            # random init)
+            idx = rng.choice(n, size=cfg.k, replace=False)
+            C = Xq_np[idx].astype(np.float32)           # quantized units
+            done = False
+            n_it = 0
+            it_sched = 0
         if program is not None:
-            carry = (jnp.asarray(C), jnp.asarray(False),
-                     jnp.asarray(0, jnp.int32))
-            for k in chunk_schedule(cfg.max_iters, cfg.fuse_steps, 0):
-                carry, _ = program.run(carry, (Xs, valid), k)
-                yield k
-                if bool(carry[1]):        # converged inside this chunk
+            carry = (jnp.asarray(C), jnp.asarray(bool(done)),
+                     jnp.asarray(n_it, jnp.int32))
+            for k in chunk_schedule(cfg.max_iters, cfg.fuse_steps, 0,
+                                    start=it_sched):
+                if bool(carry[1]):    # converged in an earlier chunk
                     break
+                carry, _ = program.run(carry, (Xs, valid), k)
+                it_sched += k
+                it_total += k
+                yield ChunkTick(k, _snapshot)
             C = np.asarray(carry[0], np.float32)
             n_it = int(carry[2])
+            carry = None
         else:
-            for it in range(cfg.max_iters):
-                n_it = it + 1
+            while not done and n_it < cfg.max_iters:
                 Cq = pim.broadcast((_cast_centroids(C),))[0]
                 part = pim.map_reduce(assign_k, (Xs, valid), (Cq,))
                 sums = np.asarray(part["sums"], np.float64)
@@ -258,9 +332,11 @@ def fit_steps(dataset, cfg: Optional[KMeansConfig] = None,
                                 sums / np.maximum(counts[:, None], 1), C)
                 shift = frobenius_shift(C, newC)
                 C = newC.astype(np.float32)
-                yield 1
-                if shift < cfg.tol:
-                    break
+                n_it += 1
+                it_sched = n_it
+                done = shift < cfg.tol
+                it_total += 1
+                yield ChunkTick(1, _snapshot)
         part = pim.map_reduce(
             inertia_k, (Xs, valid), (_cast_centroids(C),))
         # inertia needs + ||x||^2 which the kernel includes; convert units

@@ -24,8 +24,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..elastic.state import pack_rng, unpack_rng
 from ..kernels import dispatch
-from ..systems import System, chunk_schedule, run_steps
+from ..systems import ChunkTick, System, chunk_schedule, run_steps
 from .fixed_point import (_shift_round, fx_dot_hybrid, from_fixed,
                           mul_round_f32, to_fixed)
 
@@ -219,16 +220,21 @@ def _grad_kernel(pim: System, cfg: GdConfig):
 
 def fit_steps(dataset, cfg: Optional[GdConfig] = None,
               eval_fn: Optional[Callable] = None,
-              _local_override: Optional[Callable] = None):
+              _local_override: Optional[Callable] = None, *,
+              state: Optional[dict] = None):
     """Generator form of the training loop; the GdResult travels on
     StopIteration.  This is the gang-stepping surface the job scheduler
     interleaves (DESIGN.md §7.3); :func:`fit` drains it.
 
-    Each ``next()`` advances one *scheduling step* and yields the number
-    of GD iterations it covered: 1 for the host-orchestrated per-step
-    loop, up to ``cfg.fuse_steps`` when a fused
-    :class:`~repro.core.pim.StepProgram` chunk drains one ``lax.scan``
-    launch (DESIGN.md §9)."""
+    Each ``next()`` advances one *scheduling step* and yields a
+    :class:`~repro.systems.base.ChunkTick` — the number of GD iterations
+    it covered (1 per host-orchestrated step, up to ``cfg.fuse_steps``
+    per fused :class:`~repro.core.pim.StepProgram` chunk — DESIGN.md
+    §9) carrying a lazy chunk-boundary snapshot of the carry.  Passing
+    such a snapshot back as ``state`` resumes the fit exactly where it
+    was preempted: the carry, the history, and the full minibatch rng
+    stream restore, so a resumed integer fit is bit-identical to an
+    uninterrupted one (DESIGN.md §11.2)."""
     cfg = cfg or GdConfig()
     assert cfg.version in VERSIONS, cfg.version
     pim = dataset.system
@@ -251,12 +257,34 @@ def fit_steps(dataset, cfg: Optional[GdConfig] = None,
     b = jnp.float32(0.0)
     s = jnp.float32(cfg.lr * (2.0 / n_eff))
     history = []
+    rng = np.random.RandomState(cfg.seed)
+    it_done = 0
+    if state is not None:
+        arrays, meta = state["arrays"], state["meta"]
+        w = jnp.asarray(arrays["w"], jnp.float32)
+        b = jnp.asarray(arrays["b"], jnp.float32)
+        s = jnp.asarray(arrays["s"], jnp.float32)
+        it_done = int(meta["iters"])
+        history = [tuple(h) for h in meta.get("history", [])]
+        rng = unpack_rng(arrays, meta) or rng
 
     def record(it):
         if cfg.record_every and (it % cfg.record_every == 0
                                  or it == cfg.n_iters):
             metric = eval_fn(np.asarray(w), float(b)) if eval_fn else None
             history.append((it, metric))
+
+    def _snapshot():
+        arrays = {"w": np.asarray(w, np.float32),
+                  "b": np.asarray(b, np.float32),
+                  "s": np.asarray(s, np.float32)}
+        meta = {"iters": int(it_done),
+                "history": [[int(i), None if m is None else float(m)]
+                            for i, m in history]}
+        ra, rm = pack_rng(rng)
+        arrays.update(ra)
+        meta.update(rm)
+        return {"arrays": arrays, "meta": meta}
 
     if cfg.fuse_steps > 1:
         select = None
@@ -278,10 +306,10 @@ def fit_steps(dataset, cfg: Optional[GdConfig] = None,
                   f"/lr{cfg.lr}/n{n_eff}"
                   + (f"/mb{cfg.minibatch}" if minibatch else "")),
             select=select)
-        rng = np.random.RandomState(cfg.seed)
-        it = 0
+        # resume replays identical chunk boundaries: chunk_schedule is a
+        # deterministic function of the iteration index (DESIGN.md §11.2)
         for k in chunk_schedule(cfg.n_iters, cfg.fuse_steps,
-                                cfg.record_every):
+                                cfg.record_every, start=it_done):
             xs = None
             if minibatch:
                 xs = jnp.asarray(
@@ -289,12 +317,11 @@ def fit_steps(dataset, cfg: Optional[GdConfig] = None,
                      for _ in range(k)], jnp.int32)
             (w, b, s), _ = program.run((w, b, s), (Xs, ys, mask), k,
                                        xs=xs)
-            it += k
-            record(it)
-            yield k
+            it_done += k
+            record(it_done)
+            yield ChunkTick(k, _snapshot)
     else:
-        rng = np.random.RandomState(cfg.seed)
-        for it in range(cfg.n_iters):
+        for it in range(it_done, cfg.n_iters):
             wq, bq = pim.broadcast(prepare((w, b, s)))
             if minibatch:
                 # SGD: every core samples the same per-core slice offset
@@ -306,8 +333,9 @@ def fit_steps(dataset, cfg: Optional[GdConfig] = None,
                 args = (Xs, ys, mask)
             partial = pim.map_reduce(local, args, (wq, bq))
             (w, b, s), _ = update((w, b, s), partial)
-            record(it + 1)
-            yield 1
+            it_done = it + 1
+            record(it_done)
+            yield ChunkTick(1, _snapshot)
     return GdResult(w=np.asarray(w, np.float32), b=float(b),
                     history=history, n_iters=cfg.n_iters)
 

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import dispatch
-from ..systems import System, chunk_schedule, run_steps
+from ..systems import ChunkTick, System, chunk_schedule, run_steps
 from .fixed_point import _shift_round, fx_dot_hybrid
 from .linreg import GdConfig, GdResult, make_gd_step_fns
 from .lut import SigmoidLut, build_sigmoid_lut, taylor_sigmoid_fixed
@@ -183,12 +183,16 @@ def _grad_kernel(pim: System, cfg: LogRegConfig) -> str:
 
 
 def fit_steps(dataset, cfg: Optional[LogRegConfig] = None,
-              eval_fn: Optional[Callable] = None):
+              eval_fn: Optional[Callable] = None, *,
+              state: Optional[dict] = None):
     """Generator form of the LOG loop (GdResult on StopIteration) — the
     gang-stepping surface; :func:`fit` drains it.  Each ``next()``
-    yields the number of GD iterations it advanced: 1 per host-
-    orchestrated step, up to ``cfg.fuse_steps`` per fused
-    :class:`~repro.core.pim.StepProgram` chunk (DESIGN.md §9)."""
+    yields a :class:`~repro.systems.base.ChunkTick`: the number of GD
+    iterations it advanced (1 per host-orchestrated step, up to
+    ``cfg.fuse_steps`` per fused :class:`~repro.core.pim.StepProgram`
+    chunk — DESIGN.md §9) with a lazy carry snapshot; pass a snapshot
+    back as ``state`` to resume bit-exactly at that chunk boundary
+    (DESIGN.md §11.2)."""
     cfg = cfg or LogRegConfig()
     assert cfg.version in VERSIONS, cfg.version
     pim = dataset.system
@@ -204,6 +208,14 @@ def fit_steps(dataset, cfg: Optional[LogRegConfig] = None,
     b = jnp.float32(0.0)
     s = jnp.float32(cfg.lr * (1.0 / n))
     history = []
+    it_done = 0
+    if state is not None:
+        arrays, meta = state["arrays"], state["meta"]
+        w = jnp.asarray(arrays["w"], jnp.float32)
+        b = jnp.asarray(arrays["b"], jnp.float32)
+        s = jnp.asarray(arrays["s"], jnp.float32)
+        it_done = int(meta["iters"])
+        history = [tuple(h) for h in meta.get("history", [])]
 
     def record(it):
         if cfg.record_every and (it % cfg.record_every == 0
@@ -211,25 +223,34 @@ def fit_steps(dataset, cfg: Optional[LogRegConfig] = None,
             metric = eval_fn(np.asarray(w), float(b)) if eval_fn else None
             history.append((it, metric))
 
+    def _snapshot():
+        return {"arrays": {"w": np.asarray(w, np.float32),
+                           "b": np.asarray(b, np.float32),
+                           "s": np.asarray(s, np.float32)},
+                "meta": {"iters": int(it_done),
+                         "history": [[int(i),
+                                      None if m is None else float(m)]
+                                     for i, m in history]}}
+
     if cfg.fuse_steps > 1:
         program = pim.step_program(
             local, prepare, update,
             name=(f"log.step/{grad_kernel_name(cfg, _exact_sigmoid(pim, cfg))}"
                   f"/lr{cfg.lr}/n{n}"))
-        it = 0
         for k in chunk_schedule(cfg.n_iters, cfg.fuse_steps,
-                                cfg.record_every):
+                                cfg.record_every, start=it_done):
             (w, b, s), _ = program.run((w, b, s), (Xs, ys, mask), k)
-            it += k
-            record(it)
-            yield k
+            it_done += k
+            record(it_done)
+            yield ChunkTick(k, _snapshot)
     else:
-        for it in range(cfg.n_iters):
+        for it in range(it_done, cfg.n_iters):
             wq, bq = pim.broadcast(prepare((w, b, s)))
             partial = pim.map_reduce(local, (Xs, ys, mask), (wq, bq))
             (w, b, s), _ = update((w, b, s), partial)
-            record(it + 1)
-            yield 1
+            it_done = it + 1
+            record(it_done)
+            yield ChunkTick(1, _snapshot)
     return GdResult(w=np.asarray(w, np.float32), b=float(b),
                     history=history, n_iters=cfg.n_iters)
 

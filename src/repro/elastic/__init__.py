@@ -1,0 +1,31 @@
+"""Elastic job runtime (DESIGN.md §11).
+
+The robustness layer over the scheduler/System stack: resumable
+trainers expose their chunk-boundary carry as lazy
+:class:`~repro.systems.base.ChunkTick` snapshots; this package gives
+those snapshots an on-disk life (atomic job checkpoints via
+train/checkpoint.py), an identity (config+dataset fingerprints), a
+migration policy (which System kinds a carry may resume on), and a
+failure source (deterministic fault injection) — the pieces
+``PimScheduler`` composes into preemption, priority eviction,
+defragmentation, cross-System migration, supervised retry, and
+crash-survivable job queues.
+"""
+from __future__ import annotations
+
+from .checkpoint import (has_checkpoint, job_dir, load_snapshot,
+                         save_snapshot)
+from .fault import (ENV_VAR, FaultInjector, InjectedFault,
+                    injector_from_env)
+from .fingerprint import (dataset_fingerprint, job_fingerprint,
+                          spec_fingerprint)
+from .state import (SCHEMA_VERSION, check_migration, migration_ok,
+                    pack_rng, snapshot_iters, unpack_rng)
+
+__all__ = [
+    "ENV_VAR", "FaultInjector", "InjectedFault", "SCHEMA_VERSION",
+    "check_migration", "dataset_fingerprint", "has_checkpoint",
+    "injector_from_env", "job_dir", "job_fingerprint", "load_snapshot",
+    "migration_ok", "pack_rng", "save_snapshot", "snapshot_iters",
+    "spec_fingerprint", "unpack_rng",
+]

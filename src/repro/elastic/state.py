@@ -1,0 +1,119 @@
+"""Serializable trainer state: the chunk-boundary snapshot schema.
+
+A *snapshot* is what a resumable trainer's ``fit_steps`` generator
+materializes at a chunk boundary (``ChunkTick.snapshot()`` —
+DESIGN.md §11.1): a two-part dict
+
+    {"arrays": {name: np.ndarray}, "meta": {json-able scalars}}
+
+``arrays`` holds the StepProgram carry (weights/bias/scale for GD,
+centroids + done-latch for K-Means) plus the packed rng stream;
+``meta`` holds iteration counters, history, convergence flags — every
+value JSON-serializable, so the whole snapshot round-trips through
+``train/checkpoint.py``'s npz + manifest format unchanged.
+
+This module owns the pieces the trainers and the scheduler both need:
+
+  * full-fidelity numpy rng serialization (:func:`pack_rng` /
+    :func:`unpack_rng`): the MT19937 key vector travels in ``arrays``,
+    the stream position in ``meta`` — resuming restores the *exact*
+    stream, so a resumed minibatch SGD or K-Means restart draws the
+    same samples an uninterrupted fit would (bit-identity, not
+    replay-by-count);
+  * the cross-System migration compatibility matrix
+    (:func:`migration_ok`): which execution targets a checkpoint taken
+    on one System kind may resume on (DESIGN.md §11.3).
+
+No imports from repro.core/api/sched — the trainers import *this*
+module, never the reverse.
+"""
+from __future__ import annotations
+
+from typing import Mapping, Optional
+
+import numpy as np
+
+#: snapshot schema version; bumped on incompatible layout changes and
+#: validated on restore.
+SCHEMA_VERSION = 1
+
+_RNG_KEY = "rng_mt_keys"          # uint32[624] in arrays
+_RNG_META = ("rng_pos", "rng_has_gauss", "rng_cached_gaussian")
+
+
+def pack_rng(rng: np.random.RandomState) -> tuple[dict, dict]:
+    """``(arrays, meta)`` fragments capturing the full MT19937 state.
+
+    Merged into a snapshot's two sections; :func:`unpack_rng` inverts.
+    Serializing the generator state itself (not a draw count) is what
+    makes resume exact for *any* consumption pattern — per-iteration
+    minibatch offsets, per-chunk pre-draws, per-restart init choices.
+    """
+    kind, keys, pos, has_gauss, cached = rng.get_state()
+    assert kind == "MT19937", kind
+    return ({_RNG_KEY: np.asarray(keys, np.uint32)},
+            {"rng_pos": int(pos), "rng_has_gauss": int(has_gauss),
+             "rng_cached_gaussian": float(cached)})
+
+
+def unpack_rng(arrays: Mapping, meta: Mapping
+               ) -> Optional[np.random.RandomState]:
+    """Rebuild the RandomState a snapshot packed; None if it holds no
+    rng (full-batch GD never draws, so its snapshots may omit it)."""
+    keys = arrays.get(_RNG_KEY)
+    if keys is None:
+        return None
+    rng = np.random.RandomState()
+    rng.set_state(("MT19937", np.asarray(keys, np.uint32),
+                   int(meta["rng_pos"]), int(meta["rng_has_gauss"]),
+                   float(meta["rng_cached_gaussian"])))
+    return rng
+
+
+# ---------------------------------------------------------------------------
+# Migration compatibility (DESIGN.md §11.3).
+# ---------------------------------------------------------------------------
+
+#: fp32 versions per workload: float carries migrate across System
+#: kinds (tolerance-tested — reduction order and transcendental flavor
+#: differ between PIM and a processor-centric target); every other
+#: version is fixed-point and resumes bit-exactly ONLY on a
+#: numerically-like target.
+_FLOAT_VERSIONS = ("fp32",)
+
+#: System kinds whose execution is numerically identical: the modeled
+#: GPU *is* HostSystem execution with a roofline price tag
+#: (systems/gpu_model.py), so checkpoints move freely between them.
+_LIKE_KINDS = {
+    "host": {"host", "gpu-model"},
+    "gpu-model": {"host", "gpu-model"},
+    "pim": {"pim"},
+}
+
+
+def migration_ok(from_kind: str, to_kind: str, version: str) -> bool:
+    """May a ``version`` checkpoint taken on ``from_kind`` resume on
+    ``to_kind``?  Same-kind is always fine; float carries migrate
+    anywhere (tolerance, not bit-identity); integer carries only
+    between numerically-like kinds."""
+    if from_kind == to_kind:
+        return True
+    if version in _FLOAT_VERSIONS:
+        return True
+    return to_kind in _LIKE_KINDS.get(from_kind, {from_kind})
+
+
+def check_migration(from_kind: str, to_kind: str, version: str) -> None:
+    if not migration_ok(from_kind, to_kind, version):
+        raise ValueError(
+            f"cannot resume a {version!r} checkpoint taken on "
+            f"{from_kind!r} on a {to_kind!r} target: fixed-point "
+            f"carries are only bit-valid on numerically-like systems "
+            f"(DESIGN.md §11.3); fp32 jobs may migrate freely")
+
+
+def snapshot_iters(state: Optional[Mapping]) -> int:
+    """Trainer iterations a snapshot covers (0 for None — restart)."""
+    if not state:
+        return 0
+    return int(state.get("meta", {}).get("iters", 0))

@@ -9,6 +9,14 @@ axis into rank-aligned slices and gang-steps everything concurrently.
   PYTHONPATH=src python -m repro.launch.pim_jobs jobs.json --json out.json
 
 Without a manifest, ``--demo`` runs a built-in mixed workload queue.
+
+Crash survivability (DESIGN.md §11.5): ``--checkpoint-dir DIR`` writes
+chunk-boundary job checkpoints plus an atomic queue record as the drain
+progresses; after a kill, re-running the same manifest with
+``--checkpoint-dir DIR --resume`` completes it — finished jobs are
+restored without re-running, unfinished ones continue from their last
+durable snapshot.  ``--retry-budget N`` survives injected or real
+per-step faults via supervised retry.
 """
 from __future__ import annotations
 
@@ -52,15 +60,36 @@ def main(argv=None) -> int:
                     help="run the built-in demo manifest")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="also write the per-job report as JSON")
+    ap.add_argument("--checkpoint-dir", default=None, metavar="DIR",
+                    help="write crash-survivable elastic checkpoints "
+                         "(per-job snapshots + queue record) here")
+    ap.add_argument("--checkpoint-every", type=int, default=1,
+                    metavar="N",
+                    help="checkpoint cadence in scheduling steps "
+                         "(default 1 = every chunk boundary)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume a killed run from --checkpoint-dir: "
+                         "finished jobs are not re-run, unfinished ones "
+                         "continue from their last snapshot")
+    ap.add_argument("--retry-budget", type=int, default=0, metavar="N",
+                    help="per-job supervised retries from the last "
+                         "snapshot before FAILED (default 0)")
     args = ap.parse_args(argv)
 
     if args.manifest is None and not args.demo:
         ap.error("pass a manifest path or --demo")
+    if args.resume and not args.checkpoint_dir:
+        ap.error("--resume needs --checkpoint-dir")
     doc = DEMO_MANIFEST if args.manifest is None \
         else load_manifest(args.manifest)
 
     t0 = time.perf_counter()
-    scheduler, handles = run_manifest(doc)
+    scheduler, handles = run_manifest(
+        doc,
+        checkpoint_dir=args.checkpoint_dir,
+        checkpoint_every=args.checkpoint_every,
+        resume=args.resume,
+        retry_budget=args.retry_budget)
     makespan = time.perf_counter() - t0
 
     rows = job_report(handles)
@@ -82,6 +111,11 @@ def main(argv=None) -> int:
     print(f"system transfers: cpu->pim {s.cpu_to_pim:,} B, "
           f"pim->cpu {s.pim_to_cpu:,} B, "
           f"kernel launches {s.kernel_launches}")
+    n_restored = sum(1 for r in rows if r.get("restored"))
+    n_recoveries = sum(r.get("recoveries", 0) for r in rows)
+    if n_restored or n_recoveries:
+        print(f"elastic: {n_restored} job(s) restored without re-running,"
+              f" {n_recoveries} supervised retrie(s)")
 
     if args.json:
         with open(args.json, "w") as fh:

@@ -8,6 +8,12 @@ by capacity, gang-steps all running fits round-robin on one host
 thread, and fuses eligible GD sweeps into one batched kernel launch per
 step (:mod:`repro.sched.gang`); :mod:`repro.sched.manifest` is the
 declarative front end the ``repro.launch.pim_jobs`` CLI drives.
+
+Elastic job runtime (DESIGN.md §11, :mod:`repro.elastic`): jobs
+checkpoint their trainer carry at chunk boundaries, preempt and resume
+across leases/schedulers/Systems, survive injected faults via
+supervised retry, and a killed queue restarts from its durable
+``queue.json`` + per-job snapshots (``pim_jobs --resume``).
 """
 from .allocator import (DEFAULT_RANK_SIZE, BankAllocator, BankLease,
                         FragmentationStats, PimSlice, default_rank_size)

@@ -282,6 +282,23 @@ class FusedGdSweep:
             self._sync_carry()
             self._carry = None
 
+    def lane_state(self, lane: int) -> dict:
+        """One lane's chunk-boundary snapshot — the same
+        ``{"arrays", "meta"}`` schema the serial GD trainers emit from
+        their ``ChunkTick``s (DESIGN.md §11.2), so a preempted gang
+        lane resumes as an ordinary single job via
+        ``fit_steps(state=...)``.  Gang lanes are bit-identical to
+        serial fits, so the resumed trajectory is too.  Call after
+        :meth:`deactivate` (which syncs any device-resident carry) or
+        between steps; fused specs never record history or draw
+        minibatches, so the snapshot carries neither."""
+        self._sync_carry()
+        return {"arrays": {"w": np.asarray(self.w[lane], np.float32),
+                           "b": np.asarray(self.b[lane], np.float32),
+                           "s": np.asarray(self._lane_scale[lane],
+                                           np.float32)},
+                "meta": {"iters": int(self.it), "history": []}}
+
     def result(self, lane: int) -> Optional[FitResult]:
         if not self.active[lane]:
             return None

@@ -23,6 +23,7 @@ file whose text parses as JSON).
 from __future__ import annotations
 
 import json
+import os
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -30,7 +31,7 @@ import numpy as np
 from ..data.synthetic import (make_blobs, make_classification,
                               make_linear_dataset)
 from ..systems import System, make_system
-from .scheduler import JobHandle, PimScheduler
+from .scheduler import JobHandle, PimScheduler, _SingleRun
 
 
 def load_manifest(path: str) -> dict:
@@ -100,15 +101,32 @@ def build_system(spec: Optional[dict]) -> Tuple[System, dict]:
     return make_system(kind, **kwargs), sched_kw
 
 
-def run_manifest(doc: dict, drain: bool = True
+def run_manifest(doc: dict, drain: bool = True, *,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 1,
+                 resume: bool = False,
+                 retry_budget: int = 0,
                  ) -> Tuple[PimScheduler, List[JobHandle]]:
     """Build the scheduler, submit every job and sweep, optionally drain.
 
     Returns the scheduler and the handles in manifest order (jobs first,
     then sweep points in grid order).
+
+    Elastic knobs (DESIGN.md §11): ``checkpoint_dir`` makes the run
+    crash-survivable — per-job chunk-boundary checkpoints every
+    ``checkpoint_every`` scheduling steps plus an atomic ``queue.json``
+    record of every job's state.  ``resume=True`` replays a previous
+    (possibly killed) run from that directory: finished jobs are marked
+    restored without re-running; unfinished jobs continue from their
+    last durable snapshot (fingerprint-validated, migration-checked).
+    ``retry_budget`` is the per-job supervised-retry default.
     """
     system, sched_kw = build_system(doc.get("system"))
-    scheduler = PimScheduler(system, **sched_kw)
+    scheduler = PimScheduler(system,
+                             checkpoint_dir=checkpoint_dir,
+                             checkpoint_every=checkpoint_every,
+                             default_retry_budget=retry_budget,
+                             **sched_kw)
     datasets: Dict[str, tuple] = {
         name: build_dataset(spec)
         for name, spec in (doc.get("datasets") or {}).items()}
@@ -145,9 +163,41 @@ def run_manifest(doc: dict, drain: bool = True
             **(entry.get("params") or {})))
     if not handles:
         raise ValueError("manifest defines no jobs or sweeps")
+    if resume and checkpoint_dir is not None:
+        _restore_jobs(scheduler, handles, checkpoint_dir)
     if drain:
         scheduler.drain()
     return scheduler, handles
+
+
+def _restore_jobs(scheduler: PimScheduler, handles: List[JobHandle],
+                  checkpoint_dir: str) -> None:
+    """Reconcile freshly-submitted manifest jobs against a killed run's
+    ``queue.json`` + per-job checkpoints (crash recovery, DESIGN.md
+    §11.5): finished records short-circuit via ``mark_restored`` (the
+    manifest completes without redoing their work); everything else
+    resumes from its last durable snapshot when one exists.  Jobs are
+    matched by name — manifest names are stable across runs."""
+    from .. import elastic
+
+    queue_path = os.path.join(checkpoint_dir, "queue.json")
+    records: Dict[str, dict] = {}
+    if os.path.exists(queue_path):
+        with open(queue_path) as fh:
+            records = {r["name"]: r
+                       for r in json.load(fh).get("jobs", [])}
+    for h in handles:
+        rec = records.get(h.name)
+        if rec is not None and rec.get("state") == "done":
+            scheduler.mark_restored(h, iters=int(rec.get("iters", 0)),
+                                    steps=int(rec.get("steps", 0)))
+            continue
+        if not isinstance(scheduler._find_run(h), _SingleRun):
+            continue    # fused gang members restart with their gang
+        job_dir = elastic.job_dir(checkpoint_dir, h.name)
+        if elastic.has_checkpoint(job_dir):
+            snapshot, envelope = elastic.load_snapshot(job_dir)
+            scheduler.attach_resume_state(h, snapshot, envelope)
 
 
 def job_report(handles: List[JobHandle]) -> List[dict]:
@@ -167,6 +217,16 @@ def job_report(handles: List[JobHandle]) -> List[dict]:
             "fused": h.fused,
             "modeled_dpu_seconds": h.modeled_seconds,
         }
+        if h.recoveries:
+            row["recoveries"] = h.recoveries
+        if h.preemptions:
+            row["preemptions"] = h.preemptions
+        if h.straggler_flags:
+            row["straggler_flags"] = h.straggler_flags
+        if h.restored:
+            row["restored"] = True
+        if h.gpu is not None:
+            row["modeled_gpu_seconds"] = h.gpu.modeled_seconds
         if h.transfer is not None:
             row["cpu_to_pim_bytes"] = h.transfer.cpu_to_pim
             row["pim_to_cpu_bytes"] = h.transfer.pim_to_cpu

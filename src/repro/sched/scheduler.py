@@ -13,10 +13,21 @@ concurrent fits interleave on a single host thread, exactly the way the
 UPMEM host serially orchestrates many tenants' rank allocations
 (paper §2.2).
 
-Lifecycle: ``QUEUED -> RUNNING -> DONE | FAILED | CANCELLED``.  Failure
+Lifecycle: ``QUEUED -> RUNNING -> DONE | FAILED | CANCELLED`` plus the
+non-terminal ``PREEMPTED`` detour (DESIGN.md §11): a running job can be
+paused at a chunk boundary — its trainer carry snapshotted via the
+``ChunkTick`` it last yielded, its lease released — and later resumed
+on a fresh lease, a different scheduler, or a different execution
+System (migration subject to the elastic compatibility matrix).
+Preemption powers priority eviction (``preemptive=True``), allocator
+defragmentation (:meth:`PimScheduler.defragment`), and explicit
+:meth:`JobHandle.preempt` / :meth:`PimScheduler.resume`.  Failure
 is isolated per job: an exception inside one job's step marks that job
 FAILED (the exception object rides on the handle) and never unwinds the
-drain loop or the other tenants.
+drain loop or the other tenants — and jobs with a retry budget are
+instead restored from their last in-memory snapshot and continue
+(supervised retry, fault-injectable via ``REPRO_INJECT_FAULT`` —
+repro/elastic/fault.py).
 
 Accounting: every job records the ``TransferStats`` delta of its slice
 (attributable bytes even though jobs interleave — snapshot/delta, see
@@ -31,11 +42,18 @@ from __future__ import annotations
 
 import enum
 import itertools
+import json
+import os
+import time
 from typing import List, Mapping, Optional, Union
 
 from ..api.dataset import PimDataset
 from ..api.registry import FitResult, TrainerSpec, Workload, get_workload
-from ..systems import DpuCostModel, System, TransferStats
+from ..elastic import (InjectedFault, check_migration, injector_from_env,
+                       job_fingerprint, snapshot_iters)
+from ..elastic import checkpoint as elastic_ckpt
+from ..systems import ChunkTick, DpuCostModel, System, TransferStats
+from ..train.fault_tolerance import StragglerMonitor
 from .allocator import BankAllocator, BankLease, FragmentationStats, PimSlice
 from .gang import FusedGdSweep, plan_fusion
 
@@ -43,6 +61,9 @@ from .gang import FusedGdSweep, plan_fusion
 class JobState(enum.Enum):
     QUEUED = "queued"
     RUNNING = "running"
+    #: paused at a chunk boundary, carry snapshotted, lease released;
+    #: non-terminal — ``scheduler.resume(handle)`` continues the fit
+    PREEMPTED = "preempted"
     DONE = "done"
     FAILED = "failed"
     CANCELLED = "cancelled"
@@ -73,6 +94,16 @@ class JobHandle:
     jobs this is the whole gang's delta — they share one slice),
     ``modeled_seconds`` (DpuCostModel cycle accounting, per iteration),
     and ``lease`` (the core extent while running).
+
+    Elastic accounting (DESIGN.md §11): ``snapshot`` is the last
+    materialized chunk-boundary state (the retry/resume source) and
+    ``snapshot_kind`` the System kind it was taken on (the migration
+    matrix validates against it); ``retry_budget``/``recoveries`` track
+    supervised retry, ``preemptions`` counts preempt/resume cycles,
+    ``straggler_flags`` the scheduler's per-chunk wall-time outliers,
+    ``gpu`` the slice-scoped roofline delta on a gpu-model target, and
+    ``restored`` marks a finished job replayed from a crash-surviving
+    queue record without re-running.
     """
 
     def __init__(self, job_id: int, workload: Workload, spec: TrainerSpec,
@@ -93,19 +124,40 @@ class JobHandle:
         self.modeled_seconds = 0.0
         self.lease: Optional[BankLease] = None
         self.fused = False
+        self.retry_budget = 0
+        self.recoveries = 0
+        self.preemptions = 0
+        self.straggler_flags = 0
+        self.snapshot: Optional[dict] = None
+        self.snapshot_kind: Optional[str] = None
+        self.fingerprint: Optional[str] = None
+        self.gpu = None
+        self.restored = False
         self._cancel_requested = False
+        self._preempt_requested = False
 
     @property
     def done(self) -> bool:
         return self.state.terminal
 
     def cancel(self) -> None:
-        """Request cancellation: queued jobs cancel immediately, running
-        jobs at their next gang-step boundary."""
+        """Request cancellation: queued/preempted jobs cancel
+        immediately, running jobs at their next gang-step boundary."""
         if not self.done:
             self._cancel_requested = True
-            if self.state is JobState.QUEUED:
+            if self.state in (JobState.QUEUED, JobState.PREEMPTED):
                 self.state = JobState.CANCELLED
+
+    def preempt(self) -> None:
+        """Request preemption at the next chunk boundary: the trainer
+        carry is snapshotted, the lease released, and the handle parks
+        in PREEMPTED until :meth:`PimScheduler.resume` — on the same
+        scheduler, a fresh one, or a different execution target
+        (migration per the elastic compatibility matrix, DESIGN.md
+        §11.3).  Only meaningful on a RUNNING job; non-resumable
+        workloads lose their progress and restart on resume."""
+        if self.state is JobState.RUNNING:
+            self._preempt_requested = True
 
     def __repr__(self) -> str:
         return (f"JobHandle({self.name!r}, {self.state.value}, "
@@ -148,6 +200,7 @@ class _Runnable:
         self.lease: Optional[BankLease] = None
         self.slice: Optional[System] = None
         self._snapshot: Optional[TransferStats] = None
+        self._gpu_snapshot = None
 
     @property
     def live_jobs(self) -> List[JobHandle]:
@@ -159,10 +212,12 @@ class _Runnable:
         # extent, HostSlice over thread-pool lanes (DESIGN.md §10.3)
         self.slice = system.slice(lease)
         self._snapshot = self.slice.stats.snapshot()
+        gpu = getattr(self.slice, "gpu", None)
+        self._gpu_snapshot = gpu.snapshot() if gpu is not None else None
         X, y = self.data
         self.dataset = self.slice.put(X, y)
         for job in self.jobs:
-            if job.state is JobState.QUEUED:
+            if job.state in (JobState.QUEUED, JobState.PREEMPTED):
                 job.state = JobState.RUNNING
                 job.lease = lease
                 job.n_cores = lease.n_cores
@@ -170,55 +225,136 @@ class _Runnable:
     def _transfer_delta(self) -> TransferStats:
         return self.slice.stats.delta(self._snapshot)
 
-    def advance(self) -> bool:
+    def _account(self, job: JobHandle) -> None:
+        """Settle per-job accounting at a lifecycle boundary: the
+        slice's TransferStats delta, and — on a gpu-model target — the
+        slice-scoped roofline delta (satellite: per-job modeled-GPU
+        attribution via GpuModelReport.delta)."""
+        job.transfer = self._transfer_delta()
+        if self._gpu_snapshot is not None:
+            job.gpu = self.slice.gpu.delta(self._gpu_snapshot)
+
+    def advance(self, sched: "Optional[PimScheduler]" = None) -> bool:
         """One gang step; True when the runnable is finished."""
         raise NotImplementedError
 
 
 class _SingleRun(_Runnable):
-    """One job advanced via its workload's ``fit_steps`` generator."""
+    """One job advanced via its workload's ``fit_steps`` generator.
 
-    def start(self, system: PimSystem, lease: BankLease) -> None:
+    The elastic unit of the scheduler (DESIGN.md §11): each yielded
+    :class:`~repro.systems.base.ChunkTick` carries a lazy snapshot of
+    the trainer carry, so the run can be preempted at any chunk
+    boundary, checkpointed on a cadence, retried after a fault from its
+    last snapshot, or recreated on another scheduler/System from a
+    ``resume_state``."""
+
+    def __init__(self, *args, resume_state: Optional[dict] = None,
+                 **kwargs):
+        super().__init__(*args, **kwargs)
+        self._resume_state = resume_state
+        self._last_tick: Optional[ChunkTick] = None
+
+    def _make_gen(self, job: JobHandle, state: Optional[dict]):
+        # only pass state= when resuming: legacy/third-party workloads
+        # predating the elastic API keep working un-resumed
+        if state is None:
+            return job.workload.fit_steps(self.dataset, job.spec)
+        return job.workload.fit_steps(self.dataset, job.spec, state=state)
+
+    def start(self, system: System, lease: BankLease) -> None:
         super().start(system, lease)
         job = self.jobs[0]
-        self.gen = job.workload.fit_steps(self.dataset, job.spec)
+        self.gen = self._make_gen(job, self._resume_state)
+        self._last_tick = None
         self._step_seconds = _modeled_step_seconds(job, self.dataset,
                                                    self.slice)
 
-    def advance(self) -> bool:
+    def _materialize(self, job: JobHandle) -> bool:
+        """Snapshot the last chunk boundary onto the handle; False when
+        the workload never yielded a resumable tick."""
+        tick = self._last_tick
+        if tick is None or not tick.resumable:
+            return False
+        job.snapshot = tick.snapshot()
+        job.snapshot_kind = getattr(self.slice, "kind", "pim")
+        return True
+
+    def _preempt(self, job: JobHandle,
+                 sched: "Optional[PimScheduler]") -> bool:
+        job._preempt_requested = False
+        self._materialize(job)
+        self.gen.close()
+        job.state = JobState.PREEMPTED
+        job.preemptions += 1
+        self._account(job)
+        if sched is not None:
+            sched._persist_job(job)
+        return True
+
+    def _fail_or_retry(self, job: JobHandle, err: BaseException,
+                       sched: "Optional[PimScheduler]") -> bool:
+        """Supervised retry (train.fault_tolerance semantics applied to
+        the scheduler): restore from the job's last snapshot while the
+        retry budget lasts; otherwise FAILED."""
+        if (job.retry_budget - job.recoveries > 0
+                and not job._cancel_requested):
+            job.recoveries += 1
+            job.error = err          # last fault survives for forensics
+            self.gen.close()
+            job.iters = snapshot_iters(job.snapshot)
+            self.gen = self._make_gen(job, job.snapshot)
+            self._last_tick = None
+            return False
+        job.error = err
+        job.state = JobState.FAILED
+        self._account(job)
+        return True
+
+    def advance(self, sched: "Optional[PimScheduler]" = None) -> bool:
         job = self.jobs[0]
         if job._cancel_requested:
             self.gen.close()
             job.state = JobState.CANCELLED
-            job.transfer = self._transfer_delta()
+            self._account(job)
             return True
+        if job._preempt_requested:
+            return self._preempt(job, sched)
         try:
+            if (sched is not None and sched.injector is not None
+                    and sched.injector(job.name, job.steps + 1)):
+                raise InjectedFault(
+                    f"injected fault: job {job.name!r} step "
+                    f"{job.steps + 1}")
             advanced = next(self.gen)
         except StopIteration as stop:
             job.result = stop.value
             job.state = JobState.DONE
-            job.transfer = self._transfer_delta()
+            self._account(job)
             return True
         except Exception as err:  # noqa: BLE001 — isolation by design
-            job.error = err
-            job.state = JobState.FAILED
-            job.transfer = self._transfer_delta()
-            return True
+            return self._fail_or_retry(job, err, sched)
         # generators yield the iteration count each turn covered (a
         # fused chunk drains several); tolerate legacy generators that
         # yield something else by charging one iteration
+        tick = advanced if isinstance(advanced, ChunkTick) else None
         advanced = advanced if isinstance(advanced, int) and advanced > 0 \
             else 1
         job.steps += 1
         job.iters += advanced
         job.modeled_seconds += advanced * self._step_seconds
+        self._last_tick = tick
+        if (sched is not None and sched.checkpoint_dir is not None
+                and job.steps % max(1, sched.checkpoint_every) == 0
+                and self._materialize(job)):
+            sched._persist_job(job)
         return False
 
 
 class _FusedRun(_Runnable):
     """A fused GD gang: one slice, one dataset, one launch per step."""
 
-    def start(self, system: PimSystem, lease: BankLease) -> None:
+    def start(self, system: System, lease: BankLease) -> None:
         super().start(system, lease)
         workload = self.jobs[0].workload
         self.gang = FusedGdSweep(workload,
@@ -233,7 +369,7 @@ class _FusedRun(_Runnable):
     def _finish(self) -> None:
         delta = self._transfer_delta()
         for lane, job in enumerate(self.jobs):
-            if job.done:
+            if job.done or job.state is JobState.PREEMPTED:
                 continue
             job.transfer = delta
             result = self.gang.result(lane)
@@ -243,18 +379,33 @@ class _FusedRun(_Runnable):
                 job.result = result
                 job.state = JobState.DONE
 
-    def advance(self) -> bool:
+    def advance(self, sched: "Optional[PimScheduler]" = None) -> bool:
         for lane, job in enumerate(self.jobs):
             if job._cancel_requested and self.gang.active[lane]:
                 self.gang.deactivate(lane)
                 job.state = JobState.CANCELLED
                 job.transfer = self._transfer_delta()
+            elif job._preempt_requested and self.gang.active[lane]:
+                # a fused lane leaves its gang: carry synced out via
+                # lane_state, lane deactivated; resume() re-enters as an
+                # ordinary _SingleRun (gang membership is not restored)
+                job._preempt_requested = False
+                self.gang.deactivate(lane)
+                job.snapshot = self.gang.lane_state(lane)
+                job.snapshot_kind = getattr(self.slice, "kind", "pim")
+                job.state = JobState.PREEMPTED
+                job.preemptions += 1
+                self._account(job)
+                if sched is not None:
+                    sched._persist_job(job)
         it_before = self.gang.it
         try:
             finished = self.gang.step()
         except Exception as err:  # noqa: BLE001 — the gang shares a launch
             delta = self._transfer_delta()
             for job in self.live_jobs:
+                if job.state is JobState.PREEMPTED:
+                    continue     # already safely off the gang
                 job.error = err
                 job.state = JobState.FAILED
                 job.transfer = delta
@@ -301,7 +452,12 @@ class PimScheduler:
     def __init__(self,
                  system: Union[System, Mapping[str, System]],
                  rank_size: Optional[int] = None,
-                 backfill: bool = False):
+                 backfill: bool = False,
+                 preemptive: bool = False,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 1,
+                 fault_injector=None,
+                 default_retry_budget: int = 0):
         if isinstance(system, Mapping):
             if not system:
                 raise ValueError("need at least one system to schedule on")
@@ -319,6 +475,18 @@ class PimScheduler:
         self.system = self.systems[self.default_target]
         self.allocator = self._allocators[self.default_target]
         self.backfill = backfill
+        #: priority preemption in _admit: a high-priority submit may
+        #: evict lower-priority resumable RUNNING jobs to claim cores
+        self.preemptive = preemptive
+        #: durable elastic checkpoints (None = in-memory snapshots only)
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = max(1, int(checkpoint_every))
+        self.default_retry_budget = default_retry_budget
+        #: fault injection hook — explicit injector wins, else the
+        #: REPRO_INJECT_FAULT environment plan (None when unset)
+        self.injector = (fault_injector if fault_injector is not None
+                         else injector_from_env())
+        self._monitors: dict = {}   # job id -> StragglerMonitor
         self._queue: List[_Runnable] = []
         self._running: List[_Runnable] = []
         self._finished: List[_Runnable] = []
@@ -375,6 +543,9 @@ class PimScheduler:
                version: Optional[str] = None, n_cores: Optional[int] = None,
                priority: int = 0, name: Optional[str] = None,
                target: Optional[str] = None,
+               retry_budget: Optional[int] = None,
+               resume_state: Optional[dict] = None,
+               resume_from_kind: Optional[str] = None,
                **params) -> JobHandle:
         """Queue one training job; returns its :class:`JobHandle`.
 
@@ -384,6 +555,14 @@ class PimScheduler:
         one rank).  ``target`` picks the execution System on a mixed
         machine (None = the default target).  Jobs run when capacity
         exists, in (priority desc, submission order).
+
+        Elastic knobs (DESIGN.md §11): ``retry_budget`` caps supervised
+        retries from the last snapshot (None = the scheduler default);
+        ``resume_state`` seeds the fit from a prior chunk-boundary
+        snapshot — cross-System migration is validated when
+        ``resume_from_kind`` names the System kind the snapshot was
+        taken on (integer versions are bit-exact only between
+        numerically-like kinds; fp32 migrates anywhere).
         """
         wl = self._resolve_workload(workload)
         if spec is None:
@@ -396,8 +575,21 @@ class PimScheduler:
         handle = JobHandle(next(self._next_job_id), wl, spec, priority,
                           size, name)
         handle.target = target
-        run = _SingleRun([handle], self._host_arrays(data), priority,
-                         next(self._seq), size, target)
+        handle.retry_budget = (self.default_retry_budget
+                               if retry_budget is None else retry_budget)
+        data = self._host_arrays(data)
+        if self.checkpoint_dir is not None:
+            handle.fingerprint = job_fingerprint(
+                wl.name, spec.version, dict(spec.params), data[0], data[1])
+        if resume_state is not None:
+            if resume_from_kind is not None:
+                to_kind = getattr(self.systems[target], "kind", "pim")
+                check_migration(resume_from_kind, to_kind, spec.version)
+            handle.snapshot = resume_state
+            handle.iters = snapshot_iters(resume_state)
+        run = _SingleRun([handle], data, priority,
+                         next(self._seq), size, target,
+                         resume_state=resume_state)
         self._queue.append(run)
         self.handles.append(handle)
         return handle
@@ -445,6 +637,89 @@ class PimScheduler:
 
     # -- execution -----------------------------------------------------------
 
+    def _preempt_running(self, run: _Runnable,
+                         requeue: bool = True) -> Optional[JobHandle]:
+        """Preempt a RUNNING _SingleRun at its current chunk boundary:
+        snapshot the carry, release the lease, and (by default) requeue
+        a fresh runnable seeded from the snapshot."""
+        job = run.jobs[0]
+        job._preempt_requested = True
+        run.advance(self)
+        self._allocators[run.target].release(run.lease)
+        self._running.remove(run)
+        self._finished.append(run)
+        if job.state is not JobState.PREEMPTED:
+            return None     # raced with completion/cancel — nothing lost
+        if requeue:
+            self._requeue(job)
+        return job
+
+    def _requeue(self, job: JobHandle) -> None:
+        """PREEMPTED -> QUEUED on a fresh runnable seeded from the
+        job's snapshot (None restarts non-resumable workloads)."""
+        run = self._find_run(job)
+        job.state = JobState.QUEUED
+        job.lease = None
+        job.iters = snapshot_iters(job.snapshot)
+        new = _SingleRun([job], run.data, job.priority,
+                         next(self._seq), job.n_cores, job.target,
+                         resume_state=job.snapshot)
+        self._queue.append(new)
+
+    def _find_run(self, job: JobHandle) -> _Runnable:
+        for pool in (self._running, self._finished, self._queue):
+            for run in pool:
+                if job in run.jobs:
+                    return run
+        raise ValueError(f"job {job.name!r} is not tracked by this "
+                         "scheduler")
+
+    def _evict_for(self, run: _Runnable,
+                   alloc: BankAllocator) -> Optional[BankLease]:
+        """Priority preemption: free cores for ``run`` by preempting
+        strictly lower-priority resumable single jobs on its target
+        (lowest priority first, LIFO within a priority), retrying the
+        allocation after each eviction.  Returns the won lease, or None
+        when even preempting every eligible victim cannot fit the
+        request (then nobody is preempted)."""
+        victims = [r for r in self._running
+                   if r.target == run.target
+                   and isinstance(r, _SingleRun)
+                   and r.priority < run.priority
+                   and getattr(r.jobs[0].workload, "resumable", False)
+                   and not r.jobs[0].done]
+        if not victims:
+            return None
+        reclaimable = sum(r.lease.n_cores for r in victims)
+        if alloc.free_cores + reclaimable < run.n_cores:
+            return None
+        victims.sort(key=lambda r: (r.priority, -r.seq))
+        for victim in victims:
+            self._preempt_running(victim, requeue=True)
+            lease = alloc.allocate(run.n_cores)
+            if lease is not None:
+                return lease
+        return None
+
+    def defragment(self, target: Optional[str] = None) -> int:
+        """Compact a target's allocator under churn: preempt every
+        resumable running single job at its chunk boundary (releasing
+        its lease), then re-admit — the allocator's first-fit over the
+        coalesced free list packs the survivors contiguously.  Returns
+        how many jobs were cycled.  Fused gangs are left in place
+        (one gang = one lease; moving it buys nothing)."""
+        target = self._resolve_target(target)
+        movable = [r for r in self._running
+                   if r.target == target and isinstance(r, _SingleRun)
+                   and getattr(r.jobs[0].workload, "resumable", False)
+                   and not r.jobs[0].done]
+        moved = 0
+        for run in movable:
+            if self._preempt_running(run, requeue=True) is not None:
+                moved += 1
+        self._admit()
+        return moved
+
     def _admit(self) -> None:
         self._queue = [r for r in self._queue if r.live_jobs]
         pending = sorted(self._queue,
@@ -455,6 +730,8 @@ class PimScheduler:
                 continue
             alloc = self._allocators[run.target]
             lease = alloc.allocate(run.n_cores)
+            if lease is None and self.preemptive:
+                lease = self._evict_for(run, alloc)
             if lease is None:
                 if not self.backfill:
                     blocked.add(run.target)
@@ -472,19 +749,38 @@ class PimScheduler:
                 continue
             self._running.append(run)
 
+    def _observe_stragglers(self, run: _Runnable, dt: float) -> None:
+        """Feed each live job's per-chunk wall time into its
+        StragglerMonitor (EWMA z-score over scheduling turns — the
+        train.fault_tolerance detector wired into the drain loop)."""
+        for job in run.jobs:
+            if job.done:
+                continue
+            mon = self._monitors.get(job.id)
+            if mon is None:
+                mon = self._monitors[job.id] = StragglerMonitor()
+            if mon.observe(dt):
+                job.straggler_flags += 1
+
     def step(self) -> bool:
         """One scheduling turn: admit what fits, then advance every
         running job by one gang step (round-robin, admission order).
-        Returns True while any job is queued or running."""
+        Returns True while any job is queued or running.  Explicitly
+        preempted jobs park in PREEMPTED (their lease released) until
+        :meth:`resume`; parked jobs do not keep the drain loop alive."""
         self._admit()
-        still_running: List[_Runnable] = []
-        for run in self._running:
-            if run.advance():
+        for run in list(self._running):
+            if run not in self._running:
+                continue    # evicted mid-turn by a priority preemption
+            t0 = time.perf_counter()
+            finished = run.advance(self)
+            self._observe_stragglers(run, time.perf_counter() - t0)
+            if finished:
                 self._allocators[run.target].release(run.lease)
+                self._running.remove(run)
                 self._finished.append(run)
-            else:
-                still_running.append(run)
-        self._running = still_running
+        if self.checkpoint_dir is not None:
+            self._persist_queue()
         return bool(self._running or self._queue)
 
     def drain(self) -> List[JobHandle]:
@@ -494,6 +790,149 @@ class PimScheduler:
         while self.step():
             pass
         return self.handles
+
+    # -- elastic: preempt / resume / migrate / persist -----------------------
+
+    def resume(self, handle: JobHandle, *, data=None,
+               target: Optional[str] = None) -> JobHandle:
+        """Requeue a PREEMPTED job from its snapshot.
+
+        ``target`` may name a *different* execution System (cross-System
+        migration): the move is validated against the elastic
+        compatibility matrix — integer versions only between
+        numerically-like kinds, fp32 anywhere (tolerance-tested,
+        DESIGN.md §11.3).  ``data`` re-supplies the host arrays when the
+        handle comes from another scheduler (same-scheduler resumes find
+        them on the parked runnable).  The handle itself is reused; on a
+        foreign scheduler it is adopted into ``handles``.
+        """
+        if handle.state is not JobState.PREEMPTED:
+            raise ValueError(f"can only resume a PREEMPTED job, "
+                             f"{handle.name!r} is {handle.state.value}")
+        to_target = self._resolve_target(target if target is not None
+                                         else (handle.target
+                                               if handle.target
+                                               in self.systems else None))
+        if handle.snapshot is not None and handle.snapshot_kind is not None:
+            to_kind = getattr(self.systems[to_target], "kind", "pim")
+            check_migration(handle.snapshot_kind, to_kind,
+                            handle.spec.version)
+        if data is None:
+            data = self._find_data(handle)
+        else:
+            data = self._host_arrays(data)
+        handle.target = to_target
+        handle.n_cores = self._sized(handle.n_cores, to_target)
+        handle.state = JobState.QUEUED
+        handle.lease = None
+        handle.iters = snapshot_iters(handle.snapshot)
+        run = _SingleRun([handle], data, handle.priority,
+                         next(self._seq), handle.n_cores, to_target,
+                         resume_state=handle.snapshot)
+        self._queue.append(run)
+        if handle not in self.handles:
+            self.handles.append(handle)
+        return handle
+
+    def _find_data(self, handle: JobHandle) -> tuple:
+        try:
+            return self._find_run(handle).data
+        except ValueError:
+            raise ValueError(
+                f"job {handle.name!r} belongs to another scheduler; "
+                "pass data= to resume it here") from None
+
+    def attach_resume_state(self, handle: JobHandle, snapshot: dict,
+                            envelope: Optional[dict] = None) -> None:
+        """Seed a still-QUEUED job with a restored checkpoint (the
+        crash-recovery path: run_manifest re-submits the manifest, then
+        attaches each job's durable snapshot before draining).
+
+        The envelope — when given — must carry a matching config+dataset
+        ``fingerprint`` (refuse to resume someone else's weights) and
+        its ``system_kind`` is migration-checked against the job's
+        target."""
+        if handle.state is not JobState.QUEUED:
+            raise ValueError("attach_resume_state needs a QUEUED job, "
+                             f"{handle.name!r} is {handle.state.value}")
+        if envelope is not None:
+            fp = envelope.get("fingerprint")
+            if (fp and handle.fingerprint is not None
+                    and fp != handle.fingerprint):
+                raise ValueError(
+                    f"checkpoint fingerprint mismatch for {handle.name!r}"
+                    ": the saved config+dataset differ from the "
+                    "submitted job")
+            from_kind = envelope.get("system_kind")
+            if from_kind:
+                to_kind = getattr(self.systems[handle.target], "kind",
+                                  "pim")
+                check_migration(from_kind, to_kind, handle.spec.version)
+                handle.snapshot_kind = from_kind
+        run = self._find_run(handle)
+        if not isinstance(run, _SingleRun):
+            raise ValueError("cannot attach a resume state to a fused "
+                             "gang member; submit it unfused")
+        handle.snapshot = snapshot
+        handle.iters = snapshot_iters(snapshot)
+        run._resume_state = snapshot
+
+    def mark_restored(self, handle: JobHandle, *, iters: int = 0,
+                      steps: int = 0) -> None:
+        """Mark a still-QUEUED job DONE-equivalent from a crash-surviving
+        queue record: the fit already finished in the killed process, so
+        ``--resume`` must not re-run it.  The handle lands in DONE with
+        ``restored=True`` and no in-memory FitResult (the caller reloads
+        artifacts from its own checkpoint if it needs them)."""
+        if handle.state is not JobState.QUEUED:
+            raise ValueError("mark_restored needs a QUEUED job, "
+                             f"{handle.name!r} is {handle.state.value}")
+        handle.state = JobState.DONE
+        handle.restored = True
+        handle.iters = iters
+        handle.steps = steps
+
+    def _persist_job(self, job: JobHandle) -> None:
+        """Durably checkpoint one job's snapshot (atomic tmp+rename via
+        train/checkpoint.py's format — see repro/elastic/checkpoint)."""
+        if self.checkpoint_dir is None or job.snapshot is None:
+            return
+        elastic_ckpt.save_snapshot(
+            elastic_ckpt.job_dir(self.checkpoint_dir, job.name),
+            job.snapshot,
+            envelope={
+                "workload": job.workload.name,
+                "version": job.spec.version,
+                "params": dict(job.spec.params),
+                "fingerprint": job.fingerprint,
+                "system_kind": job.snapshot_kind,
+                "iters": snapshot_iters(job.snapshot),
+                "steps": job.steps,
+            })
+
+    def _persist_queue(self) -> None:
+        """Crash-survivable queue manifest: one atomic ``queue.json``
+        naming every job and its state, so ``pim_jobs --resume`` can
+        tell finished work from unfinished after a kill (-9 included:
+        the rename is the commit point)."""
+        rows = [{
+            "name": h.name,
+            "workload": h.workload.name,
+            "version": h.spec.version,
+            "state": h.state.value,
+            "iters": h.iters,
+            "steps": h.steps,
+            "priority": h.priority,
+            "n_cores": h.n_cores,
+            "target": h.target,
+            "fingerprint": h.fingerprint,
+        } for h in self.handles]
+        path = os.path.join(self.checkpoint_dir, "queue.json")
+        os.makedirs(self.checkpoint_dir, exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as fh:
+            json.dump({"schema": 1, "jobs": rows}, fh, indent=1)
+        os.replace(tmp, path)
 
     # -- introspection -------------------------------------------------------
 
@@ -520,6 +959,11 @@ class PimScheduler:
             "cores_used": frag.used_cores,
             "cores_free": frag.free_cores,
             "external_fragmentation": frag.external_fragmentation,
+            # elastic/fault-tolerance counters (DESIGN.md §11)
+            "straggler_flags": sum(h.straggler_flags
+                                   for h in self.handles),
+            "preemptions": sum(h.preemptions for h in self.handles),
+            "recoveries": sum(h.recoveries for h in self.handles),
         }
         out["targets"] = {
             name: {

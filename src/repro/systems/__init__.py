@@ -15,7 +15,7 @@ first-class API call (``repro.launch.compare``).
 """
 from __future__ import annotations
 
-from .base import (FabricReduce, HierarchicalReduce, HostReduce,
+from .base import (ChunkTick, FabricReduce, HierarchicalReduce, HostReduce,
                    ReduceStrategy, ReduceVia, StepProgram, System,
                    TransferStats, chunk_schedule, resolve_reduce_strategy,
                    run_steps)
@@ -53,6 +53,7 @@ def make_system(kind: str = "pim", **config_kwargs) -> System:
 
 
 __all__ = [
+    "ChunkTick",
     "DPU_FREQ_HZ", "DPU_MRAM_BYTES_PER_CYCLE", "DPU_OP_CYCLES",
     "DPU_PIPELINE_SATURATION_THREADS", "DpuCostModel", "FabricReduce",
     "GpuModelConfig", "GpuModelReport", "HierarchicalReduce", "HostConfig",

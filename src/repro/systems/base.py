@@ -174,12 +174,50 @@ def run_steps(gen):
             return stop.value
 
 
-def chunk_schedule(n_iters: int, fuse_steps: int, record_every: int):
+class ChunkTick(int):
+    """What a resumable trainer's ``fit_steps`` yields per chunk.
+
+    Behaves as the plain iteration count (an ``int`` — every existing
+    consumer keeps working), but additionally carries a lazy
+    ``snapshot()`` hook: calling it while the generator is suspended at
+    this yield materializes the trainer's chunk-boundary state as a
+    ``{"arrays": {...}, "meta": {...}}`` dict — the serializable carry
+    the elastic job runtime checkpoints (DESIGN.md §11).  The snapshot
+    is lazy so trainers pay the device->host copies only when someone
+    (preemption, the scheduler's checkpoint cadence) actually asks.
+    """
+
+    def __new__(cls, iters: int, snapshot_fn: Optional[Callable] = None):
+        tick = super().__new__(cls, iters)
+        tick._snapshot_fn = snapshot_fn
+        return tick
+
+    @property
+    def resumable(self) -> bool:
+        return self._snapshot_fn is not None
+
+    def snapshot(self) -> Optional[dict]:
+        """Materialize the chunk-boundary trainer state (None when the
+        trainer is not resumable).  Only valid while the generator that
+        yielded this tick is suspended at the yield."""
+        if self._snapshot_fn is None:
+            return None
+        return self._snapshot_fn()
+
+
+def chunk_schedule(n_iters: int, fuse_steps: int, record_every: int,
+                   start: int = 0):
     """Chunk sizes covering ``n_iters`` fused-step iterations, with
     record points forced onto chunk boundaries: each chunk is
     ``min(fuse_steps, next record point, remaining)`` (shared by the GD
-    and K-Means trainers and the fused gang — DESIGN.md §9.3)."""
-    it = 0
+    and K-Means trainers and the fused gang — DESIGN.md §9.3).
+
+    ``start`` resumes the schedule mid-run (elastic restore, DESIGN.md
+    §11): chunks continue from iteration ``start`` exactly as the
+    uninterrupted schedule would have cut them — checkpoints always land
+    on chunk boundaries, so a resumed fit replays the identical chunk
+    sequence from that boundary on."""
+    it = start
     while it < n_iters:
         k = min(fuse_steps, n_iters - it)
         if record_every:

@@ -58,6 +58,40 @@ class GpuModelReport:
                for f in dataclasses.fields(GpuModelReport)})
 
 
+_REPORT_FIELDS = tuple(f.name for f in
+                       dataclasses.fields(GpuModelReport))
+
+
+class _MirrorGpuReport(GpuModelReport):
+    """Slice-local roofline ledger that forwards every *increment* to
+    the parent system's ``gpu`` report — the ``_MirrorStats`` pattern
+    (systems/base.py) applied to modeled GPU accounting, so a job
+    queue's global totals keep accumulating in one place while each
+    slice's ``snapshot()/delta()`` stays per-job attributable
+    (DESIGN.md §10.4)."""
+
+    def __init__(self, parent: GpuModelReport):
+        object.__setattr__(self, "_parent", parent)
+        super().__init__()
+
+    def __setattr__(self, name, value):
+        if name in _REPORT_FIELDS:
+            delta = value - getattr(self, name, 0)
+            if delta > 0:
+                setattr(self._parent, name,
+                        getattr(self._parent, name) + delta)
+        object.__setattr__(self, name, value)
+
+    def snapshot(self) -> GpuModelReport:
+        # a plain value snapshot — dataclasses.replace would try to
+        # construct another mirror (whose __init__ wants a parent)
+        return GpuModelReport(**{f: getattr(self, f)
+                                 for f in _REPORT_FIELDS})
+
+    def delta(self, snapshot: GpuModelReport) -> GpuModelReport:
+        return self.snapshot().delta(snapshot)
+
+
 class ModeledGpuSystem(HostSystem):
     """Host-CPU execution whose time/energy report is an A100 roofline."""
 
@@ -120,9 +154,11 @@ class ModeledGpuSystem(HostSystem):
 
 class GpuModelSlice(ModeledGpuSystem):
     """Lane-scoped view of a parent ModeledGpuSystem: shared caches,
-    mirrored TransferStats — and the roofline report accumulates on the
-    PARENT's ``gpu`` ledger so a job queue's modeled GPU time stays in
-    one place (per-job attribution via ``gpu.snapshot()/delta()``)."""
+    mirrored TransferStats — and a slice-local :class:`_MirrorGpuReport`
+    roofline ledger whose increments forward to the parent's ``gpu``,
+    so global totals keep accumulating while
+    ``slice.gpu.snapshot()/delta()`` yields the *per-job* modeled
+    seconds of a mixed queue (DESIGN.md §10.4)."""
 
     def __init__(self, parent: ModeledGpuSystem, lease):
         check_lease_bounds(parent, lease, "lanes")
@@ -131,5 +167,5 @@ class GpuModelSlice(ModeledGpuSystem):
         super().__init__(dataclasses.replace(parent.config,
                                              n_cores=lease.n_cores))
         adopt_parent_session(self, parent)
-        self.gpu = parent.gpu
+        self.gpu = _MirrorGpuReport(parent.gpu)
         self._cost_cache = parent._cost_cache

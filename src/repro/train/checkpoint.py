@@ -36,6 +36,10 @@ def save(ckpt_dir: str, step: int, state: Any, *, keep_last: int = 3,
          extra_meta: Optional[dict] = None) -> str:
     """Atomic save of a pytree state.  Returns the checkpoint path."""
     os.makedirs(ckpt_dir, exist_ok=True)
+    # taken BEFORE this save publishes: the newest checkpoint a
+    # concurrent reader could have selected via latest_step() — pruning
+    # must never delete it (see _prune)
+    durable_before = latest_step(ckpt_dir)
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
@@ -71,7 +75,7 @@ def save(ckpt_dir: str, step: int, state: Any, *, keep_last: int = 3,
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)          # atomic publish
-    _prune(ckpt_dir, keep_last)
+    _prune(ckpt_dir, keep_last, durable_before)
     return final
 
 
@@ -85,10 +89,27 @@ def _keys_checksum(arrays: dict) -> str:
     return h.hexdigest()[:16]
 
 
-def _prune(ckpt_dir: str, keep_last: int) -> None:
+def _prune(ckpt_dir: str, keep_last: int,
+           durable_before: Optional[int] = None) -> None:
+    """Remove old checkpoints, keeping the newest ``keep_last``.
+
+    ``durable_before`` is the latest step that was durable BEFORE the
+    save that triggered this prune.  A concurrent restore picks its
+    checkpoint via ``latest_step()`` — which can only have returned
+    ``durable_before`` or older-but-still-newest at that moment — so
+    deleting it here would race the reader (keep_last=1 used to delete
+    the previous latest the instant a new save published, mid-read).
+    Only checkpoints *strictly older* than that latest durable save are
+    eligible for pruning; the previously-newest survives one extra save
+    cycle and is reclaimed by the next prune, when readers have had a
+    newer checkpoint to select the whole time.
+    """
     steps = sorted(d for d in os.listdir(ckpt_dir)
                    if d.startswith("step_") and not d.endswith(".tmp"))
     for d in steps[:-keep_last]:
+        if durable_before is not None \
+                and int(d.split("_")[1]) >= durable_before:
+            continue
         shutil.rmtree(os.path.join(ckpt_dir, d))
 
 
@@ -129,6 +150,32 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     steps = [int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
              if d.startswith("step_") and not d.endswith(".tmp")]
     return max(steps) if steps else None
+
+
+def restore_raw(ckpt_dir: str, step: int) -> tuple:
+    """Load a checkpoint WITHOUT a target tree: returns
+    ``(arrays, manifest)`` where ``arrays`` is a flat ``{key: ndarray}``
+    dict (exotic dtypes re-viewed per the manifest) and ``manifest`` the
+    saved metadata (including any ``extra_meta``).
+
+    This is the restore path for state whose shape is not known until
+    the checkpoint is read — the elastic job runtime's carry snapshots
+    (repro/elastic), where the checkpoint itself says which workload
+    carry it holds."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    exotic = manifest.get("exotic_dtypes", {})
+    if exotic:
+        import ml_dtypes  # noqa: F401 — registers the dtype names
+    arrays = {}
+    with np.load(os.path.join(path, "arrays.npz")) as data:
+        for key in data.files:
+            arr = data[key]
+            if key in exotic:
+                arr = arr.view(np.dtype(exotic[key]))
+            arrays[key] = arr
+    return arrays, manifest
 
 
 def restore(ckpt_dir: str, step: int, target_tree: Any,

@@ -1,0 +1,481 @@
+"""Elastic job runtime (DESIGN.md §11): chunk-boundary checkpoints,
+preemption/resume, cross-System migration, supervised retry under
+injected faults, allocator defragmentation, and crash-survivable
+manifest queues."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import elastic
+from repro.elastic import (FaultInjector, InjectedFault, injector_from_env,
+                           job_fingerprint, migration_ok)
+from repro.sched import PimScheduler, JobState, run_manifest
+from repro.systems import (ChunkTick, HostConfig, HostSystem,
+                           GpuModelConfig, ModeledGpuSystem, PimConfig,
+                           PimSystem)
+from repro.train import checkpoint as train_ckpt
+
+
+def _regression(n=96, f=6, seed=0):
+    rng = np.random.RandomState(seed)
+    X = rng.randn(n, f).astype(np.float32)
+    y = (X @ rng.randn(f) + 0.1 * rng.randn(n)).astype(np.float32)
+    return X, y
+
+
+def _blobs(n=96, f=4, seed=3):
+    rng = np.random.RandomState(seed)
+    centers = rng.randn(4, f).astype(np.float32) * 4
+    X = (centers[rng.randint(0, 4, n)]
+         + rng.randn(n, f).astype(np.float32))
+    return X.astype(np.float32), None
+
+
+def _pim_sched(cores=8, rank=4, **kw):
+    return PimScheduler(PimSystem(PimConfig(n_cores=cores)),
+                        rank_size=rank, **kw)
+
+
+def _reference(workload, data, **params):
+    s = _pim_sched()
+    h = s.submit(workload, data, **params)
+    s.drain()
+    assert h.state is JobState.DONE
+    return h
+
+
+# ---------------------------------------------------------------------------
+# train/checkpoint.py keep_last pruning race (satellite regression test)
+# ---------------------------------------------------------------------------
+
+class TestPruneRace:
+    def test_previously_latest_survives_one_save(self, tmp_path):
+        """keep_last=1 must never delete the checkpoint a concurrent
+        restore() could have selected via latest_step() before the new
+        save published: prune only strictly older than the latest
+        *durable* step."""
+        d = str(tmp_path / "ck")
+        train_ckpt.save(d, 1, {"w": np.ones(3)}, keep_last=1)
+        train_ckpt.save(d, 2, {"w": np.ones(3) * 2}, keep_last=1)
+        # step 1 was the durable latest when save(2) started -> kept
+        assert train_ckpt.latest_step(d) == 2
+        steps = sorted(int(x.split("_")[1]) for x in os.listdir(d)
+                       if x.startswith("step_"))
+        assert steps == [1, 2]
+        train_ckpt.save(d, 3, {"w": np.ones(3) * 3}, keep_last=1)
+        steps = sorted(int(x.split("_")[1]) for x in os.listdir(d)
+                       if x.startswith("step_"))
+        assert steps == [2, 3]          # 1 now strictly older -> pruned
+
+
+# ---------------------------------------------------------------------------
+# ChunkTick + trainer-level snapshots
+# ---------------------------------------------------------------------------
+
+class TestChunkTick:
+    def test_is_an_int(self):
+        t = ChunkTick(4, lambda: {"arrays": {}, "meta": {"iters": 4}})
+        assert isinstance(t, int) and t == 4 and t.resumable
+        assert t.snapshot()["meta"]["iters"] == 4
+
+    def test_plain_tick_not_resumable(self):
+        assert not ChunkTick(1).resumable
+
+
+# ---------------------------------------------------------------------------
+# Scheduler preempt/resume: bit-identity for every integer version
+# ---------------------------------------------------------------------------
+
+class TestPreemptResume:
+    @pytest.mark.parametrize("workload,version,params", [
+        ("linreg", "int32", {"n_iters": 24, "fuse_steps": 4}),
+        ("linreg", "hyb", {"n_iters": 24, "fuse_steps": 1}),
+        ("linreg", "int32", {"n_iters": 24, "fuse_steps": 1,
+                             "minibatch": 32}),
+        ("logreg", "int32", {"n_iters": 24, "fuse_steps": 4}),
+    ])
+    def test_gd_bit_identical(self, workload, version, params):
+        X, y = _regression()
+        if workload == "logreg":
+            y = (y > np.median(y)).astype(np.float32)
+        ref = _reference(workload, (X, y), version=version, **params)
+
+        s = _pim_sched()
+        h = s.submit(workload, (X, y), version=version, **params)
+        s.step(); s.step(); s.step()
+        h.preempt()
+        s.step()
+        assert h.state is JobState.PREEMPTED
+        assert h.snapshot is not None and h.snapshot_kind == "pim"
+        mid_iters = h.iters
+        assert 0 < mid_iters < params["n_iters"]
+        # resume on a FRESH scheduler (fresh lease, fresh System)
+        s2 = _pim_sched()
+        s2.resume(h, data=(X, y))
+        s2.drain()
+        assert h.state is JobState.DONE and h.iters == params["n_iters"]
+        assert h.preemptions == 1
+        np.testing.assert_array_equal(np.asarray(h.result.model.w),
+                                      np.asarray(ref.result.model.w))
+        np.testing.assert_array_equal(np.asarray(h.result.model.b),
+                                      np.asarray(ref.result.model.b))
+
+    @pytest.mark.parametrize("fuse", [1, 4])
+    def test_kmeans_bit_identical_across_restarts(self, fuse):
+        X, _ = _blobs()
+        # tol=0 keeps Lloyd's running to max_iter, so the preempt always
+        # lands mid-fit (well-separated blobs otherwise converge in 2-3)
+        params = dict(n_clusters=4, max_iter=12, n_init=2, seed=1,
+                      tol=0.0, fuse_steps=fuse)
+        ref = _reference("kmeans", (X, None), version="int16", **params)
+
+        s = _pim_sched()
+        h = s.submit("kmeans", (X, None), version="int16", **params)
+        for _ in range(3):
+            s.step()
+        h.preempt()
+        s.step()
+        assert h.state is JobState.PREEMPTED
+        s2 = _pim_sched()
+        s2.resume(h, data=(X, None))
+        s2.drain()
+        assert h.state is JobState.DONE
+        rm, hm = ref.result.model, h.result.model
+        np.testing.assert_array_equal(hm.centroids, rm.centroids)
+        np.testing.assert_array_equal(hm.labels, rm.labels)
+        assert hm.inertia == rm.inertia and hm.n_iters == rm.n_iters
+
+    def test_non_resumable_workload_restarts(self):
+        X, y = _regression()
+        y = (y > np.median(y)).astype(np.int32)
+        s = _pim_sched()
+        h = s.submit("dtree", (X, y), max_depth=4)
+        s.step(); s.step()
+        h.preempt()
+        s.step()
+        assert h.state is JobState.PREEMPTED and h.snapshot is None
+        s.resume(h)
+        s.drain()
+        assert h.state is JobState.DONE     # restarted from scratch
+
+
+# ---------------------------------------------------------------------------
+# Cross-System migration
+# ---------------------------------------------------------------------------
+
+class TestMigration:
+    def test_matrix(self):
+        assert migration_ok("pim", "host", "fp32")
+        assert migration_ok("host", "gpu-model", "int32")
+        assert migration_ok("pim", "pim", "int16")
+        assert not migration_ok("pim", "host", "int32")
+        assert not migration_ok("host", "pim", "int16")
+
+    def _mixed(self):
+        return PimScheduler({"pim": PimSystem(PimConfig(n_cores=8)),
+                             "host": HostSystem(HostConfig(n_cores=4))},
+                            rank_size=4)
+
+    def test_fp32_pim_to_host_tolerance(self):
+        X, y = _regression()
+        s = self._mixed()
+        h = s.submit("linreg", (X, y), version="fp32", n_iters=30,
+                     target="pim")
+        s.step(); s.step()
+        h.preempt(); s.step()
+        assert h.state is JobState.PREEMPTED
+        s.resume(h, target="host")
+        s.drain()
+        assert h.state is JobState.DONE and h.target == "host"
+        ref = PimScheduler(HostSystem(HostConfig(n_cores=4)))
+        r = ref.submit("linreg", (X, y), version="fp32", n_iters=30)
+        ref.drain()
+        np.testing.assert_allclose(np.asarray(h.result.model.w),
+                                   np.asarray(r.result.model.w),
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_integer_migration_rejected_then_resumes_home(self):
+        X, y = _regression()
+        s = self._mixed()
+        h = s.submit("linreg", (X, y), version="int32", n_iters=20,
+                     target="pim")
+        s.step()
+        h.preempt(); s.step()
+        with pytest.raises(ValueError, match="fixed-point"):
+            s.resume(h, target="host")
+        s.resume(h, target="pim")       # like-kind resume still works
+        s.drain()
+        assert h.state is JobState.DONE
+
+
+# ---------------------------------------------------------------------------
+# Priority preemption + defragmentation
+# ---------------------------------------------------------------------------
+
+class TestPreemptiveAdmission:
+    def test_high_priority_evicts_and_everyone_finishes(self):
+        X, y = _regression()
+        s = _pim_sched(preemptive=True)
+        low1 = s.submit("linreg", (X, y), version="int32", n_iters=30,
+                        priority=0, name="low1")
+        low2 = s.submit("linreg", (X, y), version="int32", n_iters=30,
+                        priority=0, name="low2")
+        s.step()
+        assert low1.state is JobState.RUNNING
+        assert low2.state is JobState.RUNNING
+        hi = s.submit("linreg", (X, y), version="int32", n_iters=10,
+                      priority=5, name="hi")
+        s.step()
+        assert hi.state is JobState.RUNNING
+        assert low1.preemptions + low2.preemptions == 1
+        s.drain()
+        assert all(h.state is JobState.DONE for h in (low1, low2, hi))
+        ref = _reference("linreg", (X, y), version="int32", n_iters=30)
+        evicted = low2 if low2.preemptions else low1
+        np.testing.assert_array_equal(np.asarray(evicted.result.model.w),
+                                      np.asarray(ref.result.model.w))
+
+    def test_non_preemptive_never_evicts(self):
+        X, y = _regression()
+        s = _pim_sched(preemptive=False)
+        low = s.submit("linreg", (X, y), version="int32", n_iters=10,
+                       n_cores=8)
+        s.step()
+        hi = s.submit("linreg", (X, y), version="int32", n_iters=10,
+                      priority=5)
+        s.step()
+        assert hi.state is JobState.QUEUED and low.preemptions == 0
+        s.drain()
+
+    def test_defragment_coalesces_holes(self):
+        X, y = _regression()
+        s = _pim_sched(cores=16, rank=4)
+        hs = [s.submit("linreg", (X, y), version="int32", n_iters=60,
+                       name=f"j{i}") for i in range(4)]
+        s.step()                       # leases [0,4) [4,8) [8,12) [12,16)
+        hs[1].cancel(); hs[3].cancel()
+        s.step()                       # holes at [4,8) and [12,16)
+        assert s.fragmentation().external_fragmentation > 0
+        moved = s.defragment()
+        assert moved == 2
+        s.step()                       # survivors re-admitted, packed
+        assert s.fragmentation().external_fragmentation == 0.0
+        s.drain()
+        assert hs[0].state is JobState.DONE
+        assert hs[2].state is JobState.DONE
+        ref = _reference("linreg", (X, y), version="int32", n_iters=60)
+        np.testing.assert_array_equal(np.asarray(hs[0].result.model.w),
+                                      np.asarray(ref.result.model.w))
+        np.testing.assert_array_equal(np.asarray(hs[2].result.model.w),
+                                      np.asarray(ref.result.model.w))
+
+    @pytest.mark.slow
+    def test_churn(self):
+        """Sustained submit/preempt/cancel/defragment churn: every job
+        still terminates, no lease leaks, allocator ends empty."""
+        X, y = _regression()
+        s = _pim_sched(cores=16, rank=4, preemptive=True)
+        handles = []
+        for wave in range(6):
+            for i in range(3):
+                handles.append(s.submit(
+                    "linreg", (X, y), version="int32", n_iters=20,
+                    priority=wave % 3, name=f"w{wave}j{i}"))
+            for _ in range(4):
+                s.step()
+            if wave % 2:
+                for h in handles:
+                    if h.state is JobState.RUNNING:
+                        h.preempt()
+                        break
+                s.step()
+                for h in handles:
+                    if h.state is JobState.PREEMPTED:
+                        s.resume(h)
+            s.defragment()
+        s.drain()
+        assert all(h.state in (JobState.DONE, JobState.CANCELLED)
+                   for h in handles)
+        frag = s.fragmentation()
+        assert frag.used_cores == 0
+
+
+# ---------------------------------------------------------------------------
+# Fault injection + supervised retry
+# ---------------------------------------------------------------------------
+
+class TestFaultInjection:
+    def test_parse(self):
+        inj = FaultInjector.parse("job*:3, other:5:2")
+        assert len(inj.plans) == 2
+        assert inj("jobA", 3) is True          # fires once
+        assert inj("jobA", 3) is False         # count exhausted
+        assert inj("other", 5) and inj("other", 5) and not inj("other", 5)
+        assert inj("unrelated", 3) is False
+
+    def test_env(self, monkeypatch):
+        monkeypatch.setenv(elastic.ENV_VAR, "x:1")
+        inj = injector_from_env()
+        assert inj is not None and inj("x", 1)
+        monkeypatch.delenv(elastic.ENV_VAR)
+        assert injector_from_env() is None
+
+    def test_recovery_within_budget_bit_identical(self):
+        X, y = _regression()
+        ref = _reference("linreg", (X, y), version="int32", n_iters=20,
+                         fuse_steps=2)
+        inj = FaultInjector.parse("faulty:3")
+        s = _pim_sched(fault_injector=inj)
+        h = s.submit("linreg", (X, y), version="int32", n_iters=20,
+                     fuse_steps=2, retry_budget=2, name="faulty")
+        s.drain()
+        assert h.state is JobState.DONE
+        assert h.recoveries == 1               # the fault is on record
+        assert isinstance(h.error, InjectedFault)
+        np.testing.assert_array_equal(np.asarray(h.result.model.w),
+                                      np.asarray(ref.result.model.w))
+        assert s.stats()["recoveries"] == 1
+
+    def test_budget_exhaustion_fails(self):
+        X, y = _regression()
+        inj = FaultInjector()
+        inj.plan("dies", 2, count=10)
+        s = _pim_sched(fault_injector=inj)
+        h = s.submit("linreg", (X, y), version="int32", n_iters=20,
+                     retry_budget=1, name="dies")
+        s.drain()
+        assert h.state is JobState.FAILED
+        assert h.recoveries == 1
+        assert isinstance(h.error, InjectedFault)
+
+    def test_zero_budget_fails_immediately(self):
+        X, y = _regression()
+        s = _pim_sched(fault_injector=FaultInjector.parse("j:1"))
+        h = s.submit("linreg", (X, y), version="int32", n_iters=10,
+                     name="j")
+        s.drain()
+        assert h.state is JobState.FAILED and h.recoveries == 0
+
+
+# ---------------------------------------------------------------------------
+# Satellites: straggler stats + per-job modeled-GPU attribution
+# ---------------------------------------------------------------------------
+
+class TestObservability:
+    def test_straggler_stats_exposed(self):
+        X, y = _regression()
+        s = _pim_sched()
+        s.submit("linreg", (X, y), version="int32", n_iters=10)
+        s.drain()
+        stats = s.stats()
+        assert "straggler_flags" in stats
+        assert stats["straggler_flags"] >= 0
+
+    def test_gpu_slice_attribution(self):
+        X, y = _regression()
+        s = PimScheduler(ModeledGpuSystem(GpuModelConfig(n_cores=8)),
+                         rank_size=4)
+        h1 = s.submit("linreg", (X, y), version="fp32", n_iters=16,
+                      fuse_steps=4)
+        h2 = s.submit("kmeans", (X, None), version="fp32", n_clusters=4,
+                      max_iter=16, fuse_steps=4)
+        s.drain()
+        assert h1.gpu is not None and h2.gpu is not None
+        assert h1.gpu.modeled_seconds > 0 and h2.gpu.modeled_seconds > 0
+        total = s.system.gpu
+        assert h1.gpu.launches + h2.gpu.launches <= total.launches
+        assert (h1.gpu.modeled_seconds + h2.gpu.modeled_seconds
+                <= total.modeled_seconds + 1e-12)
+
+
+# ---------------------------------------------------------------------------
+# Durable elastic checkpoints + crash-survivable queues
+# ---------------------------------------------------------------------------
+
+class TestDurability:
+    def test_snapshot_disk_roundtrip(self, tmp_path):
+        X, y = _regression()
+        s = _pim_sched(checkpoint_dir=str(tmp_path), checkpoint_every=2)
+        h = s.submit("linreg", (X, y), version="int32", n_iters=20,
+                     fuse_steps=2, minibatch=32, name="rt")
+        for _ in range(4):
+            s.step()
+        d = elastic.job_dir(str(tmp_path), "rt")
+        assert elastic.has_checkpoint(d)
+        snap, env = elastic.load_snapshot(d)
+        assert env["workload"] == "linreg" and env["version"] == "int32"
+        assert env["fingerprint"] == h.fingerprint
+        assert env["system_kind"] == "pim"
+        assert "rng_mt_keys" in snap["arrays"]      # exact stream resume
+        assert snap["meta"]["iters"] == env["iters"] > 0
+
+    def test_fingerprint_mismatch_refused(self, tmp_path):
+        X, y = _regression()
+        s = _pim_sched(checkpoint_dir=str(tmp_path))
+        h = s.submit("linreg", (X, y), version="int32", n_iters=12,
+                     name="fp")
+        for _ in range(3):
+            s.step()
+        snap, env = elastic.load_snapshot(
+            elastic.job_dir(str(tmp_path), "fp"))
+        X2 = X + 1.0                               # different dataset
+        s2 = _pim_sched(checkpoint_dir=str(tmp_path))
+        h2 = s2.submit("linreg", (X2, y), version="int32", n_iters=12,
+                       name="fp")
+        with pytest.raises(ValueError, match="fingerprint"):
+            s2.attach_resume_state(h2, snap, env)
+
+    def test_fingerprint_format(self):
+        X, y = _regression()
+        fp = job_fingerprint("linreg", "int32", {"n_iters": 5}, X, y)
+        a, b = fp.split("-")
+        assert len(a) == 32 and len(b) == 32
+
+    def test_killed_queue_resume_roundtrip(self, tmp_path):
+        """The acceptance loop: run part of a manifest, abandon it,
+        re-run with resume=True — the queue completes, finished work is
+        not redone, unfinished work continues from its snapshot and
+        stays bit-identical to an uninterrupted run."""
+        manifest = {
+            "system": {"cores": 16, "rank_size": 4},
+            "datasets": {"lin": {"kind": "linear", "samples": 256,
+                                 "features": 8, "seed": 0}},
+            "jobs": [
+                {"workload": "linreg", "dataset": "lin", "cores": 4,
+                 "name": "quick", "version": "int32",
+                 "params": {"n_iters": 6, "fuse_steps": 2}},
+                {"workload": "linreg", "dataset": "lin", "cores": 4,
+                 "name": "long", "version": "int32",
+                 "params": {"n_iters": 60, "fuse_steps": 2}},
+            ],
+        }
+        ck = str(tmp_path / "ck")
+        sched, handles = run_manifest(manifest, drain=False,
+                                      checkpoint_dir=ck)
+        for _ in range(6):
+            sched.step()
+        by_name = {h.name: h for h in handles}
+        assert by_name["quick"].state is JobState.DONE
+        assert by_name["long"].state is JobState.RUNNING
+        del sched                               # the "kill"
+
+        q = json.load(open(os.path.join(ck, "queue.json")))
+        assert {r["name"]: r["state"] for r in q["jobs"]} == {
+            "quick": "done", "long": "running"}
+
+        sched2, handles2 = run_manifest(manifest, checkpoint_dir=ck,
+                                        resume=True)
+        by_name2 = {h.name: h for h in handles2}
+        assert by_name2["quick"].state is JobState.DONE
+        assert by_name2["quick"].restored        # not re-run
+        assert by_name2["quick"].steps == by_name["quick"].steps
+        long2 = by_name2["long"]
+        assert long2.state is JobState.DONE and not long2.restored
+        assert long2.iters == 60
+
+        ref_sched, ref_handles = run_manifest(manifest)
+        ref = {h.name: h for h in ref_handles}["long"]
+        np.testing.assert_array_equal(np.asarray(long2.result.model.w),
+                                      np.asarray(ref.result.model.w))

@@ -3,10 +3,13 @@
 # figure reproductions as CSV; `make jobs` runs the scheduler demo;
 # `make elastic-demo` walks preempt/migrate/fault/crash-resume;
 # `make compare` runs the Fig. 13-17 PIM/host/gpu-model comparison on
-# tiny shapes and records benchmarks/out/compare.json.
+# tiny shapes and records benchmarks/out/compare.json;
+# `make placement-bench` runs the contention-aware vs first-fit
+# placement comparison and records benchmarks/out/placement_bench.json.
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check test bench bench-fusion compare quickstart jobs elastic-demo
+.PHONY: check test bench bench-fusion compare placement-bench quickstart \
+	jobs elastic-demo
 
 check:
 	./scripts/ci.sh
@@ -22,6 +25,9 @@ bench-fusion:
 
 compare:
 	PYTHONPATH=$(PYTHONPATH) python -m repro.launch.compare --tiny
+
+placement-bench:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.placement_bench
 
 quickstart:
 	PYTHONPATH=$(PYTHONPATH) python examples/quickstart.py

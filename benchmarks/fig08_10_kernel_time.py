@@ -1,16 +1,16 @@
 """Paper Fig. 8 / 9 / 10: single-PIM-core kernel time vs # PIM threads.
 
-Two columns per point: the calibrated DPU cost model (reproduces the
-paper's measured saturation-at-11-threads shape and version ratios) and —
-for the thread-independent part — the measured wall time of our JAX
-kernels on CPU for the same per-core workload (2048 x 16 for LIN/LOG,
-600k x 16 DTR, 100k x 16 KME).
+Two columns per point: the calibrated hierarchical cost model's per-DPU
+leaf (reproduces the paper's measured saturation-at-11-threads shape and
+version ratios) and — for the thread-independent part — the measured
+wall time of our JAX kernels on CPU for the same per-core workload
+(2048 x 16 for LIN/LOG, 600k x 16 DTR, 100k x 16 KME).
 """
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.pim import DpuCostModel
+from repro.systems.topology import HierarchicalCostModel
 from .common import row
 
 THREADS = (1, 2, 4, 8, 11, 16, 24)
@@ -27,7 +27,7 @@ PAPER_RATIOS = {
 
 def run():
     rows = []
-    m = DpuCostModel()
+    m = HierarchicalCostModel.for_cores(1)   # Fig. 8-10 is one PIM core
 
     def sec(w, v, t):
         n = {"lin": 2048, "log": 2048, "dtr": 600_000, "kme": 100_000}[w]

@@ -4,15 +4,17 @@ scaling, 256-2048 cores).
 Weak scaling additionally runs our real JAX PIM implementation (vmap
 backend) at each core count and reports the measured comm fraction from
 the PimSystem byte counters against the paper's <7% claim.  Strong
-scaling at 256-2048 cores uses the calibrated DPU cost model (the paper's
-own hardware regime) and reports the kernel-time speedup vs 256 cores
-(paper: 6.37x-7.98x at 2048).
+scaling at 256-2048 cores uses the hierarchical cost model (per-DPU
+kernel + rank-serialized transfer legs, DESIGN.md §12) at the paper's
+own hardware scale and reports the step-time speedup vs 256 cores —
+the serialized legs are what lands the 2048-core point inside the
+paper's measured 6.37x-7.98x band instead of the flat model's 8.0x.
 """
 from __future__ import annotations
 
 import time
 
-from repro.api import DpuCostModel, PimConfig, PimSystem
+from repro.api import HierarchicalCostModel, PimConfig, PimSystem
 from repro.core import linreg
 from repro.data.synthetic import make_linear_dataset
 from .common import row
@@ -38,26 +40,27 @@ def run():
         rows.append(row(f"fig11_lin_int32_weak_c{cores}_ms", dt * 1e3,
                         f"comm_bytes_per_iter={comm_bytes // iters}"))
 
-    # comm fraction from the DPU cost model + modeled transfer time
-    m = DpuCostModel()
+    # comm fraction: the hierarchical model's own rank-serialized legs
+    # over its per-DPU kernel term (no more ad-hoc aggregate-link math)
     for cores in WEAK_CORES:
+        m = HierarchicalCostModel.for_cores(cores)
         kern = m.workload_seconds("lin", "int32", cores * PER_CORE, 16,
-                                  cores, 16) * iters
-        # per-iteration: broadcast w (17 f32) + partials (17 f32/core),
-        # over a ~20 GB/s host<->DIMM aggregate link
-        comm = iters * (17 * 4 * cores * 2) / 20e9
-        frac = comm / (kern + comm)
+                                  cores, 16)
+        step = m.step_seconds("lin", "int32", cores * PER_CORE, 16,
+                              n_cores=cores, n_threads=16)
+        frac = (step - kern) / step
         rows.append(row(f"fig11_comm_fraction_c{cores}", frac * 100,
                         "paper=<7pct"))
 
-    # -- strong scaling: DPU cost model at paper scale -----------------------
+    # -- strong scaling: hierarchical model at paper scale -------------------
     base = {}
     for w, v, n in (("lin", "int32", 6_291_456),
                     ("log", "int32_lut_wram", 6_291_456),
                     ("dtr", "fp32", 153_600_000),
                     ("kme", "int16", 25_600_000)):
         for cores in STRONG_CORES:
-            t = m.workload_seconds(w, v, n, 16, cores, 16)
+            m = HierarchicalCostModel.for_cores(cores)
+            t = m.step_seconds(w, v, n, 16, n_cores=cores, n_threads=16)
             if cores == 256:
                 base[w] = t
             rows.append(row(f"fig12_{w}_strong_c{cores}_model_ms", t * 1e3,

@@ -3,8 +3,9 @@
 Every row is produced through the backend-portable ``System`` API
 (DESIGN.md §10): the SAME ``Workload`` objects fit on
 
-  * a ``PimSystem`` (paper-version numerics; kernel time from the
-    calibrated ``DpuCostModel`` at the paper's best core count),
+  * a ``PimSystem`` (paper-version numerics; step time from the
+    calibrated ``HierarchicalCostModel`` — per-DPU kernel plus
+    rank-serialized transfer legs — at the paper's best core count),
   * a ``HostSystem`` (the processor-centric fp32 baseline, measured
     wall-clock in this container — the deleted per-trainer
     ``train_cpu_baseline`` loops became this target), and
@@ -26,7 +27,7 @@ from __future__ import annotations
 
 import time
 
-from repro.api import DpuCostModel, get_workload, make_system
+from repro.api import HierarchicalCostModel, get_workload, make_system
 from repro.core.metrics import (accuracy, adjusted_rand_index,
                                 training_error_rate)
 from repro.data.synthetic import (make_blobs, make_classification,
@@ -77,9 +78,19 @@ def _gpu_iter_seconds(workload: str, X, y, iters: int,
         * launches / max(iters, 1)
 
 
+def _pim_step_seconds(workload: str, version: str, n: int, f: int,
+                      cores: int, k: int = 16) -> float:
+    """One modeled PIM training pass at paper scale: per-DPU kernel +
+    the rank-serialized broadcast/gather legs (UPMEM ranks are 64 DPUs
+    regardless of the allocation size, so the tree is built with
+    dpus_per_rank=64 rather than the divisor heuristic)."""
+    m = HierarchicalCostModel.for_cores(cores, dpus_per_rank=64)
+    return m.step_seconds(workload, version, n, f, n_cores=cores,
+                          n_threads=16, k=k)
+
+
 def run():
     rows = []
-    m = DpuCostModel()
     # ---- LIN on a SUSY-shaped dataset (5M x 18 -> 500k x 18 subsample;
     # times scale linearly in n, factor noted) --------------------------------
     scale = 10
@@ -87,7 +98,7 @@ def run():
     iters = 10
     cpu_lin = _host_fit_seconds("linreg", X, y, n_iters=iters) \
         / iters * scale
-    pim_lin = m.workload_seconds("lin", "bui", 5_000_000, 18, 2524, 16)
+    pim_lin = _pim_step_seconds("lin", "bui", 5_000_000, 18, 2524)
     gpu_lin = _gpu_iter_seconds("linreg", X, y, iters, row_scale=scale,
                                 n_iters=iters)
     rows.append(row("fig13_lin_cpu_measured_ms_per_iter", cpu_lin * 1e3,
@@ -103,7 +114,7 @@ def run():
     # ---- LOG on a Skin-shaped dataset (245k x 3) ---------------------------
     Xs, ys, _ = make_linear_dataset(245_057, 3, seed=1)
     cpu_log = _host_fit_seconds("logreg", Xs, ys, n_iters=iters) / iters
-    pim_log = m.workload_seconds("log", "bui_lut", 245_057, 3, 256, 16)
+    pim_log = _pim_step_seconds("log", "bui_lut", 245_057, 3, 256)
     gpu_log = _gpu_iter_seconds("logreg", Xs, ys, iters, n_iters=iters)
     rows.append(row("fig14_log_cpu_measured_ms_per_iter", cpu_log * 1e3,
                     "host_system_fp32_exact_sigmoid"))
@@ -129,7 +140,7 @@ def run():
     tcpu = dtree_wl.fit(host.put(Xh, yh),
                         dtree_wl.spec("fp32", max_depth=10))
     cpu_dtr = (time.perf_counter() - t0) * scale
-    pim_dtr = m.workload_seconds("dtr", "fp32", 11_000_000, 28, 1024, 16) \
+    pim_dtr = _pim_step_seconds("dtr", "fp32", 11_000_000, 28, 1024) \
         * 2 * n_nodes  # split-evaluate passes across the tree build
     rows.append(row("fig15a_dtr_cpu_measured_s", cpu_dtr,
                     f"subsample_x{scale};host_system"))
@@ -154,8 +165,8 @@ def run():
                     kme_wl.spec("fp32", n_clusters=16, seed=0,
                                 max_iter=40))
     cpu_kme = (time.perf_counter() - t0) * scale
-    pim_kme = m.workload_seconds("kme", "int16", 11_000_000, 28, 2524,
-                                 16) * rk.attributes["n_iter_"]
+    pim_kme = _pim_step_seconds("kme", "int16", 11_000_000, 28, 2524) \
+        * rk.attributes["n_iter_"]
     rows.append(row("fig15b_kme_cpu_measured_s", cpu_kme,
                     f"subsample_x{scale};host_system_fp32"))
     rows.append(row("fig15b_kme_pim_model_s", pim_kme,

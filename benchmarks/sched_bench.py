@@ -11,8 +11,12 @@ learning-rate sweep of LIN gradient descent:
 
 Reports makespan (wall seconds for all K fits), throughput (jobs/s), and
 the accuracy check that the fused sweep's coefficients match serial
-bit-for-bit (integer GD is exact).  Results are also written to
-``benchmarks/out/sched_bench.json`` so the makespan claim is recorded.
+bit-for-bit (integer GD is exact).  Each record also carries the
+hierarchical cost model's modeled DPU seconds for one job and for the
+serial K-job baseline (DESIGN.md §12) — what the same sweep would cost
+on the paper's hardware rather than this container.  Results are also
+written to ``benchmarks/out/sched_bench.json`` so the makespan claim is
+recorded.
 
   PYTHONPATH=src python -m benchmarks.sched_bench
 """
@@ -25,7 +29,8 @@ import time
 import numpy as np
 
 from benchmarks.common import row
-from repro.api import PimConfig, PimSystem, make_estimator
+from repro.api import (HierarchicalCostModel, PimConfig, PimSystem,
+                       make_estimator)
 from repro.data.synthetic import make_linear_dataset
 from repro.sched import PimScheduler
 
@@ -89,6 +94,11 @@ def run():
 
     exact_fused = all(np.array_equal(a, b) for a, b in zip(ref, fused))
     exact_gang = all(np.array_equal(a, b) for a, b in zip(ref, gang))
+    # what one job / the serial baseline costs on the modeled machine
+    model = HierarchicalCostModel.for_cores(CORES)
+    modeled_job_s = model.job_seconds("lin", VERSION, N_SAMPLES,
+                                      N_FEATURES, N_ITERS,
+                                      n_cores=CORES, n_threads=16)
     result = {
         "k_jobs": k,
         "n_iters": N_ITERS,
@@ -102,6 +112,8 @@ def run():
         "fused_speedup_over_serial": t_serial / t_fused,
         "fused_matches_serial_bitwise": exact_fused,
         "gang_matches_serial_bitwise": exact_gang,
+        "modeled_job_dpu_s": modeled_job_s,
+        "modeled_serial_dpu_s": k * modeled_job_s,
     }
     os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
     with open(OUT_PATH, "w") as fh:

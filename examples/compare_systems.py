@@ -22,7 +22,7 @@ import time
 
 sys.path.insert(0, "src")
 
-from repro.api import DpuCostModel, get_workload, make_system
+from repro.api import HierarchicalCostModel, get_workload, make_system
 from repro.data.synthetic import make_linear_dataset
 
 
@@ -35,10 +35,12 @@ def main():
     pim = make_system("pim", n_cores=16)
     spec = wl.spec("int32", n_iters=iters)
     result = wl.fit(pim.put(X, y), spec)
-    dpu_s = iters * DpuCostModel().workload_seconds(
-        "lin", "int32", n, f, pim.config.n_cores, pim.config.n_threads)
+    model = HierarchicalCostModel(pim.topology)
+    dpu_s = iters * model.step_seconds(
+        "lin", "int32", n, f, n_cores=pim.config.n_cores,
+        n_threads=pim.config.n_threads)
     print(f"pim       int32  R^2={wl.score(result, X, y):.4f}  "
-          f"modeled DPU {dpu_s * 1e3:.2f} ms  "
+          f"modeled DPU {dpu_s * 1e3:.2f} ms (kernel + rank legs)  "
           f"cpu->pim {pim.stats.cpu_to_pim:,} B, "
           f"pim->cpu {pim.stats.pim_to_cpu:,} B "
           f"({pim.stats.kernel_launches} launches)")

@@ -7,10 +7,12 @@
 # migration matrix, fault injection, crash-resume; sustained churn is
 # @slow), the step-fusion engine (fused-vs-serial bit parity, the
 # one-launch-per-chunk assertion), the backend-portable System protocol
-# (PIM/host/modeled-GPU parity, mixed-target scheduling), and the
-# legacy deprecation surface; large-shape kernel cases, large-K queues,
-# fused-sweep execution, long fused runs, and the full compare driver
-# are marked @slow.
+# (PIM/host/modeled-GPU parity, mixed-target scheduling), the
+# hierarchical topology/cost model + contention-aware placement
+# (calibration ratio checks are fast; the large Fig. 12 sweeps are
+# @slow), and the legacy deprecation surface; large-shape kernel
+# cases, large-K queues, fused-sweep execution, long fused runs, and
+# the full compare driver are marked @slow.
 # The LM-stack breadth (arch smoke matrix, serving, multi-device
 # subprocess equivalence) and the quality reproduction run in the full
 # tier-1 suite: `make test` / plain pytest.
@@ -34,4 +36,5 @@ exec python -m pytest -q -m "not slow" \
     tests/test_sgd_and_loader.py \
     tests/test_step_fusion.py \
     tests/test_systems.py \
+    tests/test_topology.py \
     "$@"

@@ -30,10 +30,11 @@ Typical session::
         est.fit(ds)
 """
 from ..systems import (DpuCostModel, FabricReduce, GpuModelConfig,
-                       HierarchicalReduce, HostConfig, HostReduce,
+                       HierarchicalCostModel, HierarchicalReduce,
+                       HostConfig, HostReduce,
                        HostSystem, ModeledGpuSystem, PimConfig, PimSystem,
-                       ReduceStrategy, ReduceVia, System, TransferStats,
-                       make_system, resolve_reduce_strategy)
+                       PimTopology, ReduceStrategy, ReduceVia, System,
+                       TransferStats, make_system, resolve_reduce_strategy)
 from .dataset import PimDataset
 from .estimator import PimEstimator, make_estimator
 from .registry import (FitResult, TrainerSpec, Workload, get_workload,
@@ -57,9 +58,11 @@ def __getattr__(name: str):
 
 __all__ = [
     "DpuCostModel", "FabricReduce", "FitResult", "GpuModelConfig",
-    "HierarchicalReduce", "HostConfig", "HostReduce", "HostSystem",
+    "HierarchicalCostModel", "HierarchicalReduce", "HostConfig",
+    "HostReduce", "HostSystem",
     "ModeledGpuSystem", "PimConfig", "PimDataset", "PimEstimator",
-    "PimSystem", "ReduceStrategy", "ReduceVia", "System", "TrainerSpec",
+    "PimSystem", "PimTopology", "ReduceStrategy", "ReduceVia", "System",
+    "TrainerSpec",
     "TransferStats", "Workload", "get_workload", "kmeans_sq_distances",
     "list_workloads", "make_estimator", "make_system",
     "register_workload", "resolve_reduce_strategy",

@@ -6,8 +6,9 @@ fits on all three execution targets:
 
   pim        the paper's best PIM version (INT32/BUI ladder for GD,
              int16 Lloyd's), wall-clock measured on the semantic model
-             and DPU seconds from the calibrated cost model
-             (``DpuCostModel`` — Fig. 8-12 calibration);
+             and DPU seconds from the hierarchical cost model
+             (``HierarchicalCostModel`` — Fig. 8-12 calibration, with
+             rank-serialized broadcast/gather legs, DESIGN.md §12);
   host       the processor-centric fp32 baseline, wall-clock measured
              in this container (replacing the deleted ad-hoc
              ``train_cpu_baseline`` loops), DRAM traffic counted;
@@ -30,7 +31,7 @@ import json
 import os
 import time
 
-from repro.api import DpuCostModel, get_workload, make_system
+from repro.api import HierarchicalCostModel, get_workload, make_system
 from repro.data.synthetic import (make_blobs, make_classification,
                                   make_linear_dataset)
 
@@ -99,7 +100,6 @@ def _iterations(workload: str, result, params: dict) -> int:
 def run_compare(tiny: bool = False, cores: int = 16,
                 seed: int = 0) -> dict:
     """Fit all four workloads on all three systems; return the record."""
-    model = DpuCostModel()
     rows = []
     for plan in PLAN:
         name = plan["workload"]
@@ -137,10 +137,18 @@ def run_compare(tiny: bool = False, cores: int = 16,
             row["iterations"] = iters
             if kind == "pim":
                 cost_wl, cost_ver = plan["cost"]
-                row["modeled_s"] = iters * model.workload_seconds(
+                model = HierarchicalCostModel(system.topology)
+                kern = params.get("n_clusters", 16)
+                kernel_s = iters * model.workload_seconds(
                     cost_wl, cost_ver, n, f, cores,
-                    system.config.n_threads,
-                    k=params.get("n_clusters", 16))
+                    system.config.n_threads, k=kern)
+                row["modeled_s"] = iters * model.step_seconds(
+                    cost_wl, cost_ver, n, f, n_cores=cores,
+                    n_threads=system.config.n_threads, k=kern)
+                # the topology split: per-DPU kernel vs the rank-
+                # serialized host-link legs (DESIGN.md §12)
+                row["modeled_kernel_s"] = kernel_s
+                row["modeled_transfer_s"] = row["modeled_s"] - kernel_s
             elif kind == "gpu-model":
                 gpu = system.gpu.delta(gpu_snap)
                 row["modeled_s"] = gpu.modeled_seconds

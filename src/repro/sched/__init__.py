@@ -15,16 +15,18 @@ across leases/schedulers/Systems, survive injected faults via
 supervised retry, and a killed queue restarts from its durable
 ``queue.json`` + per-job snapshots (``pim_jobs --resume``).
 """
-from .allocator import (DEFAULT_RANK_SIZE, BankAllocator, BankLease,
-                        FragmentationStats, PimSlice, default_rank_size)
+from .allocator import (DEFAULT_RANK_SIZE, PLACEMENT_POLICIES, BankAllocator,
+                        BankLease, FragmentationStats, PimSlice,
+                        default_rank_size)
 from .gang import FUSABLE_WORKLOADS, FusedGdSweep, fuse_key, plan_fusion
-from .manifest import job_report, load_manifest, run_manifest
+from .manifest import dataset_shape, job_report, load_manifest, run_manifest
 from .scheduler import JobHandle, JobState, PimScheduler
 
 __all__ = [
     "BankAllocator", "BankLease", "DEFAULT_RANK_SIZE",
     "FUSABLE_WORKLOADS", "FragmentationStats", "FusedGdSweep",
-    "JobHandle", "JobState", "PimScheduler", "PimSlice",
+    "JobHandle", "JobState", "PLACEMENT_POLICIES", "PimScheduler",
+    "PimSlice", "dataset_shape",
     "default_rank_size", "fuse_key", "job_report", "load_manifest",
     "plan_fusion", "run_manifest",
 ]

@@ -18,44 +18,53 @@ accounting keeps working while per-job deltas stay attributable.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 from ..systems import PimSystem, TransferStats
 from ..systems.base import _MirrorStats
+from ..systems.topology import (DEFAULT_DPUS_PER_RANK, PimTopology,
+                                default_rank_size)
 
 #: UPMEM hands workloads DPUs in ranks of 64 (paper §2.2).
-DEFAULT_RANK_SIZE = 64
+#: (``default_rank_size`` moved to repro.systems.topology so the cost
+#: model's rank tree and the allocator's carving granularity share one
+#: definition; re-exported here for compatibility.)
+DEFAULT_RANK_SIZE = DEFAULT_DPUS_PER_RANK
 
-
-def default_rank_size(n_cores: int) -> int:
-    """The auto-selected rank: the largest divisor of ``n_cores`` not
-    exceeding the UPMEM rank of 64.  This is what "default 64, clamped
-    to the machine" means for core counts that are not multiples of 64
-    (96 -> 48, 100 -> 50, 2556 -> 36): the carving stays rank-aligned
-    without the caller having to pick a rank by hand."""
-    if n_cores <= 0:
-        raise ValueError(f"n_cores must be positive, got {n_cores}")
-    for rank in range(min(DEFAULT_RANK_SIZE, n_cores), 0, -1):
-        if n_cores % rank == 0:
-            return rank
-    return 1  # pragma: no cover — rank 1 always divides
+#: placement policies (DESIGN.md §12.4): "first_fit" is the historical
+#: lowest-address scan; "contention" scores every rank-aligned
+#: candidate by predicted channel contention with live leases.
+PLACEMENT_POLICIES = ("first_fit", "contention")
 
 
 @dataclasses.dataclass(frozen=True)
 class BankLease:
-    """A granted, rank-aligned extent of the cores axis."""
+    """A granted, rank-aligned extent of the cores axis.
+
+    Carries its topology shadow (which physical ranks and memory
+    channels the extent touches — DESIGN.md §12.4) so placement can
+    score candidates against live leases and the scheduler can report
+    rank-straddling tenancy without re-deriving geometry."""
 
     start: int
     n_cores: int
+    #: physical ranks / memory channels this extent touches (filled by
+    #: the allocator from its topology; empty for hand-built leases).
+    ranks: tuple = ()
+    channels: tuple = ()
 
     @property
     def stop(self) -> int:
         return self.start + self.n_cores
 
+    @property
+    def rank_straddling(self) -> bool:
+        return len(self.ranks) > 1
+
 
 @dataclasses.dataclass(frozen=True)
 class FragmentationStats:
-    """Allocator occupancy snapshot (DESIGN.md §7.1)."""
+    """Allocator occupancy snapshot (DESIGN.md §7.1, §12.4)."""
 
     total_cores: int
     free_cores: int
@@ -64,6 +73,11 @@ class FragmentationStats:
     largest_free_extent: int
     #: 1 - largest_free/free: 0 = one contiguous hole, ->1 = shattered
     external_fragmentation: float
+    #: per-memory-channel occupancy, channel index -> fraction of that
+    #: channel's cores currently leased (DESIGN.md §12.4)
+    per_channel_occupancy: tuple = ()
+    #: live leases spanning more than one physical rank
+    rank_straddling_leases: int = 0
 
     @property
     def used_cores(self) -> int:
@@ -71,19 +85,34 @@ class FragmentationStats:
 
 
 class BankAllocator:
-    """First-fit allocator over a 1-D core axis with rank granularity.
+    """Topology-aware allocator over a 1-D core axis with rank granularity.
 
-    Invariants (asserted by tests/test_sched.py):
+    Invariants (asserted by tests/test_sched.py and
+    tests/test_topology.py):
       * every lease is rank-aligned: ``start`` and ``n_cores`` are
         multiples of ``rank_size`` (requests round UP to whole ranks,
         mirroring UPMEM's rank-granular DPU allocation);
       * live leases never overlap;
       * free extents are kept sorted and coalesced, so releasing every
-        lease always restores one maximal extent ``[0, n_cores)``.
+        lease always restores one maximal extent ``[0, n_cores)``;
+      * every lease's ``ranks``/``channels`` footprint is exactly what
+        ``topology.footprint(start, n_cores)`` derives from its extent.
+
+    ``placement`` picks the policy (DESIGN.md §12.4):
+      "first_fit"   lowest-address extent that fits (historical
+                    behavior, the default);
+      "contention"  among ALL rank-aligned candidate positions, take
+                    the one minimizing (predicted channel contention
+                    with live leases, channels spanned, ranks spanned,
+                    start) — rank-local beats rank-straddling, quiet
+                    channels beat busy ones, and the tuple's final
+                    ``start`` term keeps the choice deterministic.
     """
 
     def __init__(self, n_cores: int,
-                 rank_size: Optional[int] = None):
+                 rank_size: Optional[int] = None,
+                 topology: Optional[PimTopology] = None,
+                 placement: str = "first_fit"):
         if n_cores <= 0:
             raise ValueError(f"n_cores must be positive, got {n_cores}")
         if rank_size is None:
@@ -94,8 +123,19 @@ class BankAllocator:
                 raise ValueError(
                     f"rank_size {rank_size} must be positive and divide "
                     f"n_cores {n_cores} (rank-aligned carving)")
+        if placement not in PLACEMENT_POLICIES:
+            raise ValueError(f"unknown placement {placement!r}; "
+                             f"known: {PLACEMENT_POLICIES}")
         self.n_cores = n_cores
         self.rank_size = rank_size
+        if topology is None:
+            # the allocation rank IS the physical rank unless told
+            # otherwise — carving granularity and the cost model's rank
+            # tree stay in agreement
+            topology = PimTopology.for_cores(n_cores,
+                                             dpus_per_rank=rank_size)
+        self.topology = topology
+        self.placement = placement
         self._free: List[tuple] = [(0, n_cores)]   # sorted (start, size)
         self._leases: dict[int, BankLease] = {}
 
@@ -109,8 +149,43 @@ class BankAllocator:
         ranks = -(-n_cores // self.rank_size)
         return ranks * self.rank_size
 
+    def _make_lease(self, start: int, size: int) -> BankLease:
+        fp = self.topology.footprint(start, size)
+        return BankLease(start, size, ranks=fp.ranks, channels=fp.channels)
+
+    def _take(self, extent_index: int, start: int, size: int) -> BankLease:
+        """Carve ``[start, start+size)`` out of free extent
+        ``extent_index`` (splitting it into up to two remainders) and
+        grant the lease."""
+        ext_start, ext_size = self._free[extent_index]
+        assert ext_start <= start and start + size <= ext_start + ext_size
+        remainders = []
+        if start > ext_start:
+            remainders.append((ext_start, start - ext_start))
+        tail = (ext_start + ext_size) - (start + size)
+        if tail:
+            remainders.append((start + size, tail))
+        self._free[extent_index:extent_index + 1] = remainders
+        lease = self._make_lease(start, size)
+        self._leases[lease.start] = lease
+        return lease
+
+    def _contention_score(self, start: int, size: int) -> tuple:
+        """Placement score of a candidate (lower is better): predicted
+        channel contention with live leases (how many lease-channel
+        tenancies the candidate would share a channel with), then
+        channels spanned, ranks spanned, and start for determinism."""
+        fp = self.topology.footprint(start, size)
+        live: Dict[int, int] = {}
+        for lease in self._leases.values():
+            for ch in lease.channels:
+                live[ch] = live.get(ch, 0) + 1
+        contention = sum(live.get(ch, 0) for ch in fp.channels)
+        return (contention, len(fp.channels), len(fp.ranks), start)
+
     def allocate(self, n_cores: Optional[int] = None) -> Optional[BankLease]:
-        """First-fit a rank-aligned lease; None when nothing fits.
+        """Grant a rank-aligned lease by the configured placement
+        policy; None when nothing fits.
 
         Requests larger than the whole machine raise — they could never
         be satisfied and would livelock any admission loop."""
@@ -119,16 +194,24 @@ class BankAllocator:
             raise ValueError(
                 f"request for {size} cores (rank-aligned) exceeds the "
                 f"machine ({self.n_cores} cores)")
+        if self.placement == "first_fit":
+            for i, (start, extent) in enumerate(self._free):
+                if extent >= size:
+                    return self._take(i, start, size)
+            return None
+        # contention-aware: every rank-aligned start inside every free
+        # extent is a candidate; pick the best-scoring one
+        best = None
         for i, (start, extent) in enumerate(self._free):
-            if extent >= size:
-                lease = BankLease(start, size)
-                if extent == size:
-                    del self._free[i]
-                else:
-                    self._free[i] = (start + size, extent - size)
-                self._leases[lease.start] = lease
-                return lease
-        return None
+            for j in range((extent - size) // self.rank_size + 1):
+                cand = start + j * self.rank_size
+                score = self._contention_score(cand, size)
+                if best is None or score < best[0]:
+                    best = (score, i, cand)
+        if best is None:
+            return None
+        _, extent_index, start = best
+        return self._take(extent_index, start, size)
 
     def release(self, lease: BankLease) -> None:
         """Reclaim a lease, coalescing adjacent free extents."""
@@ -152,16 +235,38 @@ class BankAllocator:
     def leases(self) -> tuple:
         return tuple(self._leases.values())
 
+    def channel_occupancy(self) -> Dict[int, float]:
+        """Per-memory-channel occupancy: channel index -> fraction of
+        that channel's cores currently under lease."""
+        topo = self.topology
+        leased = {ch: 0 for ch in range(topo.n_channels)}
+        for lease in self._leases.values():
+            for rank in lease.ranks:
+                cores = topo.rank_cores(rank, lease.start, lease.n_cores)
+                leased[rank // topo.ranks_per_channel] += cores
+        out = {}
+        for ch in range(topo.n_channels):
+            ch_cores = min(topo.cores_per_channel,
+                           self.n_cores - ch * topo.cores_per_channel)
+            out[ch] = leased[ch] / ch_cores if ch_cores else 0.0
+        return out
+
     def fragmentation(self) -> FragmentationStats:
         free = self.free_cores
         largest = max((size for _, size in self._free), default=0)
+        occ = self.channel_occupancy()
         return FragmentationStats(
             total_cores=self.n_cores,
             free_cores=free,
             n_leases=len(self._leases),
             n_free_extents=len(self._free),
             largest_free_extent=largest,
-            external_fragmentation=(1.0 - largest / free) if free else 0.0)
+            external_fragmentation=(1.0 - largest / free) if free else 0.0,
+            per_channel_occupancy=tuple(occ[ch]
+                                        for ch in sorted(occ)),
+            rank_straddling_leases=sum(
+                1 for lease in self._leases.values()
+                if lease.rank_straddling))
 
 
 # ---------------------------------------------------------------------------

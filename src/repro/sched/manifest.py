@@ -9,7 +9,8 @@ the ``repro.launch.pim_jobs`` CLI (DESIGN.md §7.4).
 Schema (all sections optional except ``jobs``/``sweeps`` — at least one)::
 
     system:   {kind: pim|host|gpu-model, cores: 64, rank_size: 16,
-               reduce: fabric, backfill: false}
+               reduce: fabric, backfill: false,
+               placement: first_fit|contention}
     datasets: {name: {kind: linear|classification|blobs,
                       samples: N, features: F, seed: S, ...}}
     jobs:     [{workload: linreg, version: int32, dataset: name,
@@ -54,6 +55,13 @@ def load_manifest(path: str) -> dict:
     return doc
 
 
+def dataset_shape(spec: dict) -> Tuple[int, int]:
+    """(samples, features) a ``datasets:`` entry would materialize —
+    the shape-only view :meth:`PimScheduler.capacity_estimate` prices
+    manifests from without building any arrays."""
+    return int(spec.get("samples", 4096)), int(spec.get("features", 16))
+
+
 def build_dataset(spec: dict) -> Tuple[np.ndarray, Optional[np.ndarray]]:
     """Materialize one ``datasets:`` entry as host (X, y) arrays."""
     spec = dict(spec)
@@ -96,6 +104,8 @@ def build_system(spec: Optional[dict]) -> Tuple[System, dict]:
         sched_kw["rank_size"] = int(spec.pop("rank_size"))
     if "backfill" in spec:
         sched_kw["backfill"] = bool(spec.pop("backfill"))
+    if "placement" in spec:
+        sched_kw["placement"] = str(spec.pop("placement"))
     if spec:
         raise ValueError(f"unknown system keys {sorted(spec)}")
     return make_system(kind, **kwargs), sched_kw

@@ -31,8 +31,9 @@ repro/elastic/fault.py).
 
 Accounting: every job records the ``TransferStats`` delta of its slice
 (attributable bytes even though jobs interleave — snapshot/delta, see
-TransferStats), its step count, and modeled DPU seconds from
-:class:`~repro.core.pim.DpuCostModel` (steps x per-pass kernel time).
+TransferStats), its step count, and modeled seconds from the
+:class:`~repro.systems.topology.HierarchicalCostModel` (steps x
+per-iteration kernel + rank-serialized transfer legs — DESIGN.md §12).
 
 Fused gangs: ``sweep(..., fused=True)`` routes same-``fuse_key`` GD jobs
 through :class:`~repro.sched.gang.FusedGdSweep` — one slice, one shared
@@ -52,7 +53,8 @@ from ..api.registry import FitResult, TrainerSpec, Workload, get_workload
 from ..elastic import (InjectedFault, check_migration, injector_from_env,
                        job_fingerprint, snapshot_iters)
 from ..elastic import checkpoint as elastic_ckpt
-from ..systems import ChunkTick, DpuCostModel, System, TransferStats
+from ..systems import (ChunkTick, HierarchicalCostModel, PimTopology,
+                       System, TransferStats)
 from ..train.fault_tolerance import StragglerMonitor
 from .allocator import BankAllocator, BankLease, FragmentationStats, PimSlice
 from .gang import FusedGdSweep, plan_fusion
@@ -92,7 +94,9 @@ class JobHandle:
     ``result`` (FitResult on DONE), ``error`` (the exception on FAILED),
     ``transfer`` (the job's attributable TransferStats delta; for fused
     jobs this is the whole gang's delta — they share one slice),
-    ``modeled_seconds`` (DpuCostModel cycle accounting, per iteration),
+    ``modeled_seconds`` (HierarchicalCostModel step pricing — per-DPU
+    kernel plus rank-serialized transfer legs, DESIGN.md §12 — summed
+    per iteration),
     and ``lease`` (the core extent while running).
 
     Elastic accounting (DESIGN.md §11): ``snapshot`` is the last
@@ -166,20 +170,53 @@ class JobHandle:
 
 def _modeled_step_seconds(handle: JobHandle, dataset: PimDataset,
                           slice_: System) -> float:
-    """Per-pass DPU kernel seconds for one gang step of this job (0.0
+    """Modeled seconds for one training iteration of this job on its
+    slice: per-DPU kernel time plus the rank-serialized broadcast/gather
+    legs of the slice's own rank tree
+    (:meth:`HierarchicalCostModel.step_seconds` — DESIGN.md §12).  0.0
     for workloads outside the paper's cost model, and for jobs running
-    on a non-PIM target — DPU cycle accounting is meaningless there)."""
+    on a non-PIM target — DPU cycle accounting is meaningless there."""
     if getattr(slice_, "kind", None) != "pim":
         return 0.0
     wl_key = _COST_KEYS.get(handle.workload.name)
     if wl_key is None:
         return 0.0
     version = _COST_VERSIONS.get(handle.workload.name, handle.spec.version)
-    model = DpuCostModel()
-    return model.workload_seconds(
+    model = HierarchicalCostModel(slice_.topology)
+    return model.step_seconds(
         wl_key, version, dataset.n, dataset.n_features,
-        slice_.config.n_cores, slice_.config.n_threads,
+        n_cores=slice_.config.n_cores, n_threads=slice_.config.n_threads,
         k=handle.spec.params.get("n_clusters", 16))
+
+
+def _estimate_job_seconds(workload_name: str, spec: TrainerSpec, data,
+                          n_cores: int, system: System) -> float:
+    """Submission-time whole-job estimate (iters x step_seconds) from
+    the host data shapes alone — the backfill ordering key and the
+    ``capacity_estimate`` unit.  0.0 when the cost model cannot price
+    the job (unknown workload/version, non-PIM target): such jobs keep
+    their plain submission order."""
+    if getattr(system, "kind", None) != "pim":
+        return 0.0
+    wl_key = _COST_KEYS.get(workload_name)
+    if wl_key is None:
+        return 0.0
+    version = _COST_VERSIONS.get(workload_name, spec.version)
+    X = data[0]
+    n = int(X.shape[0])
+    n_features = int(X.shape[1]) if getattr(X, "ndim", 1) > 1 else 1
+    topo = getattr(system, "topology", None)
+    if topo is None or n_cores > topo.n_cores:
+        topo = PimTopology.for_cores(max(n_cores, 1))
+    model = HierarchicalCostModel(topo)
+    try:
+        return model.job_seconds(
+            wl_key, version, n, n_features,
+            n_iters=int(spec.params.get("n_iters", 100)),
+            n_cores=n_cores, n_threads=system.config.n_threads,
+            k=spec.params.get("n_clusters", 16))
+    except (KeyError, ValueError):
+        return 0.0
 
 
 # ---------------------------------------------------------------------------
@@ -199,6 +236,9 @@ class _Runnable:
         self.target = target
         self.lease: Optional[BankLease] = None
         self.slice: Optional[System] = None
+        #: modeled whole-job seconds (backfill ordering key; 0.0 when
+        #: the cost model cannot price the job)
+        self.est_seconds = 0.0
         self._snapshot: Optional[TransferStats] = None
         self._gpu_snapshot = None
 
@@ -457,7 +497,8 @@ class PimScheduler:
                  checkpoint_dir: Optional[str] = None,
                  checkpoint_every: int = 1,
                  fault_injector=None,
-                 default_retry_budget: int = 0):
+                 default_retry_budget: int = 0,
+                 placement: str = "first_fit"):
         if isinstance(system, Mapping):
             if not system:
                 raise ValueError("need at least one system to schedule on")
@@ -466,11 +507,16 @@ class PimScheduler:
             self.systems = {getattr(system, "kind", "pim"): system}
         self.default_target = next(iter(self.systems))
         # rank_size=None -> the allocator's auto rank (largest divisor
-        # of the machine <= the 64-DPU UPMEM rank)
+        # of the machine <= the 64-DPU UPMEM rank); each allocator
+        # scores placements against its system's own rank tree when one
+        # exists ("contention" policy, DESIGN.md §12.4)
+        self.placement = placement
         self._allocators = {
             name: BankAllocator(
                 sys_.config.n_cores,
-                rank_size if name == self.default_target else None)
+                rank_size if name == self.default_target else None,
+                topology=getattr(sys_, "topology", None),
+                placement=placement)
             for name, sys_ in self.systems.items()}
         self.system = self.systems[self.default_target]
         self.allocator = self._allocators[self.default_target]
@@ -590,6 +636,8 @@ class PimScheduler:
         run = _SingleRun([handle], data, priority,
                          next(self._seq), size, target,
                          resume_state=resume_state)
+        run.est_seconds = _estimate_job_seconds(
+            wl.name, spec, data, size, self.systems[target])
         self._queue.append(run)
         self.handles.append(handle)
         return handle
@@ -631,8 +679,15 @@ class PimScheduler:
                 group_handles.append(handle)
                 self.handles.append(handle)
             cls = _FusedRun if len(group) > 1 else _SingleRun
-            self._queue.append(cls(group_handles, data, priority,
-                                   next(self._seq), size, target))
+            run = cls(group_handles, data, priority,
+                      next(self._seq), size, target)
+            # a fused gang advances all lanes per launch, so its
+            # duration is one member's, not the sum
+            run.est_seconds = max(
+                (_estimate_job_seconds(wl.name, specs[i], data, size,
+                                       self.systems[target])
+                 for i in group), default=0.0)
+            self._queue.append(run)
         return handles
 
     # -- execution -----------------------------------------------------------
@@ -722,8 +777,14 @@ class PimScheduler:
 
     def _admit(self) -> None:
         self._queue = [r for r in self._queue if r.live_jobs]
-        pending = sorted(self._queue,
-                         key=lambda r: (-r.priority, r.seq))
+        # backfill mode additionally orders equal-priority candidates by
+        # modeled job time (shortest-first — DESIGN.md §12.5): since
+        # backfill already abandons strict submission order, the model's
+        # estimate decides who jumps a blocked head.  Unpriceable jobs
+        # (est 0.0) sort first and fall back to submission order.
+        key = ((lambda r: (-r.priority, r.est_seconds, r.seq))
+               if self.backfill else (lambda r: (-r.priority, r.seq)))
+        pending = sorted(self._queue, key=key)
         blocked: set = set()    # head-of-line blocking is per target
         for run in pending:
             if run.target in blocked:
@@ -959,6 +1020,11 @@ class PimScheduler:
             "cores_used": frag.used_cores,
             "cores_free": frag.free_cores,
             "external_fragmentation": frag.external_fragmentation,
+            # topology occupancy (DESIGN.md §12.4): per-memory-channel
+            # leased fraction and how many live leases straddle ranks —
+            # the observables defragment()/placement decisions act on
+            "per_channel_occupancy": list(frag.per_channel_occupancy),
+            "rank_straddling_leases": frag.rank_straddling_leases,
             # elastic/fault-tolerance counters (DESIGN.md §11)
             "straggler_flags": sum(h.straggler_flags
                                    for h in self.handles),
@@ -971,7 +1037,107 @@ class PimScheduler:
                 "cores_used": f.used_cores,
                 "cores_free": f.free_cores,
                 "external_fragmentation": f.external_fragmentation,
+                "per_channel_occupancy": list(f.per_channel_occupancy),
+                "rank_straddling_leases": f.rank_straddling_leases,
             }
             for name, f in ((n, a.fragmentation())
                             for n, a in self._allocators.items())}
         return out
+
+    def capacity_estimate(self, doc: dict) -> dict:
+        """Model-based capacity plan for a manifest — is this machine
+        big enough, and what throughput can it promise? (DESIGN.md
+        §12.5.)
+
+        Prices every job/sweep point of the manifest through the
+        :class:`HierarchicalCostModel` using only the declared dataset
+        *shapes* (nothing is materialized, nothing runs) and returns
+
+          ``jobs``                per-job rows (name, cores, modeled
+                                  seconds),
+          ``total_core_seconds``  the work integral,
+          ``serial_seconds``      one-at-a-time makespan (sum),
+          ``makespan_lower_bound``  max(longest job, work / machine) —
+                                  no schedule can beat it,
+          ``jobs_per_second``     job count over that bound: the
+                                  capacity-planning claim ("N banks
+                                  serve M jobs/s") as a measurable
+                                  model output.
+
+        Unpriceable jobs (workloads outside the paper's cost model)
+        appear with ``modeled_seconds = 0.0`` and weaken the bound —
+        they are counted, not guessed at.
+        """
+        from ..api.registry import get_workload as _get_wl
+        from .manifest import dataset_shape
+
+        shapes = {name: dataset_shape(spec)
+                  for name, spec in (doc.get("datasets") or {}).items()}
+
+        def _shape(entry: dict) -> tuple:
+            name = entry.get("dataset")
+            if name is None:
+                if len(shapes) == 1:
+                    return next(iter(shapes.values()))
+                raise ValueError(f"job {entry} names no dataset and the "
+                                 f"manifest defines {len(shapes)}")
+            try:
+                return shapes[name]
+            except KeyError:
+                raise ValueError(
+                    f"job references unknown dataset {name!r}; "
+                    f"known: {sorted(shapes)}") from None
+
+        class _ShapeOnly:
+            """Stands in for the host X array in the estimator."""
+            def __init__(self, n, f):
+                self.shape, self.ndim = (n, f), 2
+
+        system = self.systems[self.default_target]
+        alloc = self._allocators[self.default_target]
+        rows = []
+
+        def _price(entry: dict, spec, wl_name: str) -> None:
+            n, f = _shape(entry)
+            size = self._sized(entry.get("cores"))
+            sec = _estimate_job_seconds(wl_name, spec,
+                                        (_ShapeOnly(n, f), None),
+                                        size, system)
+            rows.append({
+                "name": entry.get("name",
+                                  f"{wl_name}/{spec.version}"),
+                "workload": wl_name, "version": spec.version,
+                "cores": size, "modeled_seconds": sec,
+            })
+
+        for entry in doc.get("jobs") or []:
+            wl = _get_wl(entry["workload"])
+            spec = wl.spec(entry.get("version"),
+                           **(entry.get("params") or {}))
+            _price(entry, spec, wl.name)
+        for entry in doc.get("sweeps") or []:
+            wl = _get_wl(entry["workload"])
+            grid = entry["grid"]
+            keys = sorted(grid)
+            base = dict(entry.get("params") or {})
+            for values in itertools.product(*(grid[k] for k in keys)):
+                spec = wl.spec(entry.get("version"),
+                               **{**base, **dict(zip(keys, values))})
+                _price(entry, spec, wl.name)
+        if not rows:
+            raise ValueError("manifest defines no jobs or sweeps")
+
+        total_core_seconds = sum(r["modeled_seconds"] * r["cores"]
+                                 for r in rows)
+        serial = sum(r["modeled_seconds"] for r in rows)
+        longest = max((r["modeled_seconds"] for r in rows), default=0.0)
+        bound = max(longest, total_core_seconds / alloc.n_cores)
+        return {
+            "machine_cores": alloc.n_cores,
+            "placement": self.placement,
+            "jobs": rows,
+            "total_core_seconds": total_core_seconds,
+            "serial_seconds": serial,
+            "makespan_lower_bound": bound,
+            "jobs_per_second": (len(rows) / bound) if bound > 0 else 0.0,
+        }

@@ -25,6 +25,9 @@ from .pim import (DPU_FREQ_HZ, DPU_MRAM_BYTES_PER_CYCLE, DPU_OP_CYCLES,
                   DPU_PIPELINE_SATURATION_THREADS, WORKLOAD_STORAGE_DTYPE,
                   DpuCostModel, PimConfig, PimSystem,
                   workload_element_bytes)
+from .topology import (DPU_DMA_SEGMENT_BYTES, DPU_DMA_SETUP_CYCLES,
+                       DPU_MRAM_BYTES, DPU_WRAM_BYTES, ExtentFootprint,
+                       HierarchicalCostModel, PimTopology, default_rank_size)
 
 #: CLI spelling -> (config class, system class); aliases included so
 #: both "gpu-model" (flag spelling) and "gpu_model" (identifier
@@ -54,12 +57,16 @@ def make_system(kind: str = "pim", **config_kwargs) -> System:
 
 __all__ = [
     "ChunkTick",
-    "DPU_FREQ_HZ", "DPU_MRAM_BYTES_PER_CYCLE", "DPU_OP_CYCLES",
-    "DPU_PIPELINE_SATURATION_THREADS", "DpuCostModel", "FabricReduce",
-    "GpuModelConfig", "GpuModelReport", "HierarchicalReduce", "HostConfig",
+    "DPU_DMA_SEGMENT_BYTES", "DPU_DMA_SETUP_CYCLES", "DPU_FREQ_HZ",
+    "DPU_MRAM_BYTES", "DPU_MRAM_BYTES_PER_CYCLE", "DPU_OP_CYCLES",
+    "DPU_PIPELINE_SATURATION_THREADS", "DPU_WRAM_BYTES", "DpuCostModel",
+    "ExtentFootprint", "FabricReduce",
+    "GpuModelConfig", "GpuModelReport", "HierarchicalCostModel",
+    "HierarchicalReduce", "HostConfig",
     "HostReduce", "HostSlice", "HostSystem", "ModeledGpuSystem",
-    "PimConfig", "PimSystem", "ReduceStrategy", "ReduceVia",
+    "PimConfig", "PimSystem", "PimTopology", "ReduceStrategy", "ReduceVia",
     "SYSTEM_KINDS", "StepProgram", "System", "TransferStats",
-    "WORKLOAD_STORAGE_DTYPE", "chunk_schedule", "make_system",
+    "WORKLOAD_STORAGE_DTYPE", "chunk_schedule", "default_rank_size",
+    "make_system",
     "resolve_reduce_strategy", "run_steps", "workload_element_bytes",
 ]

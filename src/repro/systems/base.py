@@ -102,6 +102,14 @@ class TransferStats:
     #: processor-centric targets only: bytes the training hot loop
     #: streams from DRAM (HostSystem / ModeledGpuSystem); 0 on PIM.
     dram_bytes: int = 0
+    #: topology split of the reduce legs (PIM only — DESIGN.md §12.3):
+    #: ``rank_local_bytes`` is intra-rank combine traffic (a rank-aligned
+    #: HierarchicalReduce group folding its partials inside the rank);
+    #: ``cross_rank_bytes`` is everything that crosses a rank boundary on
+    #: its way to the host — the serialized leg the hierarchical cost
+    #: model prices and contention-aware placement tries to localize.
+    rank_local_bytes: int = 0
+    cross_rank_bytes: int = 0
 
     def reset(self) -> None:
         for field in dataclasses.fields(TransferStats):
@@ -254,6 +262,14 @@ class ReduceStrategy:
     #: StepProgram then degrades to per-step map_reduce syncs.
     fusable = True
 
+    def bind(self, system: "System") -> "ReduceStrategy":
+        """Resolve any topology-derived parameters against the system
+        about to execute (called once per map_reduce / StepProgram).
+        Base strategies have none — they bind to themselves;
+        :class:`HierarchicalReduce` derives an unset ``group_size`` from
+        the system's rank tree here."""
+        return self
+
     def device_reduce(self, partials):
         return partials
 
@@ -267,10 +283,21 @@ class ReduceStrategy:
     def count_pim_to_cpu(self, system: "System", out) -> int:
         raise NotImplementedError
 
+    def count_topology(self, system: "System", out) -> tuple:
+        """Rank-level split ``(rank_local_bytes, cross_rank_bytes)`` of
+        one step's reduce movement (DESIGN.md §12.3).  Flat schedules
+        ship every partial over the host link — all bytes cross a rank
+        boundary; :class:`HierarchicalReduce` reclassifies the
+        intra-group leg as rank-local when its groups sit inside ranks.
+        """
+        return 0, self.count_pim_to_cpu(system, out)
+
     def count_chunk(self, system: "System", out, k: int) -> None:
         """Account k fused steps' reduce movement (``out`` is the
         abstract per-step ``device_reduce`` result)."""
         system.stats.pim_to_cpu += k * self.count_pim_to_cpu(system, out)
+        rank_local, cross_rank = self.count_topology(system, out)
+        system._charge_topology(k * rank_local, k * cross_rank)
 
     def cache_token(self):
         return self.name
@@ -339,11 +366,27 @@ class HierarchicalReduce(ReduceStrategy):
     cores, then a host combine of the rank partials — the PIM analogue of
     the multi-pod RS->AR->AG decomposition in distributed/collectives.py
     (each rank's leader ships 1/group_size of the flat-host bytes over the
-    host link; see ``cross_pod_bytes``)."""
+    host link; see ``cross_pod_bytes``).
 
-    def __init__(self, group_size: int = 8):
+    ``group_size=None`` derives the group from the executing system's
+    rank tree at :meth:`bind` time (the largest divisor of the core
+    count that fits one rank) — the group that keeps the fabric leg
+    rank-local instead of a hand-picked constant (DESIGN.md §12.3)."""
+
+    def __init__(self, group_size: Optional[int] = 8):
         self.group_size = group_size
-        self.name = f"hier{group_size}"
+        self.name = f"hier{group_size}" if group_size is not None else "hier-auto"
+
+    def bind(self, system: "System") -> "HierarchicalReduce":
+        if self.group_size is not None:
+            return self
+        from .topology import DEFAULT_DPUS_PER_RANK  # no cycle: topology is leaf
+        topo = getattr(system, "topology", None)
+        cap = topo.dpus_per_rank if topo is not None else DEFAULT_DPUS_PER_RANK
+        n = system.config.n_cores
+        group = max((d for d in range(1, min(cap, n) + 1) if n % d == 0),
+                    default=1)
+        return HierarchicalReduce(group)
 
     def cache_token(self):
         return ("hier", self.group_size)
@@ -365,6 +408,29 @@ class HierarchicalReduce(ReduceStrategy):
     def count_pim_to_cpu(self, system, out) -> int:
         return _tree_bytes(out)  # (n_groups, ...) rank partials
 
+    def _groups_rank_local(self, system: "System") -> bool:
+        """Do the reduce groups sit inside physical ranks?  True when
+        the system exposes a topology whose rank is a whole multiple of
+        the group (aligned groups never straddle a rank boundary)."""
+        topo = getattr(system, "topology", None)
+        return (topo is not None and self.group_size is not None
+                and 1 < self.group_size <= topo.dpus_per_rank
+                and topo.dpus_per_rank % self.group_size == 0)
+
+    def count_topology(self, system, out) -> tuple:
+        # Two legs per step: every core's partial folds into its group
+        # (group_size x the rank-partial bytes), then the rank partials
+        # cross to the host.  The intra-group leg is rank-local only
+        # when the groups are rank-aligned; straddling groups drag it
+        # across rank boundaries too.
+        if not self._groups(system.config.n_cores):
+            return 0, _tree_bytes(out)        # flat fallback: all cross
+        out_bytes = _tree_bytes(out)
+        intra = out_bytes * self.group_size
+        if self._groups_rank_local(system):
+            return intra, out_bytes
+        return 0, intra + out_bytes
+
     def device_reduce_full(self, partials):
         """In a fused scan the rank partials combine on fabric instead of
         on the host (int32 accumulation — exact whenever the flat fabric
@@ -379,6 +445,8 @@ class HierarchicalReduce(ReduceStrategy):
         system.stats.pim_to_cpu += k * self.count_pim_to_cpu(system, out)
         if self._groups(system.config.n_cores):
             system._charge_inter_core(k * _tree_bytes(out))
+        rank_local, cross_rank = self.count_topology(system, out)
+        system._charge_topology(k * rank_local, k * cross_rank)
 
     def finalize(self, system, out):
         # intra-rank movement happened "on fabric"; record the rank->host
@@ -397,6 +465,8 @@ _STRATEGIES: dict[str, Callable[[], ReduceStrategy]] = {
     "fabric": FabricReduce,
     "host": HostReduce,
     "hierarchical": HierarchicalReduce,
+    # topology-derived group (resolved per system at bind time)
+    "hierarchical-auto": lambda: HierarchicalReduce(group_size=None),
 }
 
 StrategyLike = Union[None, str, ReduceVia, ReduceStrategy]
@@ -544,9 +614,20 @@ class System:
     def _charge_reduce(self, strat: ReduceStrategy, out) -> None:
         """Post-reduce movement of one map_reduce launch."""
         self.stats.pim_to_cpu += strat.count_pim_to_cpu(self, out)
+        rank_local, cross_rank = strat.count_topology(self, out)
+        self._charge_topology(rank_local, cross_rank)
 
     def _charge_reduce_custom(self, out) -> None:
         self.stats.pim_to_cpu += _tree_bytes(out) * self.config.n_cores
+        # flat custom reduce: every per-core partial crosses to the host
+        self._charge_topology(0, _tree_bytes(out) * self.config.n_cores)
+
+    def _charge_topology(self, rank_local: int, cross_rank: int) -> None:
+        """Rank-level classification of reduce movement (DESIGN.md
+        §12.3).  Host targets override to a no-op: a single resident
+        image has no rank tree."""
+        self.stats.rank_local_bytes += rank_local
+        self.stats.cross_rank_bytes += cross_rank
 
     def _charge_inter_core(self, nbytes: int) -> None:
         """Modeled inter-core-via-host movement (HierarchicalReduce's
@@ -588,7 +669,7 @@ class System:
         "hierarchical" | a ReduceStrategy); default is the system config.
         Movement is tracked for every schedule in the system's own
         TransferStats semantics."""
-        strat = resolve_reduce_strategy(strategy, self.config.reduce)
+        strat = resolve_reduce_strategy(strategy, self.config.reduce).bind(self)
         kkey, fn = self._resolve_kernel(kernel)
         key = ("map_reduce", kkey, len(sharded), len(replicated),
                strat.cache_token())
@@ -731,8 +812,8 @@ class StepProgram:
         self.update = update
         self.select = select
         self.name = name
-        self.strategy = resolve_reduce_strategy(strategy,
-                                                system.config.reduce)
+        self.strategy = resolve_reduce_strategy(
+            strategy, system.config.reduce).bind(system)
         self._kernel = kernel
         self._kkey, self._fn = system._resolve_kernel(kernel)
 

@@ -114,6 +114,9 @@ class HostSystem(System):
     def _charge_inter_core(self, nbytes: int) -> None:
         pass  # no host link between shards of one resident image
 
+    def _charge_topology(self, rank_local: int, cross_rank: int) -> None:
+        pass  # no rank tree: a single resident image has no topology
+
     def _charge_elementwise(self, sharded, replicated) -> None:
         self.stats.dram_bytes += _tree_bytes(tuple(sharded)) \
             + _tree_bytes(tuple(replicated))

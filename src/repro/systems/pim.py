@@ -28,17 +28,23 @@ Backends:
   "shard_map" real multi-device execution over a jax.Mesh "cores" axis —
               used by the scaling benchmarks and the dry-run.
 
-Also here: ``DpuCostModel``, an instruction-level cost model of the UPMEM
-DPU pipeline (425 MHz, fine-grained multithreaded, throughput saturates at
-11 tasklets) calibrated against the paper's measured version-to-version
-speedups.  The benchmark harness uses it to reproduce Fig. 8-12 shapes
-without UPMEM hardware; the calibration table is printed next to the
-paper's reported ratios so the fit is auditable.
+Cost modeling moved to :mod:`repro.systems.topology` (DESIGN.md §12):
+:class:`~repro.systems.topology.HierarchicalCostModel` prices launches
+over the explicit channel -> rank -> DPU tree (per-DPU instruction
+tables as the leaf compute term, segmented MRAM<->WRAM DMA,
+rank-serialized transfer legs, channel contention).  The flat
+``DpuCostModel`` remains below as a one-warning deprecation shim so old
+imports keep working; every in-repo consumer now uses the hierarchical
+model.  Still here: the on-bank storage-dtype table
+(``WORKLOAD_STORAGE_DTYPE``/``workload_element_bytes``) the model's
+MRAM byte counting reads, because it mirrors what ``PimDataset``
+materializes.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, Optional, Sequence
 
 import jax
@@ -49,6 +55,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..compat import shard_map
 from ..core.quantization import storage_bytes
 from .base import ReduceVia, System
+from .topology import (DEFAULT_RANKS_PER_CHANNEL, DPU_FREQ_HZ,
+                       DPU_MRAM_BYTES_PER_CYCLE, DPU_OP_CYCLES,
+                       DPU_PIPELINE_SATURATION_THREADS,
+                       HierarchicalCostModel, PimTopology)
 
 
 @dataclasses.dataclass
@@ -57,6 +67,8 @@ class PimConfig:
     n_threads: int = 16          # tasklets per core (cost model + layouts)
     reduce: ReduceVia = ReduceVia.FABRIC   # default strategy for map_reduce
     backend: str = "vmap"        # "vmap" | "shard_map"
+    dpus_per_rank: Optional[int] = None    # None -> auto (largest divisor <=64)
+    ranks_per_channel: int = DEFAULT_RANKS_PER_CHANNEL
 
 
 class PimSystem(System):
@@ -88,6 +100,21 @@ class PimSystem(System):
     @property
     def n_shards(self) -> int:
         return self.config.n_cores
+
+    @property
+    def topology(self) -> PimTopology:
+        """The channel -> rank -> DPU tree this machine models
+        (DESIGN.md §12) — shared by the cost model, the reduce
+        strategies' rank-local/cross-rank accounting, and the
+        bank allocator's contention scoring."""
+        return PimTopology.for_cores(
+            self.config.n_cores,
+            dpus_per_rank=self.config.dpus_per_rank,
+            ranks_per_channel=self.config.ranks_per_channel)
+
+    def cost_model(self) -> HierarchicalCostModel:
+        """A :class:`HierarchicalCostModel` over this machine's tree."""
+        return HierarchicalCostModel(self.topology)
 
     # -- data placement ------------------------------------------------------
 
@@ -162,34 +189,8 @@ class PimSystem(System):
 
 
 # ---------------------------------------------------------------------------
-# DPU cost model (benchmark harness only — reproduces Fig. 8-12 shapes).
+# Storage-dtype table (feeds the cost model's MRAM byte counting).
 # ---------------------------------------------------------------------------
-
-#: instruction-cost table (cycles/op at full pipeline) — calibrated so the
-#: modeled version ratios match the paper's measured speedups:
-#:   LIN-INT32 ~= 10x LIN-FP32 ("order of magnitude", §5.2.1)
-#:   LIN-HYB   ~= 1.41x LIN-INT32 (+41%)
-#:   LIN-BUI   ~= 1.25x LIN-HYB  (+25%)
-#:   LOG LUT   ~= 53x  LOG-INT32 Taylor (§5.2.2)
-#:   LOG-HYB-LUT ~= 1.28x LOG-INT32-LUT(WRAM); LOG-BUI-LUT ~= 1.43x HYB
-DPU_OP_CYCLES: dict[str, float] = {
-    "add32": 1.0,          # native
-    "cmp": 1.0,            # native
-    "load": 1.0,           # WRAM load (per 32-bit word, post-DMA)
-    "mul8_builtin": 4.0,   # custom built-in multiply (Listing 1d)
-    "mul16": 7.0,          # compiler-generated 8/16-bit multiply (Listing 1b)
-    "mul32_emul": 24.0,    # runtime-emulated 32-bit multiply
-    "div32_emul": 56.0,    # runtime-emulated division
-    "fadd_emul": 55.0,     # software float add
-    "fmul_emul": 70.0,     # software float multiply
-    "lut_query_wram": 2.0,   # index clamp + load
-    "lut_query_mram": 6.0,   # + DMA latency amortized over batched queries
-}
-
-#: MRAM streaming bandwidth per DPU, bytes/cycle (≈ 700 MB/s at 425 MHz)
-DPU_MRAM_BYTES_PER_CYCLE = 1.6
-DPU_FREQ_HZ = 425e6
-DPU_PIPELINE_SATURATION_THREADS = 11
 
 #: on-bank storage dtype of the training data per (workload, version) —
 #: the explicit table the cost model's MRAM byte counting reads, with the
@@ -223,91 +224,34 @@ def workload_element_bytes(workload: str, version: str) -> int:
     return storage_bytes(name)
 
 
-@dataclasses.dataclass
-class DpuCostModel:
-    """Analytic single-DPU kernel-time model.
+# ---------------------------------------------------------------------------
+# DpuCostModel — deprecation shim over the hierarchical model.
+# ---------------------------------------------------------------------------
 
-    ``cycles = max(instr_cycles / throughput(threads), mram_bytes / bw)``
-    where throughput(t) = min(t, 11) / 11  (fine-grained multithreading:
-    one instruction per cycle only once >= 11 tasklets are resident).
+_DPU_COST_MODEL_WARNED = False
+
+
+class DpuCostModel(HierarchicalCostModel):
+    """Deprecated flat cost model — use
+    :class:`repro.systems.topology.HierarchicalCostModel`.
+
+    Kept so old imports (``repro.core.pim.DpuCostModel``) keep working:
+    this is the hierarchical model pinned to a single-DPU topology, so
+    ``kernel_seconds``/``workload_seconds`` keep their historical
+    per-DPU semantics (no transfer legs).  Emits one
+    ``DeprecationWarning`` per process.
     """
 
-    freq_hz: float = DPU_FREQ_HZ
-    saturation_threads: int = DPU_PIPELINE_SATURATION_THREADS
-
-    def kernel_seconds(self, instr_cycles: float, mram_bytes: float,
-                       n_threads: int) -> float:
-        tp = min(n_threads, self.saturation_threads) / self.saturation_threads
-        compute = instr_cycles / max(tp, 1e-9)
-        memory = mram_bytes / DPU_MRAM_BYTES_PER_CYCLE
-        return max(compute, memory) / self.freq_hz
-
-    # -- per-workload instruction estimates (per sample, F features) --------
-    #
-    # Calibrated against the paper's measured version-to-version speedups
-    # (§5.2.1/§5.2.2) rather than summed from DPU_OP_CYCLES: the compiled
-    # inner loops also contain loads, address arithmetic and loop control,
-    # so the per-feature totals below are the fitted quantities.  Anchors:
-    #   bui  ~ custom mul (4 instr, Listing 1d) + load/acc     -> 8
-    #   hyb  ~ compiler 16-bit mul (7 instr, Listing 1b) + l/a -> 10
-    #   int32~ emulated 32-bit mul + shifts                    -> 14
-    #   fp32 ~ software float mul+add                          -> 120
-    # giving fp32/int32 = 8.6x ("order of magnitude"), int32/hyb = 1.40
-    # (+41%), hyb/bui = 1.25 (+25%).
-    LIN_INSTR_PER_FEATURE = {"fp32": 120.0, "int32": 14.0,
-                             "hyb": 10.0, "bui": 8.0}
-
-    #: per-sample sigmoid cost.  The Taylor numbers are fitted to the
-    #: paper's measured 53x LUT-over-Taylor speedup and the 65% INT32-over-
-    #: FP32 reduction (§5.2.2) — the DPU Taylor loop iterates with emulated
-    #: high-precision arithmetic, which is why it is this expensive.
-    LOG_SIGMOID_CYCLES = {"fp32": 66_000.0, "int32": 24_000.0,
-                          "int32_lut_mram": 6.0, "int32_lut_wram": 2.0,
-                          "hyb_lut": 2.0, "bui_lut": 2.0}
-
-    @staticmethod
-    def lin_instr(version: str, n_features: int) -> float:
-        per_feat = DpuCostModel.LIN_INSTR_PER_FEATURE[version]
-        overhead = 24.0 if version == "fp32" else 10.0
-        # dot product + gradient pass back over features (second pass)
-        return 2 * n_features * per_feat + overhead
-
-    @staticmethod
-    def log_instr(version: str, n_features: int) -> float:
-        base_ver = {"fp32": "fp32", "int32": "int32",
-                    "int32_lut_mram": "int32", "int32_lut_wram": "int32",
-                    "hyb_lut": "hyb", "bui_lut": "bui"}[version]
-        base = DpuCostModel.lin_instr(base_ver, n_features)
-        return base + DpuCostModel.LOG_SIGMOID_CYCLES[version]
-
-    @staticmethod
-    def dtr_split_evaluate_instr(n_points: int) -> float:
-        c = DPU_OP_CYCLES
-        return n_points * (c["load"] + c["cmp"] + c["add32"])
-
-    @staticmethod
-    def kme_instr(n_points: int, n_features: int, k: int) -> float:
-        c = DPU_OP_CYCLES
-        per_pt = k * n_features * (c["load"] + c["mul16"] + c["add32"]) \
-            + k * c["cmp"] + n_features * c["add32"]
-        return n_points * per_pt
-
-    # -- end-to-end modeled time for the scaling benchmarks ------------------
-
-    def workload_seconds(self, workload: str, version: str, n_samples: int,
-                         n_features: int, n_cores: int, n_threads: int,
-                         k: int = 16) -> float:
-        n_pc = -(-n_samples // n_cores)
-        elem_bytes = workload_element_bytes(workload, version)
-        bytes_ = n_pc * n_features * elem_bytes
-        if workload == "lin":
-            instr = n_pc * self.lin_instr(version, n_features)
-        elif workload == "log":
-            instr = n_pc * self.log_instr(version, n_features)
-        elif workload == "dtr":
-            instr = self.dtr_split_evaluate_instr(n_pc) * n_features
-        elif workload == "kme":
-            instr = self.kme_instr(n_pc, n_features, k)
-        else:
-            raise ValueError(workload)
-        return self.kernel_seconds(instr, bytes_, n_threads)
+    def __init__(self, freq_hz: float = DPU_FREQ_HZ,
+                 saturation_threads: int = DPU_PIPELINE_SATURATION_THREADS):
+        global _DPU_COST_MODEL_WARNED
+        if not _DPU_COST_MODEL_WARNED:
+            _DPU_COST_MODEL_WARNED = True
+            warnings.warn(
+                "DpuCostModel is deprecated; use "
+                "repro.systems.topology.HierarchicalCostModel (topology-"
+                "aware launch pricing, DESIGN.md §12)",
+                DeprecationWarning, stacklevel=2)
+        super().__init__(topology=PimTopology(n_cores=1),
+                         freq_hz=freq_hz,
+                         saturation_threads=saturation_threads)

@@ -3,8 +3,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.pim import (DpuCostModel, HierarchicalReduce, PimConfig,
+from repro.core.pim import (HierarchicalReduce, PimConfig,
                             PimSystem, ReduceVia, TransferStats)
+from repro.systems.topology import HierarchicalCostModel
 
 
 def _sum_kernel(xc, w):
@@ -186,7 +187,7 @@ def test_transfer_stats_snapshot_delta():
 # ---------------------------------------------------------------------------
 
 def test_cost_model_pipeline_saturates_at_11_threads():
-    m = DpuCostModel()
+    m = HierarchicalCostModel.for_cores(1)
     t = [m.kernel_seconds(1e6, 0, n) for n in range(1, 25)]
     # monotone non-increasing, flat from 11 on (Fig. 8-10 shape)
     assert all(a >= b - 1e-12 for a, b in zip(t, t[1:]))
@@ -197,7 +198,7 @@ def test_cost_model_pipeline_saturates_at_11_threads():
 def test_cost_model_version_ratios_match_paper():
     """Calibration check: modeled ratios within tolerance of paper's
     measured speedups (§5.2.1-§5.2.2)."""
-    m = DpuCostModel()
+    m = HierarchicalCostModel.for_cores(1)
 
     def sec(w, v):
         return m.workload_seconds(w, v, n_samples=2048, n_features=16,
@@ -218,7 +219,7 @@ def test_cost_model_version_ratios_match_paper():
 
 def test_cost_model_strong_scaling_linear():
     """PIM kernel time scales ~linearly with cores (paper Fig. 12)."""
-    m = DpuCostModel()
+    m = HierarchicalCostModel.for_cores(1)
     t256 = m.workload_seconds("dtr", "fp32", 153_600_000, 16, 256, 16)
     t2048 = m.workload_seconds("dtr", "fp32", 153_600_000, 16, 2048, 16)
     assert t256 / t2048 == pytest.approx(8.0, rel=0.05)

@@ -1,8 +1,18 @@
-"""Shared benchmark utilities."""
+"""Shared benchmark utilities.
+
+Every JSON a bench writes into ``benchmarks/out/`` goes through
+:func:`write_json`, which stamps the run-metadata envelope (git sha,
+UTC timestamp, jax version, host platform — repro.obs.runmeta) so the
+recorded perf trajectory stays attributable across PRs.
+"""
 from __future__ import annotations
 
 import time
 from typing import Callable
+
+from repro.obs.runmeta import run_meta, write_json  # noqa: F401 — the
+# shared writer every bench uses (re-exported so benches import one
+# module for timing and persistence alike)
 
 
 def time_call(fn: Callable, *args, repeats: int = 3, warmup: int = 1,

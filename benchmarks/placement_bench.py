@@ -26,11 +26,10 @@ traces.  Pure cost-model arithmetic — no JAX, runs in milliseconds.
 from __future__ import annotations
 
 import heapq
-import json
 import os
 from collections import deque
 
-from benchmarks.common import row
+from benchmarks.common import row, write_json
 from repro.sched import BankAllocator
 from repro.systems.topology import HierarchicalCostModel, PimTopology
 
@@ -120,9 +119,7 @@ def run():
         "contention_beats_first_fit": (contention["makespan_s"]
                                        <= first_fit["makespan_s"]),
     }
-    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
-    with open(OUT_PATH, "w") as fh:
-        json.dump(result, fh, indent=2)
+    write_json(OUT_PATH, result)
     return [
         row("placement.first_fit.makespan_s", first_fit["makespan_s"],
             f"mean_sharers={first_fit['mean_sharers']:.2f}"),

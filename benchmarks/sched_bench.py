@@ -22,13 +22,12 @@ recorded.
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import row, write_json
 from repro.api import (HierarchicalCostModel, PimConfig, PimSystem,
                        make_estimator)
 from repro.data.synthetic import make_linear_dataset
@@ -66,7 +65,7 @@ def _sweep(X, y, lrs, fused: bool):
     bad = [h for h in handles if h.state.value != "done"]
     if bad:
         raise RuntimeError(f"sweep jobs did not finish: {bad}")
-    return [h.result.attributes["coef_"] for h in handles]
+    return [h.result.attributes["coef_"] for h in handles], sched
 
 
 def run():
@@ -85,11 +84,11 @@ def run():
     t_serial = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    gang = _sweep(X, y, LRS, fused=False)
+    gang, gang_sched = _sweep(X, y, LRS, fused=False)
     t_gang = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    fused = _sweep(X, y, LRS, fused=True)
+    fused, fused_sched = _sweep(X, y, LRS, fused=True)
     t_fused = time.perf_counter() - t0
 
     exact_fused = all(np.array_equal(a, b) for a, b in zip(ref, fused))
@@ -114,10 +113,16 @@ def run():
         "gang_matches_serial_bitwise": exact_gang,
         "modeled_job_dpu_s": modeled_job_s,
         "modeled_serial_dpu_s": k * modeled_job_s,
+        # modeled-vs-measured drift (DESIGN.md §13.5): per-job wall /
+        # cost-model ratios straight out of PimScheduler.stats(), plus
+        # the gang scheduler's per-chunk ratio histogram — the PR 7
+        # calibration recorded as a continuously monitored series
+        "gang_drift": gang_sched.stats()["drift"],
+        "fused_drift": fused_sched.stats()["drift"],
+        "drift_ratio_histogram": gang_sched.metrics.to_dict().get(
+            "sched.drift_ratio"),
     }
-    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
-    with open(OUT_PATH, "w") as fh:
-        json.dump(result, fh, indent=2)
+    write_json(OUT_PATH, result)
 
     return [
         row(f"sched.serial.K{k}", t_serial * 1e6 / k,

@@ -20,13 +20,12 @@ are bit-identical to the unfused loop.  Results are recorded to
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import row, write_json
 from repro.api import PimConfig, PimSystem
 from repro.core import kmeans, linreg, logreg
 from repro.data.synthetic import make_blobs, make_linear_dataset
@@ -110,9 +109,7 @@ def run():
             k=16, max_iters=kme_iters, tol=0.0, seed=3, fuse_steps=fuse),
         dsb, kme_iters, bitwise=False)
 
-    os.makedirs(os.path.dirname(OUT_PATH), exist_ok=True)
-    with open(OUT_PATH, "w") as fh:
-        json.dump(results, fh, indent=2)
+    write_json(OUT_PATH, results)
 
     rows = []
     for name, r in results.items():

@@ -8,6 +8,9 @@
 # @slow), the step-fusion engine (fused-vs-serial bit parity, the
 # one-launch-per-chunk assertion), the backend-portable System protocol
 # (PIM/host/modeled-GPU parity, mixed-target scheduling), the
+# telemetry layer (tracer overhead contract, Chrome-trace schema +
+# determinism, metrics attribution, drift accounting; the end-to-end
+# --trace CLI runs are @slow), the
 # hierarchical topology/cost model + contention-aware placement
 # (calibration ratio checks are fast; the large Fig. 12 sweeps are
 # @slow), and the legacy deprecation surface; large-shape kernel
@@ -30,6 +33,7 @@ exec python -m pytest -q -m "not slow" \
     tests/test_kernels.py \
     tests/test_lut.py \
     tests/test_metrics.py \
+    tests/test_obs.py \
     tests/test_pim_system.py \
     tests/test_quantization.py \
     tests/test_sched.py \

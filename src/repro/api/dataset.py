@@ -76,7 +76,13 @@ class PimDataset:
     def _cached(self, key: tuple, builder):
         view = self._views.get(key)
         if view is None:
-            view = builder()
+            from ..obs.trace import TRACER   # local: api -> obs, no cycle
+            if TRACER.enabled:
+                track = getattr(self.system, "_trace_track", "system:?")
+                with TRACER.span(f"shard:{key[0]}", track, "transfer"):
+                    view = builder()
+            else:
+                view = builder()
             self._views[key] = view
         return view
 

@@ -19,6 +19,7 @@ import os
 import re
 from typing import Optional, Tuple
 
+from ..obs.trace import TRACER
 from ..train import checkpoint as ckpt
 from .state import SCHEMA_VERSION
 
@@ -51,8 +52,14 @@ def save_snapshot(directory: str, snapshot: dict, *, envelope: dict,
     extra = {"elastic_schema": SCHEMA_VERSION,
              "snap_meta": dict(snapshot.get("meta", {})),
              **envelope}
-    return ckpt.save(directory, iters, dict(snapshot.get("arrays", {})),
-                     keep_last=keep_last, extra_meta=extra)
+    if not TRACER.enabled:
+        return ckpt.save(directory, iters,
+                         dict(snapshot.get("arrays", {})),
+                         keep_last=keep_last, extra_meta=extra)
+    with TRACER.span("ckpt.save", "sched", "elastic", iters=iters):
+        return ckpt.save(directory, iters,
+                         dict(snapshot.get("arrays", {})),
+                         keep_last=keep_last, extra_meta=extra)
 
 
 def load_snapshot(directory: str,

@@ -27,11 +27,10 @@ JSON record (default ``benchmarks/out/compare.json``).
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import time
 
 from repro.api import HierarchicalCostModel, get_workload, make_system
+from repro.obs import Column, render_table, write_json
 from repro.data.synthetic import (make_blobs, make_classification,
                                   make_linear_dataset)
 
@@ -156,6 +155,11 @@ def run_compare(tiny: bool = False, cores: int = 16,
                 row["modeled_flops"] = gpu.flops
             else:
                 row["modeled_s"] = wall_s    # host: measured IS the model
+            # drift accounting (DESIGN.md §13.5): this container's wall
+            # time over the target's model — trivially 1.0 on host,
+            # where the measurement IS the model
+            row["drift_ratio"] = (wall_s / row["modeled_s"]
+                                  if row["modeled_s"] > 0 else None)
             per_system[kind] = row
             rows.append(row)
         # cross-target ratios (the paper's headline numbers)
@@ -174,25 +178,32 @@ def run_compare(tiny: bool = False, cores: int = 16,
             "rows": rows}
 
 
-def render_table(record: dict) -> str:
-    head = (f"{'workload':<9} {'system':<10} {'version':<15} "
-            f"{'wall s':>9} {'model s':>10} {'score':>11} "
-            f"{'launches':>9}  ratios (vs pim)")
-    lines = [head, "-" * len(head)]
-    for row in record["rows"]:
-        r = row.get("ratios", {})
-        note = ""
-        if row["system"] == "host":
-            note = f"pim {r.get('pim_over_host', 0.0):.2f}x faster"
-        elif row["system"] == "gpu-model":
-            note = (f"pim {r.get('pim_over_gpu_model', 0.0):.2f}x; "
-                    f"paper {r.get('paper_reference', {})}")
-        lines.append(
-            f"{row['workload']:<9} {row['system']:<10} "
-            f"{row['version']:<15} {row['wall_s']:>9.3f} "
-            f"{row['modeled_s']:>10.3e} {row['score']:>11.4f} "
-            f"{row['kernel_launches']:>9}  {note}")
-    return "\n".join(lines)
+#: the comparison table columns (repro.obs.format — shared formatter)
+COMPARE_COLUMNS = (
+    Column("workload", width=9, align="<"),
+    Column("system", width=10, align="<"),
+    Column("version", width=15, align="<"),
+    Column("wall_s", "wall s", width=9, spec=".3f"),
+    Column("modeled_s", "model s", width=10, spec=".3e"),
+    Column("drift_ratio", "drift", width=9, spec=".3g"),
+    Column("score", width=11, spec=".4f"),
+    Column("kernel_launches", "launches", width=9, spec="d"),
+)
+
+
+def _ratio_note(row: dict) -> str:
+    r = row.get("ratios", {})
+    if row["system"] == "host":
+        return f"pim {r.get('pim_over_host', 0.0):.2f}x faster"
+    if row["system"] == "gpu-model":
+        return (f"pim {r.get('pim_over_gpu_model', 0.0):.2f}x; "
+                f"paper {r.get('paper_reference', {})}")
+    return ""
+
+
+def render_compare_table(record: dict) -> str:
+    return render_table(record["rows"], COMPARE_COLUMNS,
+                        extra=_ratio_note, rule=True)
 
 
 def main(argv=None):
@@ -206,13 +217,11 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     record = run_compare(tiny=args.tiny, cores=args.cores, seed=args.seed)
-    print(render_table(record))
+    print(render_compare_table(record))
     if args.out:
-        out_dir = os.path.dirname(args.out)
-        if out_dir:
-            os.makedirs(out_dir, exist_ok=True)
-        with open(args.out, "w") as fh:
-            json.dump(record, fh, indent=2)
+        # run-metadata envelope (DESIGN.md §13.7): git sha, timestamp,
+        # jax version — the record stays attributable across PRs
+        record = write_json(args.out, record)
         print(f"\nrecorded -> {args.out}")
     return record
 

@@ -185,15 +185,15 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
 
     mesh = (jax.make_mesh(mesh_shape, ("data", "model")) if mesh_shape
             else make_production_mesh(multi_pod=multi_pod))
-    t0 = time.time()
+    t0 = time.perf_counter()
     try:
         from repro.distributed import act_sharding
         fn, args = build_step(arch, shape_name, mesh)
         with mesh, act_sharding.use_mesh(mesh):
             lowered = fn.lower(*args)
-            t_lower = time.time() - t0
+            t_lower = time.perf_counter() - t0
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = time.perf_counter() - t0 - t_lower
             mem = compiled.memory_analysis()
             cost = normalize_cost_analysis(compiled.cost_analysis())
             hlo = compiled.as_text()

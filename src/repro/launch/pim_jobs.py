@@ -25,7 +25,22 @@ import json
 import sys
 import time
 
+from repro.obs import (TRACER, Column, format_ratio, render_table,
+                       write_chrome_trace)
 from repro.sched import job_report, load_manifest, run_manifest
+
+#: the per-job report columns every metric row renders through
+#: (repro.obs.format — shared with pim_ml/compare so new metrics appear
+#: in every CLI by adding one spec here)
+JOB_COLUMNS = (
+    Column("name", "job", width=28, align="<"),
+    Column("state", width=10, align="<"),
+    Column("cores", width=5, spec="d"),
+    Column("steps", width=6, spec="d"),
+    Column("kernel_launches", "launches", width=8, spec="d", default="0"),
+    Column("modeled_dpu_seconds", "dpu_s", width=10, spec=".3e"),
+    Column("drift_ratio", "drift", width=9, spec=".3g"),
+)
 
 #: the built-in demo manifest (also documents the schema)
 DEMO_MANIFEST = {
@@ -74,6 +89,11 @@ def main(argv=None) -> int:
     ap.add_argument("--retry-budget", type=int, default=0, metavar="N",
                     help="per-job supervised retries from the last "
                          "snapshot before FAILED (default 0)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record a Chrome trace-event timeline of the "
+                         "drain (load in Perfetto / chrome://tracing); "
+                         "one track per target System, memory channel, "
+                         "and job")
     args = ap.parse_args(argv)
 
     if args.manifest is None and not args.demo:
@@ -83,6 +103,8 @@ def main(argv=None) -> int:
     doc = DEMO_MANIFEST if args.manifest is None \
         else load_manifest(args.manifest)
 
+    if args.trace:
+        TRACER.enable()
     t0 = time.perf_counter()
     scheduler, handles = run_manifest(
         doc,
@@ -91,16 +113,14 @@ def main(argv=None) -> int:
         resume=args.resume,
         retry_budget=args.retry_budget)
     makespan = time.perf_counter() - t0
+    if args.trace:
+        write_chrome_trace(TRACER.events(), args.trace)
+        print(f"trace written to {args.trace} "
+              f"({len(TRACER)} events)")
 
     rows = job_report(handles)
-    print(f"{'job':28s} {'state':10s} {'cores':>5s} {'steps':>6s} "
-          f"{'launches':>8s} {'dpu_s':>10s}")
-    for row in rows:
-        print(f"{row['name'][:28]:28s} {row['state']:10s} "
-              f"{row['cores']:5d} {row['steps']:6d} "
-              f"{row.get('kernel_launches', 0):8d} "
-              f"{row['modeled_dpu_seconds']:10.3e}"
-              + (f"  {row['error']}" if "error" in row else ""))
+    print(render_table(rows, JOB_COLUMNS,
+                       extra=lambda row: row.get("error", "")))
     stats = scheduler.stats()
     n_done = stats["jobs"]["done"]
     print(f"\n{len(handles)} jobs, {n_done} done in {makespan:.2f}s "
@@ -111,6 +131,12 @@ def main(argv=None) -> int:
     print(f"system transfers: cpu->pim {s.cpu_to_pim:,} B, "
           f"pim->cpu {s.pim_to_cpu:,} B, "
           f"kernel launches {s.kernel_launches}")
+    ratios = [d["ratio"] for d in stats.get("drift", {}).values()
+              if d.get("ratio")]
+    if ratios:
+        print(f"model drift (wall/modeled): mean "
+              f"{format_ratio(sum(ratios) / len(ratios))} over "
+              f"{len(ratios)} priced job(s)")
     n_restored = sum(1 for r in rows if r.get("restored"))
     n_recoveries = sum(r.get("recoveries", 0) for r in rows)
     if n_restored or n_recoveries:

@@ -30,6 +30,17 @@ from repro.api import (get_workload, list_workloads, make_estimator,
                        make_system)
 from repro.data.synthetic import (make_blobs, make_classification,
                                   make_linear_dataset)
+from repro.obs import Column
+
+#: per-fit table columns (repro.obs.format — the shared formatter the
+#: launch CLIs render through)
+FIT_COLUMNS = (
+    Column("version", width=16, align="<"),
+    Column("sweep", width=14, align="<", default=""),
+    Column("score", width=9, spec=".4f"),
+    Column("fit_s", width=7, spec=".2f"),
+    Column("shard_transfers", "shards", width=6, spec="d"),
+)
 
 
 def _parse_value(text: str):
@@ -119,6 +130,9 @@ def main(argv=None):
           f"reduce={args.reduce}), dataset "
           f"{args.samples}x{args.features} (resident)")
 
+    # stream one formatted row per fit (header first — the shared
+    # column specs keep this table in lockstep with the other CLIs)
+    print("  " + " ".join(c.head() for c in FIT_COLUMNS))
     for ver in versions:
         for skey, sval in sweep:
             p = dict(params)
@@ -129,10 +143,11 @@ def main(argv=None):
                                  **p).fit(ds)
             dt = time.perf_counter() - t0
             score = (est.score(X) if wl.unsupervised else est.score(X, y))
-            tag = f" {skey}={sval}" if skey else ""
-            print(f"  {ver:16s}{tag:14s} score={score:9.4f}  "
-                  f"fit={dt:6.2f}s  shard_transfers="
-                  f"{system.stats.shard_transfers}")
+            row = {"version": ver,
+                   "sweep": f"{skey}={sval}" if skey else None,
+                   "score": score, "fit_s": dt,
+                   "shard_transfers": system.stats.shard_transfers}
+            print("  " + " ".join(c.cell(row) for c in FIT_COLUMNS))
 
     s = system.stats
     if system.kind == "pim":

@@ -1,0 +1,75 @@
+"""Run-metadata envelope for persisted results (DESIGN.md §13.7).
+
+Every JSON the benchmarks and CLIs write into ``benchmarks/out/`` is a
+point on the repo's perf trajectory — but a bare number is
+unattributable once the tree moves.  :func:`run_meta` captures the
+provenance that makes a record comparable across PRs:
+
+  ``git_sha``      commit the run was taken at (None outside a repo)
+  ``git_dirty``    whether the worktree had uncommitted changes
+  ``timestamp``    UTC ISO-8601 wall-clock instant
+  ``jax_version``  the library actually executing the kernels
+  ``python`` / ``platform``  interpreter and host identification
+
+:func:`write_json` stamps the envelope under a ``run_meta`` key and
+writes atomically (tmp + rename) — ``benchmarks/common.py`` re-exports
+it so every bench shares one writer.
+"""
+from __future__ import annotations
+
+import json
+import os
+import platform as _platform
+import subprocess
+import sys
+from datetime import datetime, timezone
+from typing import Optional
+
+
+def _git(args, cwd: str) -> Optional[str]:
+    try:
+        out = subprocess.run(
+            ["git"] + args, cwd=cwd, capture_output=True, text=True,
+            timeout=10)
+    except (OSError, subprocess.SubprocessError):
+        return None
+    if out.returncode != 0:
+        return None
+    return out.stdout.strip()
+
+
+def run_meta(cwd: Optional[str] = None) -> dict:
+    """The provenance envelope; every field degrades to None rather
+    than raising (git absent, detached container, ...)."""
+    cwd = cwd or os.path.dirname(os.path.abspath(__file__))
+    sha = _git(["rev-parse", "HEAD"], cwd)
+    status = _git(["status", "--porcelain"], cwd)
+    try:
+        import jax
+        jax_version = jax.__version__
+    except Exception:
+        jax_version = None
+    return {
+        "git_sha": sha,
+        "git_dirty": bool(status) if status is not None else None,
+        "timestamp": datetime.now(timezone.utc).isoformat(),
+        "jax_version": jax_version,
+        "python": sys.version.split()[0],
+        "platform": _platform.platform(),
+    }
+
+
+def write_json(path: str, payload: dict, indent: int = 2) -> dict:
+    """Stamp ``payload["run_meta"]`` and write atomically; returns the
+    stamped payload.  The envelope is added at write time so records
+    carry the provenance of the moment they were persisted."""
+    payload = dict(payload)
+    payload["run_meta"] = run_meta()
+    directory = os.path.dirname(path)
+    if directory:
+        os.makedirs(directory, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as fh:
+        json.dump(payload, fh, indent=indent)
+    os.replace(tmp, path)
+    return payload

@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Optional
 
+from ..obs.trace import TRACER
 from ..systems import PimSystem, TransferStats
 from ..systems.base import _MirrorStats
 from ..systems.topology import (DEFAULT_DPUS_PER_RANK, PimTopology,
@@ -112,7 +113,8 @@ class BankAllocator:
     def __init__(self, n_cores: int,
                  rank_size: Optional[int] = None,
                  topology: Optional[PimTopology] = None,
-                 placement: str = "first_fit"):
+                 placement: str = "first_fit",
+                 trace_track: Optional[str] = None):
         if n_cores <= 0:
             raise ValueError(f"n_cores must be positive, got {n_cores}")
         if rank_size is None:
@@ -136,8 +138,22 @@ class BankAllocator:
                                              dpus_per_rank=rank_size)
         self.topology = topology
         self.placement = placement
+        #: trace timeline for channel-occupancy counter events (e.g.
+        #: ``channels:pim`` from the scheduler); None = no emission
+        self.trace_track = trace_track
         self._free: List[tuple] = [(0, n_cores)]   # sorted (start, size)
         self._leases: dict[int, BankLease] = {}
+
+    def _trace_occupancy(self, lease: BankLease) -> None:
+        """Sample the occupancy of the channels a lease touches onto
+        the allocator's trace track (one counter series per channel —
+        the per-memory-channel rows of the Chrome timeline)."""
+        if not TRACER.enabled or self.trace_track is None:
+            return
+        occ = self.channel_occupancy()
+        for ch in (lease.channels or tuple(sorted(occ))):
+            TRACER.counter(f"channel{ch}.occupancy", occ.get(ch, 0.0),
+                           track=self.trace_track)
 
     def align(self, n_cores: Optional[int]) -> int:
         """Round a request up to whole ranks (None = one rank)."""
@@ -168,6 +184,7 @@ class BankAllocator:
         self._free[extent_index:extent_index + 1] = remainders
         lease = self._make_lease(start, size)
         self._leases[lease.start] = lease
+        self._trace_occupancy(lease)
         return lease
 
     def _contention_score(self, start: int, size: int) -> tuple:
@@ -226,6 +243,7 @@ class BankAllocator:
             else:
                 merged.append((start, size))
         self._free = merged
+        self._trace_occupancy(lease)
 
     @property
     def free_cores(self) -> int:

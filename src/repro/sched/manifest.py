@@ -226,6 +226,11 @@ def job_report(handles: List[JobHandle]) -> List[dict]:
             "iters": h.iters,
             "fused": h.fused,
             "modeled_dpu_seconds": h.modeled_seconds,
+            # drift accounting (DESIGN.md §13.5): measured chunk wall
+            # time next to the cost-model pricing; ratio None when the
+            # model never priced this job (non-PIM target)
+            "measured_seconds": h.measured_seconds,
+            "drift_ratio": h.drift_ratio,
         }
         if h.recoveries:
             row["recoveries"] = h.recoveries

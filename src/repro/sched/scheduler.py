@@ -41,6 +41,7 @@ dataset, one batched kernel launch per step for the whole gang.
 """
 from __future__ import annotations
 
+import dataclasses
 import enum
 import itertools
 import json
@@ -53,6 +54,8 @@ from ..api.registry import FitResult, TrainerSpec, Workload, get_workload
 from ..elastic import (InjectedFault, check_migration, injector_from_env,
                        job_fingerprint, snapshot_iters)
 from ..elastic import checkpoint as elastic_ckpt
+from ..obs.metrics import DRIFT_BUCKETS, Histogram, MetricsRegistry
+from ..obs.trace import TRACER
 from ..systems import (ChunkTick, HierarchicalCostModel, PimTopology,
                        System, TransferStats)
 from ..train.fault_tolerance import StragglerMonitor
@@ -126,6 +129,12 @@ class JobHandle:
         self.error: Optional[BaseException] = None
         self.transfer: Optional[TransferStats] = None
         self.modeled_seconds = 0.0
+        #: wall seconds of the scheduling chunks this job was live in
+        #: (gang members each see the full shared-chunk time); paired
+        #: with ``modeled_seconds`` it yields the drift ratio
+        self.measured_seconds = 0.0
+        #: per-chunk measured/modeled wall-time ratios (DESIGN.md §13.5)
+        self.drift = Histogram(DRIFT_BUCKETS)
         self.lease: Optional[BankLease] = None
         self.fused = False
         self.retry_budget = 0
@@ -162,6 +171,40 @@ class JobHandle:
         workloads lose their progress and restart on resume."""
         if self.state is JobState.RUNNING:
             self._preempt_requested = True
+
+    @property
+    def drift_ratio(self) -> Optional[float]:
+        """Whole-job measured/modeled wall-time ratio — the PR 7
+        calibration as a continuously monitored invariant (DESIGN.md
+        §13.5).  None when the cost model never priced this job
+        (non-PIM target, unknown workload): absence, not a guess."""
+        if self.modeled_seconds <= 0.0:
+            return None
+        return self.measured_seconds / self.modeled_seconds
+
+    def metrics(self) -> dict:
+        """The job's telemetry as one JSON-serializable record: progress
+        counters, drift accounting, elastic counters, and — when the
+        lifecycle settled them — the attributable TransferStats /
+        modeled-GPU deltas of its slice."""
+        out = {
+            "state": self.state.value,
+            "target": self.target,
+            "steps": self.steps,
+            "iters": self.iters,
+            "modeled_seconds": self.modeled_seconds,
+            "measured_seconds": self.measured_seconds,
+            "drift_ratio": self.drift_ratio,
+            "drift": self.drift.to_dict(),
+            "preemptions": self.preemptions,
+            "recoveries": self.recoveries,
+            "straggler_flags": self.straggler_flags,
+        }
+        if self.transfer is not None:
+            out["transfer"] = dataclasses.asdict(self.transfer)
+        if self.gpu is not None:
+            out["gpu_model"] = dataclasses.asdict(self.gpu)
+        return out
 
     def __repr__(self) -> str:
         return (f"JobHandle({self.name!r}, {self.state.value}, "
@@ -234,6 +277,9 @@ class _Runnable:
         self.seq = seq
         self.n_cores = n_cores
         self.target = target
+        #: trace/track label: the job name, or the gang spelled as one
+        self.label = (jobs[0].name if len(jobs) == 1
+                      else f"gang[{len(jobs)}]:{jobs[0].name}")
         self.lease: Optional[BankLease] = None
         self.slice: Optional[System] = None
         #: modeled whole-job seconds (backfill ordering key; 0.0 when
@@ -328,7 +374,11 @@ class _SingleRun(_Runnable):
         job.state = JobState.PREEMPTED
         job.preemptions += 1
         self._account(job)
+        if TRACER.enabled:
+            TRACER.instant("preempt", track=f"job:{job.name}",
+                           cat="elastic", steps=job.steps, iters=job.iters)
         if sched is not None:
+            sched.metrics.counter("sched.preemptions").inc()
             sched._persist_job(job)
         return True
 
@@ -345,10 +395,19 @@ class _SingleRun(_Runnable):
             job.iters = snapshot_iters(job.snapshot)
             self.gen = self._make_gen(job, job.snapshot)
             self._last_tick = None
+            if TRACER.enabled:
+                TRACER.instant("retry", track=f"job:{job.name}",
+                               cat="elastic", recoveries=job.recoveries,
+                               error=type(err).__name__)
+            if sched is not None:
+                sched.metrics.counter("sched.retries").inc()
             return False
         job.error = err
         job.state = JobState.FAILED
         self._account(job)
+        if TRACER.enabled:
+            TRACER.instant("fail", track=f"job:{job.name}", cat="elastic",
+                           error=type(err).__name__)
         return True
 
     def advance(self, sched: "Optional[PimScheduler]" = None) -> bool:
@@ -436,7 +495,12 @@ class _FusedRun(_Runnable):
                 job.state = JobState.PREEMPTED
                 job.preemptions += 1
                 self._account(job)
+                if TRACER.enabled:
+                    TRACER.instant("preempt", track=f"job:{job.name}",
+                                   cat="elastic", steps=job.steps,
+                                   fused=True)
                 if sched is not None:
+                    sched.metrics.counter("sched.preemptions").inc()
                     sched._persist_job(job)
         it_before = self.gang.it
         try:
@@ -511,12 +575,16 @@ class PimScheduler:
         # scores placements against its system's own rank tree when one
         # exists ("contention" policy, DESIGN.md §12.4)
         self.placement = placement
+        #: scheduler-scoped control-plane metrics (admissions, chunks,
+        #: evictions, drift histograms — repro.obs.metrics)
+        self.metrics = MetricsRegistry()
         self._allocators = {
             name: BankAllocator(
                 sys_.config.n_cores,
                 rank_size if name == self.default_target else None,
                 topology=getattr(sys_, "topology", None),
-                placement=placement)
+                placement=placement,
+                trace_track=f"channels:{name}")
             for name, sys_ in self.systems.items()}
         self.system = self.systems[self.default_target]
         self.allocator = self._allocators[self.default_target]
@@ -720,6 +788,9 @@ class PimScheduler:
                          next(self._seq), job.n_cores, job.target,
                          resume_state=job.snapshot)
         self._queue.append(new)
+        if TRACER.enabled:
+            TRACER.instant("requeue", track=f"job:{job.name}",
+                           cat="elastic", iters=job.iters)
 
     def _find_run(self, job: JobHandle) -> _Runnable:
         for pool in (self._running, self._finished, self._queue):
@@ -751,6 +822,10 @@ class PimScheduler:
         victims.sort(key=lambda r: (r.priority, -r.seq))
         for victim in victims:
             self._preempt_running(victim, requeue=True)
+            self.metrics.counter("sched.evictions").inc()
+            if TRACER.enabled:
+                TRACER.instant("evict", track="sched", cat="sched",
+                               victim=victim.label, by=run.label)
             lease = alloc.allocate(run.n_cores)
             if lease is not None:
                 return lease
@@ -773,6 +848,10 @@ class PimScheduler:
             if self._preempt_running(run, requeue=True) is not None:
                 moved += 1
         self._admit()
+        self.metrics.counter("sched.defragments").inc()
+        if TRACER.enabled:
+            TRACER.instant("defragment", track="sched", cat="sched",
+                           target=target, moved=moved)
         return moved
 
     def _admit(self) -> None:
@@ -809,6 +888,11 @@ class PimScheduler:
                 self._finished.append(run)
                 continue
             self._running.append(run)
+            self.metrics.counter("sched.admissions").inc()
+            if TRACER.enabled:
+                TRACER.instant("admit", track="sched", cat="sched",
+                               job=run.label, target=run.target,
+                               cores=lease.n_cores, start=lease.start)
 
     def _observe_stragglers(self, run: _Runnable, dt: float) -> None:
         """Feed each live job's per-chunk wall time into its
@@ -823,6 +907,32 @@ class PimScheduler:
             if mon.observe(dt):
                 job.straggler_flags += 1
 
+    def _account_drift(self, run: _Runnable, dt: float,
+                       before: dict) -> None:
+        """Per-chunk modeled-vs-measured settlement (DESIGN.md §13.5):
+        every job live at the chunk start is charged the chunk's wall
+        time, and — when the cost model priced any progress this chunk —
+        one drift-ratio observation lands on the job's histogram and the
+        scheduler-wide one.  Gang members share a launch, so each lane
+        sees the full chunk wall time (the ratio then reads as
+        wall-per-lane, comparable across fused/unfused runs of the same
+        job, not as machine throughput)."""
+        chunks = self.metrics.counter("sched.chunks")
+        drift_hist = None   # materialized only when a ratio exists
+        for job in run.jobs:
+            if job.id not in before:
+                continue    # finished before this chunk: not charged
+            job.measured_seconds += dt
+            chunks.inc()
+            modeled = job.modeled_seconds - before[job.id]
+            if modeled > 0.0 and dt > 0.0:
+                ratio = dt / modeled
+                job.drift.observe(ratio)
+                if drift_hist is None:
+                    drift_hist = self.metrics.histogram(
+                        "sched.drift_ratio", DRIFT_BUCKETS)
+                drift_hist.observe(ratio)
+
     def step(self) -> bool:
         """One scheduling turn: admit what fits, then advance every
         running job by one gang step (round-robin, admission order).
@@ -833,9 +943,24 @@ class PimScheduler:
         for run in list(self._running):
             if run not in self._running:
                 continue    # evicted mid-turn by a priority preemption
+            # drift accounting (DESIGN.md §13.5): modeled progress this
+            # chunk is the delta each live job's _step_seconds pricing
+            # adds during advance; wall time is the chunk's perf_counter
+            # envelope.  Snapshot first, settle in _account_drift.
+            before = {j.id: j.modeled_seconds for j in run.jobs
+                      if not j.done}
             t0 = time.perf_counter()
-            finished = run.advance(self)
-            self._observe_stragglers(run, time.perf_counter() - t0)
+            if TRACER.enabled:
+                with TRACER.span("chunk", f"target:{run.target}",
+                                 "chunk", job=run.label):
+                    with TRACER.span(run.label, f"job:{run.label}",
+                                     "chunk"):
+                        finished = run.advance(self)
+            else:
+                finished = run.advance(self)
+            dt = time.perf_counter() - t0
+            self._observe_stragglers(run, dt)
+            self._account_drift(run, dt, before)
             if finished:
                 self._allocators[run.target].release(run.lease)
                 self._running.remove(run)
@@ -893,6 +1018,11 @@ class PimScheduler:
         self._queue.append(run)
         if handle not in self.handles:
             self.handles.append(handle)
+        self.metrics.counter("sched.resumes").inc()
+        if TRACER.enabled:
+            TRACER.instant("resume", track=f"job:{handle.name}",
+                           cat="elastic", target=to_target,
+                           iters=handle.iters)
         return handle
 
     def _find_data(self, handle: JobHandle) -> tuple:
@@ -958,6 +1088,10 @@ class PimScheduler:
         train/checkpoint.py's format — see repro/elastic/checkpoint)."""
         if self.checkpoint_dir is None or job.snapshot is None:
             return
+        self.metrics.counter("sched.checkpoints").inc()
+        if TRACER.enabled:
+            TRACER.instant("checkpoint", track=f"job:{job.name}",
+                           cat="elastic", steps=job.steps)
         elastic_ckpt.save_snapshot(
             elastic_ckpt.job_dir(self.checkpoint_dir, job.name),
             job.snapshot,
@@ -1042,6 +1176,28 @@ class PimScheduler:
             }
             for name, f in ((n, a.fragmentation())
                             for n, a in self._allocators.items())}
+        # unified telemetry (DESIGN.md §13): the scheduler's own
+        # control-plane metrics, the parent Systems' transfer totals
+        # (each job's attributable share lives on its handle), per-job
+        # drift accounting, and the modeled-GPU roofline totals
+        out["metrics"] = self.metrics.to_dict()
+        out["transfer"] = {
+            name: dataclasses.asdict(sys_.stats.snapshot())
+            for name, sys_ in self.systems.items()}
+        gpu = {name: dataclasses.asdict(sys_.gpu.snapshot())
+               for name, sys_ in self.systems.items()
+               if getattr(sys_, "gpu", None) is not None}
+        if gpu:
+            out["gpu_model"] = gpu
+        out["drift"] = {
+            h.name: {
+                "modeled_seconds": h.modeled_seconds,
+                "measured_seconds": h.measured_seconds,
+                "ratio": h.drift_ratio,
+                "chunks": h.drift.count,
+                "mean_chunk_ratio": h.drift.mean,
+            }
+            for h in self.handles if h.measured_seconds > 0.0}
         return out
 
     def capacity_estimate(self, doc: dict) -> dict:

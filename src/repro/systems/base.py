@@ -45,6 +45,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs.trace import NULL_SPAN, TRACER
+
 
 class ReduceVia(enum.Enum):
     """Legacy reduction selector (kept for config compatibility; the
@@ -521,6 +523,21 @@ class System:
         self._jit_cache: dict = {}
         self._kernels: dict[str, Callable] = {}
         self._kernel_gen: dict[str, int] = {}
+        #: trace timeline for this system's kernel launches (precomputed
+        #: so the hot path never builds the string — DESIGN.md §13.2)
+        self._trace_track = f"system:{self.kind}"
+
+    def _launch_span(self, op: str, kkey):
+        """Span covering one kernel launch on the system's trace track.
+
+        The overhead contract (repro.obs.trace): when tracing is off
+        this returns the shared no-op before any span *name* is built —
+        the f-string below never runs on the untraced hot path."""
+        if not TRACER.enabled:
+            return NULL_SPAN
+        name = (kkey[1] if kkey[0] == "named"
+                else getattr(kkey[1], "__name__", "fn"))
+        return TRACER.span(f"{op}:{name}", self._trace_track, "launch")
 
     # -- identity ------------------------------------------------------------
 
@@ -680,7 +697,8 @@ class System:
         self.stats.kernel_launches += 1
         self.stats.host_syncs += 1
         self._charge_launch_operands(sharded, replicated)
-        out = step(tuple(sharded), tuple(replicated))
+        with self._launch_span("map_reduce", kkey):
+            out = step(tuple(sharded), tuple(replicated))
         self._record_execution(key, step, (tuple(sharded),
                                            tuple(replicated)))
         self._charge_reduce(strat, out)
@@ -707,7 +725,8 @@ class System:
         self.stats.kernel_launches += 1
         self.stats.host_syncs += 1
         self._charge_launch_operands(sharded, replicated)
-        out = step(tuple(sharded), tuple(replicated))
+        with self._launch_span("custom", kkey):
+            out = step(tuple(sharded), tuple(replicated))
         self._record_execution(key, step, (tuple(sharded),
                                            tuple(replicated)))
         self._charge_reduce_custom(out)
@@ -726,7 +745,8 @@ class System:
             self._jit_cache[key] = step
         self.stats.kernel_launches += 1
         self._charge_elementwise(sharded, replicated)
-        out = step(tuple(sharded), tuple(replicated))
+        with self._launch_span("elem", kkey):
+            out = step(tuple(sharded), tuple(replicated))
         self._record_execution(key, step, (tuple(sharded),
                                            tuple(replicated)))
         return out
@@ -896,7 +916,12 @@ class StepProgram:
         self.system._charge_chunk(
             carry, sharded, self._reduced_shape(carry, sharded, xs),
             self.strategy, k)
-        carry, outs = chunk(carry, sharded, xs)
+        if TRACER.enabled:
+            with TRACER.span(f"chunk:{self.name}",
+                             self.system._trace_track, "launch", k=k):
+                carry, outs = chunk(carry, sharded, xs)
+        else:
+            carry, outs = chunk(carry, sharded, xs)
         self.system._record_execution(key, chunk, (carry, sharded, xs),
                                       k=k)
         # one pim->cpu sync per chunk boundary: final carry + emits

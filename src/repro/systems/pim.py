@@ -54,6 +54,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..compat import shard_map
 from ..core.quantization import storage_bytes
+from ..obs.trace import TRACER
 from .base import ReduceVia, System
 from .topology import (DEFAULT_RANKS_PER_CHANNEL, DPU_FREQ_HZ,
                        DPU_MRAM_BYTES_PER_CYCLE, DPU_OP_CYCLES,
@@ -156,6 +157,9 @@ class PimSystem(System):
         """Host -> all cores broadcast of model state (counted per core)."""
         nbytes = sum(np.asarray(v).nbytes for v in jax.tree_util.tree_leaves(tree))
         self.stats.cpu_to_pim += nbytes * self.config.n_cores
+        if TRACER.enabled:
+            TRACER.instant("broadcast", self._trace_track, "transfer",
+                           bytes=nbytes * self.config.n_cores)
         if self._mesh is not None:
             tree = jax.device_put(
                 tree, NamedSharding(self._mesh, P()))  # replicated

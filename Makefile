@@ -5,11 +5,13 @@
 # `make compare` runs the Fig. 13-17 PIM/host/gpu-model comparison on
 # tiny shapes and records benchmarks/out/compare.json;
 # `make placement-bench` runs the contention-aware vs first-fit
-# placement comparison and records benchmarks/out/placement_bench.json.
+# placement comparison and records benchmarks/out/placement_bench.json;
+# `make serve-bench` runs the Poisson sustained-load service benchmark
+# and records benchmarks/out/service_bench.json.
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: check test bench bench-fusion compare placement-bench quickstart \
-	jobs elastic-demo
+.PHONY: check test bench bench-fusion compare placement-bench \
+	serve-bench quickstart jobs elastic-demo
 
 check:
 	./scripts/ci.sh
@@ -28,6 +30,9 @@ compare:
 
 placement-bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.placement_bench
+
+serve-bench:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.service_bench
 
 quickstart:
 	PYTHONPATH=$(PYTHONPATH) python examples/quickstart.py

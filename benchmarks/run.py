@@ -21,6 +21,7 @@ MODULES = [
     "benchmarks.step_fusion_bench",     # fused k-step scans vs per-step
     "benchmarks.lm_ablation",           # beyond-paper LM ablations
     "benchmarks.serve_bench",           # serving throughput
+    "benchmarks.service_bench",         # async service under load
     "benchmarks.roofline_summary",      # dry-run roofline terms (§Perf)
 ]
 

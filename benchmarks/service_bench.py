@@ -1,0 +1,128 @@
+"""Sustained-load benchmark for the async training service (§14.2).
+
+Drives the serving :class:`~repro.sched.scheduler.PimScheduler` the way
+a tenant population would: jobs arrive on a Poisson process (seeded —
+the arrival trace is reproducible) while the background drain loop runs,
+so submission, admission, chunk draining, and completion all overlap.
+Measures what a service operator would watch:
+
+  ``jobs_per_second``     completed jobs over the measurement window;
+  ``queue_latency``       submission -> first admission, p50/p99;
+  ``completion_latency``  submission -> terminal state, p50/p99;
+  ``slo``                 deadline misses plus cost-model admission
+                          rejections under a tight ``max_modeled_seconds``
+                          (the §14.3 knobs exercised under load).
+
+Results land in ``benchmarks/out/service_bench.json`` through the shared
+run-metadata envelope.
+
+  PYTHONPATH=src python -m benchmarks.service_bench
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import row, write_json
+from repro.api import PimConfig, PimSystem
+from repro.data.synthetic import make_linear_dataset
+from repro.sched import JobState, PimScheduler
+
+N_JOBS = 24
+ARRIVAL_RATE = 40.0          # jobs/s offered load (Poisson)
+N_SAMPLES, N_FEATURES = 512, 8
+JOB_CORES, MACHINE_CORES = 4, 16
+N_ITERS, FUSE = 60, 10
+SEED = 0
+OUT_PATH = os.path.join(os.path.dirname(__file__), "out",
+                        "service_bench.json")
+
+
+def _percentiles(xs):
+    if not xs:
+        return {"count": 0, "p50": None, "p99": None}
+    xs = sorted(xs)
+
+    def pct(q):
+        import math
+        return xs[min(len(xs) - 1, max(0, math.ceil(q * len(xs)) - 1))]
+
+    return {"count": len(xs), "mean": sum(xs) / len(xs),
+            "p50": pct(0.50), "p99": pct(0.99), "max": xs[-1]}
+
+
+def run():
+    rng = np.random.RandomState(SEED)
+    X, y, _ = make_linear_dataset(N_SAMPLES, N_FEATURES, seed=SEED)
+
+    system = PimSystem(PimConfig(n_cores=MACHINE_CORES))
+    sched = PimScheduler(system, rank_size=JOB_CORES, policy="deadline")
+
+    # warmup: compile the fused step program once so the measured window
+    # times scheduling, not XLA compilation
+    warm = sched.submit("linreg", (X, y), version="int32", name="warmup",
+                        n_cores=JOB_CORES, n_iters=N_ITERS,
+                        fuse_steps=FUSE)
+    sched.drain()
+    assert warm.state is JobState.DONE
+
+    gaps = rng.exponential(1.0 / ARRIVAL_RATE, size=N_JOBS)
+    sched.serve(poll_interval=0.005)
+    t0 = time.perf_counter()
+    handles = []
+    for i, gap in enumerate(gaps):
+        time.sleep(float(gap))
+        handles.append(sched.submit(
+            "linreg", (X, y), version="int32", name=f"tenant{i}",
+            n_cores=JOB_CORES, deadline_seconds=5.0,
+            n_iters=N_ITERS, fuse_steps=FUSE))
+    assert sched.wait(handles, timeout=120.0), "drain timed out"
+    wall = time.perf_counter() - t0
+    sched.shutdown(wait=True)
+
+    done = [h for h in handles if h.state is JobState.DONE]
+    assert len(done) == N_JOBS, \
+        f"lost jobs: {[h.state for h in handles if h.state is not JobState.DONE]}"
+    queue_lat = _percentiles([h.queue_latency for h in done])
+    completion_lat = _percentiles([h.completion_latency for h in done])
+
+    # SLO admission under the same load model: a bound the cost model
+    # prices every job above must reject everything, queue nothing
+    slo_sched = PimScheduler(system, rank_size=JOB_CORES,
+                             max_modeled_seconds=1e-9)
+    rejected = [slo_sched.submit("linreg", (X, y), version="int32",
+                                 n_cores=JOB_CORES, n_iters=N_ITERS)
+                for _ in range(4)]
+    assert all(h.state is JobState.FAILED for h in rejected)
+    assert slo_sched.idle
+
+    results = {
+        "n_jobs": N_JOBS,
+        "offered_jobs_per_second": ARRIVAL_RATE,
+        "machine_cores": MACHINE_CORES,
+        "job_cores": JOB_CORES,
+        "wall_seconds": wall,
+        "jobs_per_second": len(done) / wall,
+        "queue_latency": queue_lat,
+        "completion_latency": completion_lat,
+        "slo": {
+            "deadline_misses": sum(1 for h in done if h.deadline_missed),
+            "admission_rejections": len(rejected),
+        },
+        "scheduler_metrics": sched.metrics.to_dict(),
+    }
+    write_json(OUT_PATH, results)
+    return [
+        row("service.sustained_load", 1e6 / results["jobs_per_second"],
+            f"jobs/s={results['jobs_per_second']:.2f};"
+            f"q_p50={queue_lat['p50'] * 1e3:.1f}ms;"
+            f"q_p99={queue_lat['p99'] * 1e3:.1f}ms;"
+            f"c_p99={completion_lat['p99'] * 1e3:.1f}ms"),
+    ]
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

@@ -16,11 +16,22 @@ are bit-identical to the unfused loop.  Results are recorded to
 ``benchmarks/out/step_fusion_bench.json`` — the acceptance number is
 ``lin_int32.speedup`` (>= 5x on the 500-iteration LIN-INT32 fit).
 
+The ``pipeline_lin_int32`` case measures the double-buffered chunk
+pipeline (DESIGN.md §14.1) on a record-heavy fit: every chunk boundary
+evaluates the model and appends a durable (fsync'd) trajectory record,
+so the host drain has real work to hide behind the in-flight chunk.
+``pipeline_depth=1`` serializes drain and dispatch (the §9 cadence);
+``pipeline_depth=2`` overlaps them.  Reported as the median of paired
+depth-1/depth-2 ratios (paired to cancel storage-latency drift — the
+acceptance number is ``pipeline_lin_int32.speedup`` >= 1.15x), with
+bit-identity of weights, bias, and recorded history asserted.
+
   PYTHONPATH=src python -m benchmarks.step_fusion_bench
 """
 from __future__ import annotations
 
 import os
+import tempfile
 import time
 
 import numpy as np
@@ -74,6 +85,89 @@ def _case(name, fit, make_cfg, ds, iters, bitwise=True):
     return out
 
 
+#: pipeline case: chunks per fit and per-boundary record size.  The
+#: record is sized like a real per-boundary training artifact
+#: (predictions + residuals + diagnostics); what matters to the
+#: measurement is that the host's durable write genuinely waits on
+#: storage while the next chunk computes.  The shape is chosen so chunk
+#: compute exceeds the typical fsync latency — the regime where the
+#: depth-2 pipeline fully hides the storage wait and the ratio is
+#: stable against storage-latency drift.
+PIPE_SAMPLES, PIPE_ITERS, PIPE_FUSE = 32768, 128, 16
+PIPE_RECORD_KB = 4096
+PIPE_PAIRS = 7
+
+
+def _pipeline_case():
+    """Record-heavy fused LIN-INT32 fit: depth-2 pipeline vs the
+    depth-1 serial cadence, paired runs, median ratio."""
+    X, y, _ = make_linear_dataset(PIPE_SAMPLES, N_FEATURES, seed=0)
+    pim = PimSystem(PimConfig(n_cores=CORES))
+    ds = pim.put(X, y)
+    log_path = tempfile.mktemp(prefix="pipeline_records_",
+                               suffix=".bin")
+
+    reps = PIPE_RECORD_KB * 256 // PIPE_SAMPLES
+
+    def eval_fn(w, b):
+        pred = (X @ w + b).astype(np.float32)
+        payload = pred.tobytes()   # serialize once, append repeatedly:
+        with open(log_path, "ab") as fh:   # the drain is storage wait,
+            for _ in range(reps):          # not host memcpy
+                fh.write(payload)
+            fh.flush()
+            os.fsync(fh.fileno())   # durable record: real storage wait
+        return float(np.mean((pred - y) ** 2))
+
+    cfgs = {depth: linreg.GdConfig(
+                version="int32", n_iters=PIPE_ITERS,
+                fuse_steps=PIPE_FUSE, record_every=PIPE_FUSE,
+                pipeline_depth=depth)
+            for depth in (1, 2)}
+    results = {}
+    try:
+        for depth in (1, 2):             # warmup: compile both paths
+            results[depth] = linreg.fit(ds, cfgs[depth],
+                                        eval_fn=eval_fn)
+        r1, r2 = results[1], results[2]
+        exact = bool(np.array_equal(r1.w, r2.w) and r1.b == r2.b
+                     and r1.history == r2.history)
+        if not exact:
+            raise AssertionError(
+                "pipeline_lin_int32: depth-2 result diverged from the "
+                "serial cadence")
+        ratios, t1s, t2s = [], [], []
+        for _ in range(PIPE_PAIRS):
+            t = {}
+            for depth in (1, 2):
+                if os.path.exists(log_path):
+                    os.unlink(log_path)
+                t0 = time.perf_counter()
+                linreg.fit(ds, cfgs[depth], eval_fn=eval_fn)
+                t[depth] = time.perf_counter() - t0
+            ratios.append(t[1] / t[2])
+            t1s.append(t[1])
+            t2s.append(t[2])
+    finally:
+        if os.path.exists(log_path):
+            os.unlink(log_path)
+    ratios.sort()
+    t1s.sort()
+    t2s.sort()
+    return {
+        "n_iters": PIPE_ITERS,
+        "fuse_steps": PIPE_FUSE,
+        "record_every": PIPE_FUSE,
+        "record_kb": PIPE_RECORD_KB,
+        "pairs": PIPE_PAIRS,
+        "unpipelined_s": t1s[len(t1s) // 2],
+        "pipelined_s": t2s[len(t2s) // 2],
+        #: median of paired ratios — robust to storage-latency drift
+        "speedup": ratios[len(ratios) // 2],
+        "bit_identical": True,
+    }
+
+
 def run():
     X, y, _ = make_linear_dataset(N_SAMPLES, N_FEATURES, seed=0)
     yc = (y > np.median(y)).astype(np.float32)
@@ -109,10 +203,17 @@ def run():
             k=16, max_iters=kme_iters, tol=0.0, seed=3, fuse_steps=fuse),
         dsb, kme_iters, bitwise=False)
 
+    results["pipeline_lin_int32"] = _pipeline_case()
+
     write_json(OUT_PATH, results)
 
     rows = []
     for name, r in results.items():
+        if "fused_s" not in r:   # the pipeline case reports its own keys
+            rows.append(row(
+                f"fusion.{name}", r["pipelined_s"] * 1e6 / r["n_iters"],
+                f"speedup={r['speedup']:.2f}x;bit={r['bit_identical']}"))
+            continue
         rows.append(row(
             f"fusion.{name}", r["fused_s"] * 1e6 / r["n_iters"],
             f"speedup={r['speedup']:.2f}x;"

@@ -6,7 +6,10 @@
 # isolation), the elastic runtime (preempt/resume bit-identity,
 # migration matrix, fault injection, crash-resume; sustained churn is
 # @slow), the step-fusion engine (fused-vs-serial bit parity, the
-# one-launch-per-chunk assertion), the backend-portable System protocol
+# one-launch-per-chunk assertion, chunk-pipeline depth bit-identity),
+# the async training service (serve/shutdown lifecycle, SLO admission,
+# deadline policy, manifest spool; the Poisson soak and the CLI serve
+# run are @slow), the backend-portable System protocol
 # (PIM/host/modeled-GPU parity, mixed-target scheduling), the
 # telemetry layer (tracer overhead contract, Chrome-trace schema +
 # determinism, metrics attribution, drift accounting; the end-to-end
@@ -37,6 +40,7 @@ exec python -m pytest -q -m "not slow" \
     tests/test_pim_system.py \
     tests/test_quantization.py \
     tests/test_sched.py \
+    tests/test_service.py \
     tests/test_sgd_and_loader.py \
     tests/test_step_fusion.py \
     tests/test_systems.py \

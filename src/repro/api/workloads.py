@@ -53,7 +53,8 @@ class LinRegWorkload(Workload):
     resumable = True
     defaults = {"n_iters": 500, "lr": 0.1, "frac_bits": 10, "x8_frac": 7,
                 "w16_frac": 8, "record_every": 0, "minibatch": 0, "seed": 0,
-                "kernel_backend": None, "fuse_steps": 1}
+                "kernel_backend": None, "fuse_steps": 1,
+                "pipeline_depth": 2}
 
     def _config(self, spec: TrainerSpec) -> linreg.GdConfig:
         return linreg.GdConfig(version=spec.version, **spec.params)
@@ -89,7 +90,8 @@ class LogRegWorkload(Workload):
     defaults = {"n_iters": 500, "lr": 5.0, "frac_bits": 10, "x8_frac": 7,
                 "w16_frac": 8, "record_every": 0, "minibatch": 0, "seed": 0,
                 "taylor_terms": 8, "lut_boundary": 20, "lut_frac_bits": 10,
-                "kernel_backend": None, "fuse_steps": 1}
+                "kernel_backend": None, "fuse_steps": 1,
+                "pipeline_depth": 2}
 
     def _config(self, spec: TrainerSpec) -> logreg.LogRegConfig:
         return logreg.LogRegConfig(version=spec.version, **spec.params)
@@ -166,7 +168,7 @@ class KMeansWorkload(Workload):
     resumable = True
     defaults = {"n_clusters": 16, "max_iter": 300, "tol": 1e-4,
                 "n_init": 1, "seed": 0, "kernel_backend": None,
-                "fuse_steps": 1}
+                "fuse_steps": 1, "pipeline_depth": 2}
 
     def _config(self, spec: TrainerSpec) -> kmeans.KMeansConfig:
         p = spec.params
@@ -175,6 +177,7 @@ class KMeansWorkload(Workload):
                                    n_init=p["n_init"], seed=p["seed"],
                                    kernel_backend=p["kernel_backend"],
                                    fuse_steps=p["fuse_steps"],
+                                   pipeline_depth=p["pipeline_depth"],
                                    version=spec.version)
 
     def fit(self, dataset, spec: TrainerSpec) -> FitResult:

@@ -29,7 +29,8 @@ import numpy as np
 
 from ..elastic.state import pack_rng, unpack_rng
 from ..kernels import dispatch
-from ..systems import ChunkTick, System, chunk_schedule, run_steps
+from ..systems import (ChunkPipeline, ChunkTick, System, chunk_schedule,
+                       run_steps)
 from .metrics import frobenius_shift
 
 # 12-bit symmetric range stored in int16 (see docstring).  The quantizing
@@ -69,6 +70,12 @@ class KMeansConfig:
     #: float tolerance, not bit-exactly (the assignment kernel itself is
     #: integer and exact).  1 = the paper's host-orchestrated loop.
     fuse_steps: int = 1
+    #: chunk pipelining (DESIGN.md §14.1): fused chunks in flight before
+    #: the host drains a boundary (2 = double-buffered, 1 = serial
+    #: cadence).  The done-latch makes overshot in-flight chunks frozen
+    #: no-ops, so pipelined convergence is exact — a discarded chunk
+    #: never changes the centroids.  Ignored unless ``fuse_steps > 1``.
+    pipeline_depth: int = 2
 
 
 @dataclasses.dataclass
@@ -263,34 +270,41 @@ def fit_steps(dataset, cfg: Optional[KMeansConfig] = None,
         if restored is not None:
             rng = restored
 
-    carry = None        # device-resident fused chunk state (lazy pull)
     init = init0
     C = None
     done = False
     n_it = 0
     it_sched = 0        # chunk-scheduled iterations (fused resume key)
 
+    def _make_snapshot(C_v, done_v, n_it_v, it_total_v, it_sched_v,
+                       ra, rm):
+        """Snapshot closure bound to one chunk boundary's state.  Under
+        pipelining the device carry has been dispatched past this
+        boundary by drain time; ``best``/``init`` stay live — they only
+        change between restarts, and every boundary of a restart drains
+        (or is discarded) before the restart ends (DESIGN.md §14.1)."""
+        def _snap():
+            arrays = {"C": np.asarray(C_v, np.float32)}
+            meta = {"iters": int(it_total_v), "init": int(init),
+                    "done": bool(done_v), "n_it": int(n_it_v),
+                    "it_sched": int(it_sched_v),
+                    "has_best": best is not None}
+            if best is not None:
+                arrays["best_centroids"] = np.asarray(best.centroids,
+                                                      np.float32)
+                meta["best_inertia"] = float(best.inertia)
+                meta["best_n_iters"] = int(best.n_iters)
+                if best.labels is not None:
+                    arrays["best_labels"] = np.asarray(best.labels)
+            arrays.update(ra)
+            meta.update(rm)
+            return {"arrays": arrays, "meta": meta}
+        return _snap
+
     def _snapshot():
-        if carry is not None:   # fused: pull the device carry on demand
-            C_v = np.asarray(carry[0], np.float32)
-            done_v, n_it_v = bool(carry[1]), int(carry[2])
-        else:
-            C_v, done_v, n_it_v = np.asarray(C, np.float32), done, n_it
-        arrays = {"C": C_v}
-        meta = {"iters": int(it_total), "init": int(init),
-                "done": bool(done_v), "n_it": int(n_it_v),
-                "it_sched": int(it_sched), "has_best": best is not None}
-        if best is not None:
-            arrays["best_centroids"] = np.asarray(best.centroids,
-                                                  np.float32)
-            meta["best_inertia"] = float(best.inertia)
-            meta["best_n_iters"] = int(best.n_iters)
-            if best.labels is not None:
-                arrays["best_labels"] = np.asarray(best.labels)
         ra, rm = pack_rng(rng)
-        arrays.update(ra)
-        meta.update(rm)
-        return {"arrays": arrays, "meta": meta}
+        return _make_snapshot(C, done, n_it, it_total, it_sched,
+                              ra, rm)()
 
     for init in range(init0, cfg.n_init):
         if resume is not None:
@@ -309,19 +323,53 @@ def fit_steps(dataset, cfg: Optional[KMeansConfig] = None,
             n_it = 0
             it_sched = 0
         if program is not None:
-            carry = (jnp.asarray(C), jnp.asarray(bool(done)),
-                     jnp.asarray(n_it, jnp.int32))
+            # Double-buffered chunk pipeline (DESIGN.md §14.1): the
+            # convergence flag of boundary N is read while chunk N+1
+            # executes.  The done-latch freezes a converged carry, so
+            # the overshot in-flight chunk is a frozen no-op — it is
+            # discarded unread, and the converged boundary's carry is
+            # the exact serial result.  Iteration counters advance at
+            # drain time (from dispatch-side tags), so discarded chunks
+            # never count.
+            dcarry = (jnp.asarray(C), jnp.asarray(bool(done)),
+                      jnp.asarray(n_it, jnp.int32))
+            pipe = ChunkPipeline(program, max(1, int(cfg.pipeline_depth)))
+            final = None        # carry of the last drained boundary
+
+            def _drain(bnd):
+                nonlocal it_sched, it_total
+                it_sched, it_total, ra, rm = bnd.tag
+                return ChunkTick(
+                    bnd.k, _make_snapshot(bnd.carry[0], bnd.carry[1],
+                                          bnd.carry[2], it_total,
+                                          it_sched, ra, rm))
+
+            disp_sched, disp_total = it_sched, it_total
+            stop = bool(done)   # resumed post-convergence: dispatch nothing
             for k in chunk_schedule(cfg.max_iters, cfg.fuse_steps, 0,
                                     start=it_sched):
-                if bool(carry[1]):    # converged in an earlier chunk
+                if stop:
                     break
-                carry, _ = program.run(carry, (Xs, valid), k)
-                it_sched += k
-                it_total += k
-                yield ChunkTick(k, _snapshot)
-            C = np.asarray(carry[0], np.float32)
-            n_it = int(carry[2])
-            carry = None
+                disp_sched += k
+                disp_total += k
+                dcarry, drained = pipe.dispatch(
+                    dcarry, (Xs, valid), k,
+                    tag=(disp_sched, disp_total, *pack_rng(rng)))
+                for bnd in drained:
+                    final = bnd.carry
+                    yield _drain(bnd)
+                    if bool(bnd.carry[1]):  # converged at this boundary
+                        stop = True
+                        break
+            if not stop:
+                for bnd in pipe.flush():
+                    final = bnd.carry
+                    yield _drain(bnd)
+                    if bool(bnd.carry[1]):
+                        break
+            if final is not None:
+                C = np.asarray(final[0], np.float32)
+                n_it = int(final[2])
         else:
             while not done and n_it < cfg.max_iters:
                 Cq = pim.broadcast((_cast_centroids(C),))[0]

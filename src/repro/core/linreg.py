@@ -26,7 +26,8 @@ import numpy as np
 
 from ..elastic.state import pack_rng, unpack_rng
 from ..kernels import dispatch
-from ..systems import ChunkTick, System, chunk_schedule, run_steps
+from ..systems import (ChunkPipeline, ChunkTick, System, chunk_schedule,
+                       run_steps)
 from .fixed_point import (_shift_round, fx_dot_hybrid, from_fixed,
                           mul_round_f32, to_fixed)
 
@@ -66,6 +67,13 @@ class GdConfig:
     #: still works: chunks are clipped so recording points land on
     #: chunk boundaries.
     fuse_steps: int = 1
+    #: chunk pipelining (DESIGN.md §14.1): how many fused chunks may be
+    #: in flight before the host drains a boundary (record/eval,
+    #: snapshot).  2 = double-buffered — chunk N+1 executes while the
+    #: host processes boundary N; 1 = the serial dispatch-drain cadence
+    #: (with carry donation).  Bit-identical either way: pipelining
+    #: reorders host work only.  Ignored unless ``fuse_steps > 1``.
+    pipeline_depth: int = 2
 
 
 @dataclasses.dataclass
@@ -268,23 +276,33 @@ def fit_steps(dataset, cfg: Optional[GdConfig] = None,
         history = [tuple(h) for h in meta.get("history", [])]
         rng = unpack_rng(arrays, meta) or rng
 
-    def record(it):
+    def record(it, wv, bv):
         if cfg.record_every and (it % cfg.record_every == 0
                                  or it == cfg.n_iters):
-            metric = eval_fn(np.asarray(w), float(b)) if eval_fn else None
+            metric = eval_fn(np.asarray(wv), float(bv)) if eval_fn else None
             history.append((it, metric))
 
+    def _make_snapshot(wv, bv, sv, it, ra, rm):
+        """Snapshot closure bound to ONE chunk boundary's state.  Under
+        pipelining the live carry has already been dispatched past this
+        boundary by drain time, so everything the snapshot serializes is
+        captured per boundary (the rng pack eagerly at dispatch — the
+        stream advances with the next chunk's draws)."""
+        def _snap():
+            arrays = {"w": np.asarray(wv, np.float32),
+                      "b": np.asarray(bv, np.float32),
+                      "s": np.asarray(sv, np.float32)}
+            meta = {"iters": int(it),
+                    "history": [[int(i), None if m is None else float(m)]
+                                for i, m in history]}
+            arrays.update(ra)
+            meta.update(rm)
+            return {"arrays": arrays, "meta": meta}
+        return _snap
+
     def _snapshot():
-        arrays = {"w": np.asarray(w, np.float32),
-                  "b": np.asarray(b, np.float32),
-                  "s": np.asarray(s, np.float32)}
-        meta = {"iters": int(it_done),
-                "history": [[int(i), None if m is None else float(m)]
-                            for i, m in history]}
         ra, rm = pack_rng(rng)
-        arrays.update(ra)
-        meta.update(rm)
-        return {"arrays": arrays, "meta": meta}
+        return _make_snapshot(w, b, s, it_done, ra, rm)()
 
     if cfg.fuse_steps > 1:
         select = None
@@ -306,8 +324,24 @@ def fit_steps(dataset, cfg: Optional[GdConfig] = None,
                   f"/lr{cfg.lr}/n{n_eff}"
                   + (f"/mb{cfg.minibatch}" if minibatch else "")),
             select=select)
+        # Double-buffered chunk pipeline (DESIGN.md §14.1): dispatch
+        # chunk N+1, then drain boundary N — record/eval and the
+        # snapshot closure read the boundary's own carry while the next
+        # chunk executes.  The only host reads are on drained
+        # boundaries, so the device never waits on record work.
+        pipe = ChunkPipeline(program, max(1, int(cfg.pipeline_depth)))
+
+        def _drain(bnd):
+            nonlocal it_done
+            it_done, ra, rm = bnd.tag
+            bw, bb, bs = bnd.carry
+            record(it_done, bw, bb)
+            return ChunkTick(bnd.k, _make_snapshot(bw, bb, bs, it_done,
+                                                   ra, rm))
+
         # resume replays identical chunk boundaries: chunk_schedule is a
         # deterministic function of the iteration index (DESIGN.md §11.2)
+        it_disp = it_done
         for k in chunk_schedule(cfg.n_iters, cfg.fuse_steps,
                                 cfg.record_every, start=it_done):
             xs = None
@@ -315,11 +349,16 @@ def fit_steps(dataset, cfg: Optional[GdConfig] = None,
                 xs = jnp.asarray(
                     [rng.randint(0, n_pc - cfg.minibatch + 1)
                      for _ in range(k)], jnp.int32)
-            (w, b, s), _ = program.run((w, b, s), (Xs, ys, mask), k,
-                                       xs=xs)
-            it_done += k
-            record(it_done)
-            yield ChunkTick(k, _snapshot)
+            it_disp += k
+            # rng packed AFTER this chunk's draws: restoring boundary N
+            # replays chunk N+1's batch offsets bit-exactly
+            (w, b, s), drained = pipe.dispatch(
+                (w, b, s), (Xs, ys, mask), k, xs=xs,
+                tag=(it_disp, *pack_rng(rng)))
+            for bnd in drained:
+                yield _drain(bnd)
+        for bnd in pipe.flush():
+            yield _drain(bnd)
     else:
         for it in range(it_done, cfg.n_iters):
             wq, bq = pim.broadcast(prepare((w, b, s)))
@@ -334,7 +373,7 @@ def fit_steps(dataset, cfg: Optional[GdConfig] = None,
             partial = pim.map_reduce(local, args, (wq, bq))
             (w, b, s), _ = update((w, b, s), partial)
             it_done = it + 1
-            record(it_done)
+            record(it_done, w, b)
             yield ChunkTick(1, _snapshot)
     return GdResult(w=np.asarray(w, np.float32), b=float(b),
                     history=history, n_iters=cfg.n_iters)

@@ -25,7 +25,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import dispatch
-from ..systems import ChunkTick, System, chunk_schedule, run_steps
+from ..systems import (ChunkPipeline, ChunkTick, System, chunk_schedule,
+                       run_steps)
 from .fixed_point import _shift_round, fx_dot_hybrid
 from .linreg import GdConfig, GdResult, make_gd_step_fns
 from .lut import SigmoidLut, build_sigmoid_lut, taylor_sigmoid_fixed
@@ -217,39 +218,61 @@ def fit_steps(dataset, cfg: Optional[LogRegConfig] = None,
         it_done = int(meta["iters"])
         history = [tuple(h) for h in meta.get("history", [])]
 
-    def record(it):
+    def record(it, wv, bv):
         if cfg.record_every and (it % cfg.record_every == 0
                                  or it == cfg.n_iters):
-            metric = eval_fn(np.asarray(w), float(b)) if eval_fn else None
+            metric = eval_fn(np.asarray(wv), float(bv)) if eval_fn else None
             history.append((it, metric))
 
+    def _make_snapshot(wv, bv, sv, it):
+        """Snapshot closure bound to one chunk boundary's carry (the
+        live carry races ahead of drained boundaries when pipelined —
+        DESIGN.md §14.1)."""
+        def _snap():
+            return {"arrays": {"w": np.asarray(wv, np.float32),
+                               "b": np.asarray(bv, np.float32),
+                               "s": np.asarray(sv, np.float32)},
+                    "meta": {"iters": int(it),
+                             "history": [[int(i),
+                                          None if m is None else float(m)]
+                                         for i, m in history]}}
+        return _snap
+
     def _snapshot():
-        return {"arrays": {"w": np.asarray(w, np.float32),
-                           "b": np.asarray(b, np.float32),
-                           "s": np.asarray(s, np.float32)},
-                "meta": {"iters": int(it_done),
-                         "history": [[int(i),
-                                      None if m is None else float(m)]
-                                     for i, m in history]}}
+        return _make_snapshot(w, b, s, it_done)()
 
     if cfg.fuse_steps > 1:
         program = pim.step_program(
             local, prepare, update,
             name=(f"log.step/{grad_kernel_name(cfg, _exact_sigmoid(pim, cfg))}"
                   f"/lr{cfg.lr}/n{n}"))
+        # double-buffered chunk pipeline — see linreg.fit_steps
+        pipe = ChunkPipeline(program, max(1, int(cfg.pipeline_depth)))
+
+        def _drain(bnd):
+            nonlocal it_done
+            it_done = bnd.tag
+            bw, bb, bs = bnd.carry
+            record(it_done, bw, bb)
+            return ChunkTick(bnd.k, _make_snapshot(bw, bb, bs, it_done))
+
+        it_disp = it_done
         for k in chunk_schedule(cfg.n_iters, cfg.fuse_steps,
                                 cfg.record_every, start=it_done):
-            (w, b, s), _ = program.run((w, b, s), (Xs, ys, mask), k)
-            it_done += k
-            record(it_done)
-            yield ChunkTick(k, _snapshot)
+            it_disp += k
+            (w, b, s), drained = pipe.dispatch((w, b, s), (Xs, ys, mask),
+                                               k, tag=it_disp)
+            for bnd in drained:
+                yield _drain(bnd)
+        for bnd in pipe.flush():
+            yield _drain(bnd)
     else:
         for it in range(it_done, cfg.n_iters):
             wq, bq = pim.broadcast(prepare((w, b, s)))
             partial = pim.map_reduce(local, (Xs, ys, mask), (wq, bq))
             (w, b, s), _ = update((w, b, s), partial)
             it_done = it + 1
-            record(it_done)
+            record(it_done, w, b)
             yield ChunkTick(1, _snapshot)
     return GdResult(w=np.asarray(w, np.float32), b=float(b),
                     history=history, n_iters=cfg.n_iters)

@@ -17,6 +17,16 @@ progresses; after a kill, re-running the same manifest with
 restored without re-running, unfinished ones continue from their last
 durable snapshot.  ``--retry-budget N`` survives injected or real
 per-step faults via supervised retry.
+
+Serve mode (DESIGN.md §14.4): ``--serve --spool DIR`` turns the one-shot
+drain into a long-running service — the initial manifest's jobs drain on
+a background thread while DIR is watched for further manifest files,
+each admitted mid-flight (answered with a ``<name>.status.json``
+sidecar: accepted, or rejected with the reason).  The service exits
+after ``--idle-timeout`` seconds with no new work.
+``--max-modeled-seconds X`` is cost-model admission control (§14.3):
+manifests whose modeled makespan bound exceeds X are rejected whole —
+reported, never queued, never a crash.
 """
 from __future__ import annotations
 
@@ -27,7 +37,8 @@ import time
 
 from repro.obs import (TRACER, Column, format_ratio, render_table,
                        write_chrome_trace)
-from repro.sched import job_report, load_manifest, run_manifest
+from repro.sched import (SloViolation, job_report, load_manifest,
+                         run_manifest, serve_manifests)
 
 #: the per-job report columns every metric row renders through
 #: (repro.obs.format — shared with pim_ml/compare so new metrics appear
@@ -94,24 +105,66 @@ def main(argv=None) -> int:
                          "drain (load in Perfetto / chrome://tracing); "
                          "one track per target System, memory channel, "
                          "and job")
+    ap.add_argument("--serve", action="store_true",
+                    help="serve mode: drain on a background thread and "
+                         "watch --spool for more manifests (DESIGN.md "
+                         "§14.4)")
+    ap.add_argument("--spool", default=None, metavar="DIR",
+                    help="directory watched for additional manifest "
+                         "files in --serve mode")
+    ap.add_argument("--idle-timeout", type=float, default=10.0,
+                    metavar="S",
+                    help="serve mode exits after this many seconds "
+                         "with no new manifests and an idle scheduler "
+                         "(default 10)")
+    ap.add_argument("--poll-interval", type=float, default=0.2,
+                    metavar="S",
+                    help="spool scan cadence in serve mode "
+                         "(default 0.2)")
+    ap.add_argument("--max-modeled-seconds", type=float, default=None,
+                    metavar="X",
+                    help="admission SLO: reject manifests whose "
+                         "modeled makespan lower bound exceeds X "
+                         "(the manifest's own slo section wins)")
     args = ap.parse_args(argv)
 
     if args.manifest is None and not args.demo:
         ap.error("pass a manifest path or --demo")
     if args.resume and not args.checkpoint_dir:
         ap.error("--resume needs --checkpoint-dir")
+    if args.serve and not args.spool:
+        ap.error("--serve needs --spool")
     doc = DEMO_MANIFEST if args.manifest is None \
         else load_manifest(args.manifest)
 
     if args.trace:
         TRACER.enable()
     t0 = time.perf_counter()
-    scheduler, handles = run_manifest(
-        doc,
-        checkpoint_dir=args.checkpoint_dir,
-        checkpoint_every=args.checkpoint_every,
-        resume=args.resume,
-        retry_budget=args.retry_budget)
+    try:
+        scheduler, handles = run_manifest(
+            doc,
+            drain=not args.serve,
+            checkpoint_dir=args.checkpoint_dir,
+            checkpoint_every=args.checkpoint_every,
+            resume=args.resume,
+            retry_budget=args.retry_budget,
+            max_modeled_seconds=args.max_modeled_seconds)
+    except SloViolation as err:
+        print(f"manifest rejected: {err}", file=sys.stderr)
+        if args.json:
+            with open(args.json, "w") as fh:
+                json.dump({"rejected": True, "reason": str(err)}, fh,
+                          indent=2)
+        return 1
+    manifest_records = []
+    if args.serve:
+        manifest_records = serve_manifests(
+            scheduler, args.spool,
+            poll_interval=args.poll_interval,
+            idle_timeout=args.idle_timeout,
+            max_modeled_seconds=args.max_modeled_seconds,
+            handles=handles)
+        scheduler.shutdown(wait=True)
     makespan = time.perf_counter() - t0
     if args.trace:
         write_chrome_trace(TRACER.events(), args.trace)
@@ -122,6 +175,23 @@ def main(argv=None) -> int:
     print(render_table(rows, JOB_COLUMNS,
                        extra=lambda row: row.get("error", "")))
     stats = scheduler.stats()
+    if args.serve:
+        accepted = sum(1 for r in manifest_records
+                       if r["state"] == "accepted")
+        print(f"\nserve: {len(manifest_records)} spooled manifest(s), "
+              f"{accepted} accepted, "
+              f"{len(manifest_records) - accepted} rejected")
+        for rec in manifest_records:
+            detail = (f"{rec['jobs']} job(s)"
+                      if rec["state"] == "accepted"
+                      else rec["reason"])
+            print(f"  {rec['path']}: {rec['state']} ({detail})")
+        lat = stats["latency"]
+        if lat["completion"]["count"]:
+            print(f"latency: queue p50 {lat['queue']['p50']:.3f}s "
+                  f"p99 {lat['queue']['p99']:.3f}s; completion p50 "
+                  f"{lat['completion']['p50']:.3f}s p99 "
+                  f"{lat['completion']['p99']:.3f}s")
     n_done = stats["jobs"]["done"]
     print(f"\n{len(handles)} jobs, {n_done} done in {makespan:.2f}s "
           f"({n_done / max(makespan, 1e-9):.2f} jobs/s); "
@@ -144,9 +214,12 @@ def main(argv=None) -> int:
               f" {n_recoveries} supervised retrie(s)")
 
     if args.json:
+        report = {"makespan_seconds": makespan, "jobs": rows,
+                  "scheduler": stats}
+        if args.serve:
+            report["manifests"] = manifest_records
         with open(args.json, "w") as fh:
-            json.dump({"makespan_seconds": makespan, "jobs": rows,
-                       "scheduler": stats}, fh, indent=2)
+            json.dump(report, fh, indent=2)
         print(f"report written to {args.json}")
     return 0 if stats["jobs"]["failed"] == 0 else 1
 

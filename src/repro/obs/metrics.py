@@ -28,11 +28,22 @@ UPMEM seconds routinely sits orders of magnitude above 1 — the point is
 from __future__ import annotations
 
 import bisect
+import threading
 from typing import Dict, Optional, Sequence, Tuple
 
 #: log-spaced ratio buckets for measured/modeled drift histograms
 DRIFT_BUCKETS: Tuple[float, ...] = (
     0.01, 0.1, 0.5, 1.0, 2.0, 5.0, 10.0, 100.0, 1e3, 1e4, 1e5, 1e6)
+
+#: One process-wide reentrant lock serializes every metric write AND the
+#: registry's lazy creation path.  The scheduler's background drain
+#: thread (serve mode, DESIGN.md §14.2) increments these concurrently
+#: with caller-thread ``stats()``/``metrics()`` reads; a single coarse
+#: lock keeps parent-mirroring chains atomic end to end (child += n and
+#: parent += n commit together) at negligible cost — metric updates are
+#: control-plane, not hot-loop.  Reentrant because a mirrored child's
+#: update calls the parent's under the same lock.
+_LOCK = threading.RLock()
 
 
 class Counter:
@@ -45,9 +56,10 @@ class Counter:
         self._parent = parent
 
     def inc(self, n: int = 1) -> None:
-        self.value += n
-        if self._parent is not None:
-            self._parent.inc(n)
+        with _LOCK:
+            self.value += n
+            if self._parent is not None:
+                self._parent.inc(n)
 
     def snapshot(self) -> int:
         return self.value
@@ -67,9 +79,10 @@ class Gauge:
         self._parent = parent
 
     def set(self, value: float) -> None:
-        self.value = float(value)
-        if self._parent is not None:
-            self._parent.set(value)
+        with _LOCK:
+            self.value = float(value)
+            if self._parent is not None:
+                self._parent.set(value)
 
     def snapshot(self) -> float:
         return self.value
@@ -103,23 +116,25 @@ class Histogram:
 
     def observe(self, value: float) -> None:
         value = float(value)
-        self.buckets[bisect.bisect_left(self.bounds, value)] += 1
-        self.count += 1
-        self.total += value
-        self.min = value if self.min is None else min(self.min, value)
-        self.max = value if self.max is None else max(self.max, value)
-        if self._parent is not None:
-            self._parent.observe(value)
+        with _LOCK:
+            self.buckets[bisect.bisect_left(self.bounds, value)] += 1
+            self.count += 1
+            self.total += value
+            self.min = value if self.min is None else min(self.min, value)
+            self.max = value if self.max is None else max(self.max, value)
+            if self._parent is not None:
+                self._parent.observe(value)
 
     @property
     def mean(self) -> Optional[float]:
         return (self.total / self.count) if self.count else None
 
     def to_dict(self) -> dict:
-        return {"bounds": list(self.bounds),
-                "buckets": list(self.buckets),
-                "count": self.count, "total": self.total,
-                "mean": self.mean, "min": self.min, "max": self.max}
+        with _LOCK:   # consistent multi-field reading vs. observe()
+            return {"bounds": list(self.bounds),
+                    "buckets": list(self.buckets),
+                    "count": self.count, "total": self.total,
+                    "mean": self.mean, "min": self.min, "max": self.max}
 
     def snapshot(self) -> dict:
         return self.to_dict()
@@ -156,17 +171,18 @@ class MetricsRegistry:
         self._metrics: Dict[str, object] = {}
 
     def _get(self, name: str, kind: str, **kwargs):
-        metric = self._metrics.get(name)
-        if metric is None:
-            parent_metric = (self._parent._get(name, kind, **kwargs)
-                             if self._parent is not None else None)
-            metric = _KINDS[kind](parent=parent_metric, **kwargs)
-            self._metrics[name] = metric
-        elif not isinstance(metric, _KINDS[kind]):
-            raise TypeError(
-                f"metric {name!r} is a {type(metric).__name__}, "
-                f"not a {kind}")
-        return metric
+        with _LOCK:
+            metric = self._metrics.get(name)
+            if metric is None:
+                parent_metric = (self._parent._get(name, kind, **kwargs)
+                                 if self._parent is not None else None)
+                metric = _KINDS[kind](parent=parent_metric, **kwargs)
+                self._metrics[name] = metric
+            elif not isinstance(metric, _KINDS[kind]):
+                raise TypeError(
+                    f"metric {name!r} is a {type(metric).__name__}, "
+                    f"not a {kind}")
+            return metric
 
     def counter(self, name: str) -> Counter:
         return self._get(name, "counter")
@@ -179,27 +195,31 @@ class MetricsRegistry:
         return self._get(name, "histogram", bounds=bounds)
 
     def names(self) -> tuple:
-        return tuple(sorted(self._metrics))
+        with _LOCK:
+            return tuple(sorted(self._metrics))
 
     def snapshot(self) -> dict:
         """Plain-value snapshot of every metric (JSON-serializable)."""
-        return {name: m.snapshot()
-                for name, m in sorted(self._metrics.items())}
+        with _LOCK:
+            return {name: m.snapshot()
+                    for name, m in sorted(self._metrics.items())}
 
     def delta(self, snapshot: dict) -> dict:
         """Per-metric change since ``snapshot``.  Metrics created after
         the snapshot delta against a zero baseline."""
-        out = {}
-        for name, m in sorted(self._metrics.items()):
-            if name in snapshot:
-                out[name] = m.delta(snapshot[name])
-            elif isinstance(m, Histogram):
-                out[name] = m.to_dict()
-            else:
-                out[name] = m.snapshot()
-        return out
+        with _LOCK:
+            out = {}
+            for name, m in sorted(self._metrics.items()):
+                if name in snapshot:
+                    out[name] = m.delta(snapshot[name])
+                elif isinstance(m, Histogram):
+                    out[name] = m.to_dict()
+                else:
+                    out[name] = m.snapshot()
+            return out
 
     def to_dict(self) -> dict:
-        return {name: (m.to_dict() if isinstance(m, Histogram)
-                       else m.value)
-                for name, m in sorted(self._metrics.items())}
+        with _LOCK:
+            return {name: (m.to_dict() if isinstance(m, Histogram)
+                           else m.value)
+                    for name, m in sorted(self._metrics.items())}

@@ -10,21 +10,35 @@ Schema (all sections optional except ``jobs``/``sweeps`` — at least one)::
 
     system:   {kind: pim|host|gpu-model, cores: 64, rank_size: 16,
                reduce: fabric, backfill: false,
-               placement: first_fit|contention}
+               placement: first_fit|contention,
+               policy: fifo|deadline}
+    slo:      {max_modeled_seconds: X}   # admission control (§14.3)
     datasets: {name: {kind: linear|classification|blobs,
                       samples: N, features: F, seed: S, ...}}
     jobs:     [{workload: linreg, version: int32, dataset: name,
-                cores: 16, priority: 0, params: {lr: 0.1, ...}}]
+                cores: 16, priority: 0, params: {lr: 0.1, ...},
+                deadline_seconds: X, max_modeled_seconds: X}]
     sweeps:   [{workload: linreg, dataset: name, grid: {lr: [...]},
                 fused: true, cores: 16, params: {...}}]
 
 YAML input needs PyYAML; JSON always works (a ``.json`` manifest or any
 file whose text parses as JSON).
+
+Service mode (DESIGN.md §14.4): :func:`submit_manifest` admits one
+manifest onto an existing — possibly serving — scheduler, so new
+manifests land mid-flight while earlier ones still drain;
+:func:`serve_manifests` is the long-running spool-directory watcher
+behind ``pim_jobs --serve``.  Admission control happens *before*
+anything is queued: a manifest whose modeled makespan lower bound
+exceeds its ``slo.max_modeled_seconds`` (or the service default) is
+rejected whole with :class:`~repro.sched.scheduler.SloViolation` —
+a first-class outcome the callers report, never a crash.
 """
 from __future__ import annotations
 
 import json
 import os
+import time
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -32,7 +46,7 @@ import numpy as np
 from ..data.synthetic import (make_blobs, make_classification,
                               make_linear_dataset)
 from ..systems import System, make_system
-from .scheduler import JobHandle, PimScheduler, _SingleRun
+from .scheduler import JobHandle, PimScheduler, SloViolation, _SingleRun
 
 
 def load_manifest(path: str) -> dict:
@@ -106,37 +120,46 @@ def build_system(spec: Optional[dict]) -> Tuple[System, dict]:
         sched_kw["backfill"] = bool(spec.pop("backfill"))
     if "placement" in spec:
         sched_kw["placement"] = str(spec.pop("placement"))
+    if "policy" in spec:
+        sched_kw["policy"] = str(spec.pop("policy"))
     if spec:
         raise ValueError(f"unknown system keys {sorted(spec)}")
     return make_system(kind, **kwargs), sched_kw
 
 
-def run_manifest(doc: dict, drain: bool = True, *,
-                 checkpoint_dir: Optional[str] = None,
-                 checkpoint_every: int = 1,
-                 resume: bool = False,
-                 retry_budget: int = 0,
-                 ) -> Tuple[PimScheduler, List[JobHandle]]:
-    """Build the scheduler, submit every job and sweep, optionally drain.
+def submit_manifest(scheduler: PimScheduler, doc: dict, *,
+                    max_modeled_seconds: Optional[float] = None,
+                    ) -> List[JobHandle]:
+    """Admission-check one manifest and submit its jobs/sweeps onto an
+    existing scheduler — the mid-flight entry point of serve mode
+    (DESIGN.md §14.4): the scheduler may already be draining earlier
+    manifests when this one lands.
 
-    Returns the scheduler and the handles in manifest order (jobs first,
-    then sweep points in grid order).
+    SLO admission control (§14.3) runs *first*: when the manifest's
+    ``slo.max_modeled_seconds`` (or the ``max_modeled_seconds`` service
+    default — the manifest's own knob wins) is set and the
+    :meth:`~PimScheduler.capacity_estimate` makespan lower bound
+    exceeds it, the whole manifest is rejected with
+    :class:`SloViolation` and *nothing* is queued — no partial
+    admission.  Per-job entries may additionally carry
+    ``deadline_seconds`` / ``max_modeled_seconds``, forwarded to
+    :meth:`~PimScheduler.submit` (a per-job SLO rejection comes back as
+    a FAILED handle, not an exception).
 
-    Elastic knobs (DESIGN.md §11): ``checkpoint_dir`` makes the run
-    crash-survivable — per-job chunk-boundary checkpoints every
-    ``checkpoint_every`` scheduling steps plus an atomic ``queue.json``
-    record of every job's state.  ``resume=True`` replays a previous
-    (possibly killed) run from that directory: finished jobs are marked
-    restored without re-running; unfinished jobs continue from their
-    last durable snapshot (fingerprint-validated, migration-checked).
-    ``retry_budget`` is the per-job supervised-retry default.
+    Returns the new handles in manifest order (jobs first, then sweep
+    points in grid order).
     """
-    system, sched_kw = build_system(doc.get("system"))
-    scheduler = PimScheduler(system,
-                             checkpoint_dir=checkpoint_dir,
-                             checkpoint_every=checkpoint_every,
-                             default_retry_budget=retry_budget,
-                             **sched_kw)
+    slo = doc.get("slo") or {}
+    bound = slo.get("max_modeled_seconds", max_modeled_seconds)
+    if bound is not None:
+        est = scheduler.capacity_estimate(doc)["makespan_lower_bound"]
+        if est > float(bound):
+            scheduler.metrics.counter(
+                "sched.manifest_slo_rejections").inc()
+            raise SloViolation(
+                f"manifest: modeled makespan lower bound {est:.4g}s "
+                f"exceeds max_modeled_seconds={float(bound):.4g}")
+
     datasets: Dict[str, tuple] = {
         name: build_dataset(spec)
         for name, spec in (doc.get("datasets") or {}).items()}
@@ -162,6 +185,8 @@ def run_manifest(doc: dict, drain: bool = True, *,
             n_cores=entry.get("cores"),
             priority=int(entry.get("priority", 0)),
             name=entry.get("name"),
+            deadline_seconds=entry.get("deadline_seconds"),
+            max_modeled_seconds=entry.get("max_modeled_seconds"),
             **(entry.get("params") or {})))
     for entry in doc.get("sweeps") or []:
         handles.extend(scheduler.sweep(
@@ -173,11 +198,132 @@ def run_manifest(doc: dict, drain: bool = True, *,
             **(entry.get("params") or {})))
     if not handles:
         raise ValueError("manifest defines no jobs or sweeps")
+    return handles
+
+
+def run_manifest(doc: dict, drain: bool = True, *,
+                 checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 1,
+                 resume: bool = False,
+                 retry_budget: int = 0,
+                 max_modeled_seconds: Optional[float] = None,
+                 ) -> Tuple[PimScheduler, List[JobHandle]]:
+    """Build the scheduler, submit every job and sweep, optionally drain.
+
+    Returns the scheduler and the handles in manifest order (jobs first,
+    then sweep points in grid order).
+
+    Elastic knobs (DESIGN.md §11): ``checkpoint_dir`` makes the run
+    crash-survivable — per-job chunk-boundary checkpoints every
+    ``checkpoint_every`` scheduling steps plus an atomic ``queue.json``
+    record of every job's state.  ``resume=True`` replays a previous
+    (possibly killed) run from that directory: finished jobs are marked
+    restored without re-running; unfinished jobs continue from their
+    last durable snapshot (fingerprint-validated, migration-checked).
+    ``retry_budget`` is the per-job supervised-retry default.
+
+    ``max_modeled_seconds`` is the service-default admission SLO
+    (§14.3, overridable by the manifest's own ``slo`` section); a
+    rejected manifest raises :class:`SloViolation` before anything is
+    built or queued.
+    """
+    system, sched_kw = build_system(doc.get("system"))
+    scheduler = PimScheduler(system,
+                             checkpoint_dir=checkpoint_dir,
+                             checkpoint_every=checkpoint_every,
+                             default_retry_budget=retry_budget,
+                             **sched_kw)
+    handles = submit_manifest(scheduler, doc,
+                              max_modeled_seconds=max_modeled_seconds)
     if resume and checkpoint_dir is not None:
         _restore_jobs(scheduler, handles, checkpoint_dir)
     if drain:
         scheduler.drain()
     return scheduler, handles
+
+
+#: manifest filename suffixes the spool watcher picks up
+_SPOOL_SUFFIXES = (".json", ".yaml", ".yml")
+
+
+def _write_status(path: str, record: dict) -> None:
+    """Atomic ``<manifest>.status.json`` sidecar: the spool watcher's
+    durable accepted/rejected verdict (also its already-processed
+    marker across restarts — the manifest file itself is never
+    touched)."""
+    tmp = path + ".status.json.tmp"
+    with open(tmp, "w") as fh:
+        json.dump(record, fh, indent=1)
+    os.replace(tmp, path + ".status.json")
+
+
+def serve_manifests(scheduler: PimScheduler, spool_dir: str, *,
+                    poll_interval: float = 0.2,
+                    idle_timeout: Optional[float] = 10.0,
+                    max_modeled_seconds: Optional[float] = None,
+                    handles: Optional[List[JobHandle]] = None,
+                    ) -> List[dict]:
+    """Long-running service front end (DESIGN.md §14.4): watch
+    ``spool_dir`` for manifest files and admit each onto the serving
+    scheduler as it appears — new manifests land mid-flight while
+    earlier ones drain in the background.
+
+    Each manifest file (``.json``/``.yaml``/``.yml``) is processed once
+    (name order per scan) and answered with an atomic
+    ``<name>.status.json`` sidecar: ``accepted`` with its job count, or
+    ``rejected`` with the reason — an SLO violation or a malformed
+    manifest fails *that manifest*, never the service.  The sidecar
+    doubles as the processed marker, so a restarted watcher skips
+    already-answered files.
+
+    Returns when the spool has produced no new manifest and the
+    scheduler has been idle (nothing queued or running) for
+    ``idle_timeout`` seconds (None = watch forever), with one record
+    per processed manifest.  ``handles`` — when given — collects every
+    accepted manifest's handles in place.  Starts the serve loop if the
+    scheduler is not already serving; the caller owns ``shutdown()``.
+    """
+    if not scheduler.serving:
+        scheduler.serve()
+    records: List[dict] = []
+    seen: set = set()
+    idle_since = time.monotonic()
+    while True:
+        progressed = False
+        try:
+            names = sorted(os.listdir(spool_dir))
+        except FileNotFoundError:
+            names = []
+        for name in names:
+            if (not name.endswith(_SPOOL_SUFFIXES)
+                    or name.endswith(".status.json")):
+                continue   # not a manifest / our own answer sidecar
+            path = os.path.join(spool_dir, name)
+            if path in seen or os.path.exists(path + ".status.json"):
+                seen.add(path)
+                continue
+            seen.add(path)
+            progressed = True
+            try:
+                doc = load_manifest(path)
+                new = submit_manifest(
+                    scheduler, doc,
+                    max_modeled_seconds=max_modeled_seconds)
+                record = {"path": path, "state": "accepted",
+                          "jobs": len(new)}
+                if handles is not None:
+                    handles.extend(new)
+            except (SloViolation, ValueError, KeyError) as err:
+                record = {"path": path, "state": "rejected",
+                          "reason": f"{type(err).__name__}: {err}"}
+            records.append(record)
+            _write_status(path, record)
+        if progressed or not scheduler.idle:
+            idle_since = time.monotonic()
+        elif (idle_timeout is not None
+                and time.monotonic() - idle_since >= idle_timeout):
+            return records
+        time.sleep(poll_interval)
 
 
 def _restore_jobs(scheduler: PimScheduler, handles: List[JobHandle],

@@ -45,7 +45,9 @@ import dataclasses
 import enum
 import itertools
 import json
+import math
 import os
+import threading
 import time
 from typing import List, Mapping, Optional, Union
 
@@ -84,6 +86,14 @@ class JobState(enum.Enum):
 _COST_KEYS = {"linreg": "lin", "logreg": "log", "dtree": "dtr",
               "kmeans": "kme"}
 _COST_VERSIONS = {"dtree": "fp32", "kmeans": "int16"}
+
+
+class SloViolation(RuntimeError):
+    """A modeled-time SLO rejected work at admission (DESIGN.md §14.3):
+    the cost model priced a job (or a whole manifest's makespan bound)
+    above ``max_modeled_seconds``.  Admission control answers *before*
+    anything runs, so the rejection is a first-class outcome — it rides
+    on ``JobHandle.error`` / the manifest report, never a crash."""
 
 
 class JobHandle:
@@ -146,6 +156,18 @@ class JobHandle:
         self.fingerprint: Optional[str] = None
         self.gpu = None
         self.restored = False
+        #: service-mode latency accounting (time.monotonic seconds,
+        #: DESIGN.md §14.2): queue latency = started_at - submitted_at,
+        #: completion latency = finished_at - submitted_at.  started_at
+        #: is the *first* admission (preempt/resume cycles keep it);
+        #: finished_at is stamped at the terminal transition.
+        self.submitted_at = time.monotonic()
+        self.started_at: Optional[float] = None
+        self.finished_at: Optional[float] = None
+        #: absolute monotonic deadline under the "deadline" policy
+        #: (submit's ``deadline_seconds`` added to ``submitted_at``)
+        self.deadline: Optional[float] = None
+        self.deadline_missed = False
         self._cancel_requested = False
         self._preempt_requested = False
 
@@ -171,6 +193,22 @@ class JobHandle:
         workloads lose their progress and restart on resume."""
         if self.state is JobState.RUNNING:
             self._preempt_requested = True
+
+    @property
+    def queue_latency(self) -> Optional[float]:
+        """Seconds from submission to first admission; None while
+        queued (or when the job was rejected before ever running)."""
+        if self.started_at is None:
+            return None
+        return self.started_at - self.submitted_at
+
+    @property
+    def completion_latency(self) -> Optional[float]:
+        """Seconds from submission to the terminal transition; None
+        until the job settles."""
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.submitted_at
 
     @property
     def drift_ratio(self) -> Optional[float]:
@@ -199,6 +237,9 @@ class JobHandle:
             "preemptions": self.preemptions,
             "recoveries": self.recoveries,
             "straggler_flags": self.straggler_flags,
+            "queue_latency": self.queue_latency,
+            "completion_latency": self.completion_latency,
+            "deadline_missed": self.deadline_missed,
         }
         if self.transfer is not None:
             out["transfer"] = dataclasses.asdict(self.transfer)
@@ -285,6 +326,9 @@ class _Runnable:
         #: modeled whole-job seconds (backfill ordering key; 0.0 when
         #: the cost model cannot price the job)
         self.est_seconds = 0.0
+        #: earliest member deadline (EDF admission key under the
+        #: "deadline" policy; None sorts last)
+        self.deadline: Optional[float] = None
         self._snapshot: Optional[TransferStats] = None
         self._gpu_snapshot = None
 
@@ -307,6 +351,8 @@ class _Runnable:
                 job.state = JobState.RUNNING
                 job.lease = lease
                 job.n_cores = lease.n_cores
+                if job.started_at is None:
+                    job.started_at = time.monotonic()
 
     def _transfer_delta(self) -> TransferStats:
         return self.slice.stats.delta(self._snapshot)
@@ -562,7 +608,9 @@ class PimScheduler:
                  checkpoint_every: int = 1,
                  fault_injector=None,
                  default_retry_budget: int = 0,
-                 placement: str = "first_fit"):
+                 placement: str = "first_fit",
+                 policy: str = "fifo",
+                 max_modeled_seconds: Optional[float] = None):
         if isinstance(system, Mapping):
             if not system:
                 raise ValueError("need at least one system to schedule on")
@@ -601,6 +649,33 @@ class PimScheduler:
         self.injector = (fault_injector if fault_injector is not None
                          else injector_from_env())
         self._monitors: dict = {}   # job id -> StragglerMonitor
+        if policy not in ("fifo", "deadline"):
+            raise ValueError(f"unknown policy {policy!r}; "
+                             "known: 'fifo', 'deadline'")
+        #: admission-ordering policy: "fifo" = (priority desc,
+        #: submission order); "deadline" = earliest absolute deadline
+        #: first within a priority band (EDF — deadline-less jobs sort
+        #: last).  Deadlines also extend preemptive eviction: an
+        #: earlier-deadline submit may evict an equal-priority,
+        #: later-deadline victim (``_outranks``, DESIGN.md §14.3).
+        self.policy = policy
+        #: default modeled-seconds admission SLO (None = unbounded);
+        #: submit's per-job ``max_modeled_seconds`` overrides.  Jobs the
+        #: cost model prices above the bound are rejected at submission:
+        #: FAILED with an SloViolation on ``error``, never queued.
+        self.max_modeled_seconds = max_modeled_seconds
+        # service mode (DESIGN.md §14.2): one reentrant lock guards the
+        # queue/running/finished structures; the Condition carries
+        # "work arrived / state changed" wakeups between submitting
+        # threads, the background drain loop, and wait()ers.  A
+        # separate mutex serializes whole scheduling turns so two
+        # threads can never co-advance one job's generator.
+        self._lock = threading.RLock()
+        self._work = threading.Condition(self._lock)
+        self._step_mutex = threading.Lock()
+        self._serve_thread: Optional[threading.Thread] = None
+        self._stop_serving = False
+        self._drain_on_stop = True
         self._queue: List[_Runnable] = []
         self._running: List[_Runnable] = []
         self._finished: List[_Runnable] = []
@@ -660,6 +735,8 @@ class PimScheduler:
                retry_budget: Optional[int] = None,
                resume_state: Optional[dict] = None,
                resume_from_kind: Optional[str] = None,
+               deadline_seconds: Optional[float] = None,
+               max_modeled_seconds: Optional[float] = None,
                **params) -> JobHandle:
         """Queue one training job; returns its :class:`JobHandle`.
 
@@ -677,6 +754,15 @@ class PimScheduler:
         ``resume_from_kind`` names the System kind the snapshot was
         taken on (integer versions are bit-exact only between
         numerically-like kinds; fp32 migrates anywhere).
+
+        Service/SLO knobs (DESIGN.md §14): ``deadline_seconds`` sets an
+        absolute deadline (now + the given seconds) — the admission key
+        under the "deadline" policy and the deadline-miss observable
+        under any policy; ``max_modeled_seconds`` (per-job, overriding
+        the scheduler default) rejects the job at submission when the
+        cost model prices it above the bound — the handle comes back
+        FAILED with an :class:`SloViolation` on ``error``, nothing is
+        queued.  Thread-safe: may be called while a serve loop drains.
         """
         wl = self._resolve_workload(workload)
         if spec is None:
@@ -684,30 +770,52 @@ class PimScheduler:
         elif version is not None or params:
             raise TypeError("pass either spec= or version=/params, "
                             "not both")
-        target = self._resolve_target(target)
-        size = self._sized(n_cores, target)
-        handle = JobHandle(next(self._next_job_id), wl, spec, priority,
-                          size, name)
-        handle.target = target
-        handle.retry_budget = (self.default_retry_budget
-                               if retry_budget is None else retry_budget)
-        data = self._host_arrays(data)
-        if self.checkpoint_dir is not None:
-            handle.fingerprint = job_fingerprint(
-                wl.name, spec.version, dict(spec.params), data[0], data[1])
-        if resume_state is not None:
-            if resume_from_kind is not None:
-                to_kind = getattr(self.systems[target], "kind", "pim")
-                check_migration(resume_from_kind, to_kind, spec.version)
-            handle.snapshot = resume_state
-            handle.iters = snapshot_iters(resume_state)
-        run = _SingleRun([handle], data, priority,
-                         next(self._seq), size, target,
-                         resume_state=resume_state)
-        run.est_seconds = _estimate_job_seconds(
-            wl.name, spec, data, size, self.systems[target])
-        self._queue.append(run)
-        self.handles.append(handle)
+        with self._work:
+            target = self._resolve_target(target)
+            size = self._sized(n_cores, target)
+            handle = JobHandle(next(self._next_job_id), wl, spec,
+                               priority, size, name)
+            handle.target = target
+            handle.retry_budget = (self.default_retry_budget
+                                   if retry_budget is None
+                                   else retry_budget)
+            data = self._host_arrays(data)
+            if self.checkpoint_dir is not None:
+                handle.fingerprint = job_fingerprint(
+                    wl.name, spec.version, dict(spec.params),
+                    data[0], data[1])
+            if resume_state is not None:
+                if resume_from_kind is not None:
+                    to_kind = getattr(self.systems[target], "kind", "pim")
+                    check_migration(resume_from_kind, to_kind,
+                                    spec.version)
+                handle.snapshot = resume_state
+                handle.iters = snapshot_iters(resume_state)
+            run = _SingleRun([handle], data, priority,
+                             next(self._seq), size, target,
+                             resume_state=resume_state)
+            run.est_seconds = _estimate_job_seconds(
+                wl.name, spec, data, size, self.systems[target])
+            bound = (max_modeled_seconds if max_modeled_seconds is not None
+                     else self.max_modeled_seconds)
+            if bound is not None and run.est_seconds > bound:
+                handle.error = SloViolation(
+                    f"job {handle.name!r}: modeled "
+                    f"{run.est_seconds:.4g}s exceeds "
+                    f"max_modeled_seconds={bound:.4g}")
+                handle.state = JobState.FAILED
+                handle.finished_at = time.monotonic()
+                self.handles.append(handle)
+                self.metrics.counter("sched.slo_rejections").inc()
+                self._work.notify_all()
+                return handle
+            if deadline_seconds is not None:
+                handle.deadline = (handle.submitted_at
+                                   + float(deadline_seconds))
+                run.deadline = handle.deadline
+            self._queue.append(run)
+            self.handles.append(handle)
+            self._work.notify_all()
         return handle
 
     def sweep(self, workload: Union[str, Workload], data, grid: dict, *,
@@ -730,32 +838,34 @@ class PimScheduler:
                   for values in itertools.product(*(grid[k] for k in keys))]
         specs = [wl.spec(version, **{**base_params, **combo})
                  for combo in combos]
-        target = self._resolve_target(target)
-        size = self._sized(n_cores, target)
-        data = self._host_arrays(data)
+        with self._work:
+            target = self._resolve_target(target)
+            size = self._sized(n_cores, target)
+            data = self._host_arrays(data)
 
-        groups = (plan_fusion(wl, specs) if fused
-                  else [[i] for i in range(len(specs))])
-        handles: List[Optional[JobHandle]] = [None] * len(specs)
-        for group in groups:
-            group_handles = []
-            for i in group:
-                handle = JobHandle(next(self._next_job_id), wl, specs[i],
-                                   priority, size)
-                handle.target = target
-                handles[i] = handle
-                group_handles.append(handle)
-                self.handles.append(handle)
-            cls = _FusedRun if len(group) > 1 else _SingleRun
-            run = cls(group_handles, data, priority,
-                      next(self._seq), size, target)
-            # a fused gang advances all lanes per launch, so its
-            # duration is one member's, not the sum
-            run.est_seconds = max(
-                (_estimate_job_seconds(wl.name, specs[i], data, size,
-                                       self.systems[target])
-                 for i in group), default=0.0)
-            self._queue.append(run)
+            groups = (plan_fusion(wl, specs) if fused
+                      else [[i] for i in range(len(specs))])
+            handles: List[Optional[JobHandle]] = [None] * len(specs)
+            for group in groups:
+                group_handles = []
+                for i in group:
+                    handle = JobHandle(next(self._next_job_id), wl,
+                                       specs[i], priority, size)
+                    handle.target = target
+                    handles[i] = handle
+                    group_handles.append(handle)
+                    self.handles.append(handle)
+                cls = _FusedRun if len(group) > 1 else _SingleRun
+                run = cls(group_handles, data, priority,
+                          next(self._seq), size, target)
+                # a fused gang advances all lanes per launch, so its
+                # duration is one member's, not the sum
+                run.est_seconds = max(
+                    (_estimate_job_seconds(wl.name, specs[i], data, size,
+                                           self.systems[target])
+                     for i in group), default=0.0)
+                self._queue.append(run)
+            self._work.notify_all()
         return handles
 
     # -- execution -----------------------------------------------------------
@@ -800,18 +910,31 @@ class PimScheduler:
         raise ValueError(f"job {job.name!r} is not tracked by this "
                          "scheduler")
 
+    def _outranks(self, run: _Runnable, victim: _Runnable) -> bool:
+        """Eviction order: strictly higher priority always outranks;
+        under the "deadline" policy an equal-priority run with a
+        strictly earlier deadline also outranks a deadline-less or
+        later-deadline victim (EDF eviction, DESIGN.md §14.3)."""
+        if victim.priority < run.priority:
+            return True
+        if (self.policy == "deadline" and victim.priority == run.priority
+                and run.deadline is not None):
+            return victim.deadline is None or victim.deadline > run.deadline
+        return False
+
     def _evict_for(self, run: _Runnable,
                    alloc: BankAllocator) -> Optional[BankLease]:
         """Priority preemption: free cores for ``run`` by preempting
-        strictly lower-priority resumable single jobs on its target
-        (lowest priority first, LIFO within a priority), retrying the
-        allocation after each eviction.  Returns the won lease, or None
-        when even preempting every eligible victim cannot fit the
-        request (then nobody is preempted)."""
+        outranked resumable single jobs on its target (lowest priority
+        first, latest deadline first under the "deadline" policy, LIFO
+        within a band), retrying the allocation after each eviction.
+        Returns the won lease, or None when even preempting every
+        eligible victim cannot fit the request (then nobody is
+        preempted)."""
         victims = [r for r in self._running
                    if r.target == run.target
                    and isinstance(r, _SingleRun)
-                   and r.priority < run.priority
+                   and self._outranks(run, r)
                    and getattr(r.jobs[0].workload, "resumable", False)
                    and not r.jobs[0].done]
         if not victims:
@@ -819,7 +942,10 @@ class PimScheduler:
         reclaimable = sum(r.lease.n_cores for r in victims)
         if alloc.free_cores + reclaimable < run.n_cores:
             return None
-        victims.sort(key=lambda r: (r.priority, -r.seq))
+        victims.sort(key=lambda r: (
+            r.priority,
+            -(r.deadline if r.deadline is not None else math.inf),
+            -r.seq))
         for victim in victims:
             self._preempt_running(victim, requeue=True)
             self.metrics.counter("sched.evictions").inc()
@@ -837,22 +963,25 @@ class PimScheduler:
         its lease), then re-admit — the allocator's first-fit over the
         coalesced free list packs the survivors contiguously.  Returns
         how many jobs were cycled.  Fused gangs are left in place
-        (one gang = one lease; moving it buys nothing)."""
-        target = self._resolve_target(target)
-        movable = [r for r in self._running
-                   if r.target == target and isinstance(r, _SingleRun)
-                   and getattr(r.jobs[0].workload, "resumable", False)
-                   and not r.jobs[0].done]
-        moved = 0
-        for run in movable:
-            if self._preempt_running(run, requeue=True) is not None:
-                moved += 1
-        self._admit()
-        self.metrics.counter("sched.defragments").inc()
-        if TRACER.enabled:
-            TRACER.instant("defragment", track="sched", cat="sched",
-                           target=target, moved=moved)
-        return moved
+        (one gang = one lease; moving it buys nothing).  Serialized
+        against scheduling turns: safe to call while a serve loop
+        drains (the preempt lands at the next chunk boundary)."""
+        with self._step_mutex, self._work:
+            target = self._resolve_target(target)
+            movable = [r for r in self._running
+                       if r.target == target and isinstance(r, _SingleRun)
+                       and getattr(r.jobs[0].workload, "resumable", False)
+                       and not r.jobs[0].done]
+            moved = 0
+            for run in movable:
+                if self._preempt_running(run, requeue=True) is not None:
+                    moved += 1
+            self._admit()
+            self.metrics.counter("sched.defragments").inc()
+            if TRACER.enabled:
+                TRACER.instant("defragment", track="sched", cat="sched",
+                               target=target, moved=moved)
+            return moved
 
     def _admit(self) -> None:
         self._queue = [r for r in self._queue if r.live_jobs]
@@ -860,9 +989,19 @@ class PimScheduler:
         # modeled job time (shortest-first — DESIGN.md §12.5): since
         # backfill already abandons strict submission order, the model's
         # estimate decides who jumps a blocked head.  Unpriceable jobs
-        # (est 0.0) sort first and fall back to submission order.
-        key = ((lambda r: (-r.priority, r.est_seconds, r.seq))
-               if self.backfill else (lambda r: (-r.priority, r.seq)))
+        # (est 0.0) sort first and fall back to submission order.  The
+        # "deadline" policy inserts EDF between priority and the
+        # backfill/FIFO tie-breakers (DESIGN.md §14.3).
+        if self.policy == "deadline":
+            key = (lambda r: (-r.priority,
+                              r.deadline if r.deadline is not None
+                              else math.inf,
+                              r.est_seconds if self.backfill else 0.0,
+                              r.seq))
+        elif self.backfill:
+            key = (lambda r: (-r.priority, r.est_seconds, r.seq))
+        else:
+            key = (lambda r: (-r.priority, r.seq))
         pending = sorted(self._queue, key=key)
         blocked: set = set()    # head-of-line blocking is per target
         for run in pending:
@@ -933,22 +1072,50 @@ class PimScheduler:
                         "sched.drift_ratio", DRIFT_BUCKETS)
                 drift_hist.observe(ratio)
 
+    def _settle(self, run: _Runnable) -> None:
+        """Stamp completion latency on every job of ``run`` that just
+        reached a terminal state, and count deadline misses — the SLO
+        observable the "deadline" policy is judged by (DESIGN.md §14)."""
+        now = time.monotonic()
+        for job in run.jobs:
+            if job.done and job.finished_at is None:
+                job.finished_at = now
+                if (job.deadline is not None
+                        and not job.deadline_missed
+                        and now > job.deadline):
+                    job.deadline_missed = True
+                    self.metrics.counter("sched.deadline_misses").inc()
+
     def step(self) -> bool:
         """One scheduling turn: admit what fits, then advance every
         running job by one gang step (round-robin, admission order).
         Returns True while any job is queued or running.  Explicitly
         preempted jobs park in PREEMPTED (their lease released) until
-        :meth:`resume`; parked jobs do not keep the drain loop alive."""
-        self._admit()
-        for run in list(self._running):
-            if run not in self._running:
-                continue    # evicted mid-turn by a priority preemption
-            # drift accounting (DESIGN.md §13.5): modeled progress this
-            # chunk is the delta each live job's _step_seconds pricing
-            # adds during advance; wall time is the chunk's perf_counter
-            # envelope.  Snapshot first, settle in _account_drift.
-            before = {j.id: j.modeled_seconds for j in run.jobs
-                      if not j.done}
+        :meth:`resume`; parked jobs do not keep the drain loop alive.
+
+        Thread-safe (serve mode, DESIGN.md §14.2): whole turns are
+        serialized — two threads can never co-advance one job's
+        generator — and the structure lock is dropped around each job's
+        chunk so ``submit()``/``stats()``/``wait()`` stay responsive
+        mid-chunk."""
+        with self._step_mutex:
+            return self._step_turn()
+
+    def _step_turn(self) -> bool:
+        with self._work:
+            self._admit()
+            runs = list(self._running)
+        for run in runs:
+            with self._work:
+                if run not in self._running:
+                    continue   # evicted mid-turn / finished elsewhere
+                # drift accounting (DESIGN.md §13.5): modeled progress
+                # this chunk is the delta each live job's _step_seconds
+                # pricing adds during advance; wall time is the chunk's
+                # perf_counter envelope.  Snapshot first, settle in
+                # _account_drift.
+                before = {j.id: j.modeled_seconds for j in run.jobs
+                          if not j.done}
             t0 = time.perf_counter()
             if TRACER.enabled:
                 with TRACER.span("chunk", f"target:{run.target}",
@@ -959,15 +1126,20 @@ class PimScheduler:
             else:
                 finished = run.advance(self)
             dt = time.perf_counter() - t0
-            self._observe_stragglers(run, dt)
-            self._account_drift(run, dt, before)
-            if finished:
-                self._allocators[run.target].release(run.lease)
-                self._running.remove(run)
-                self._finished.append(run)
-        if self.checkpoint_dir is not None:
-            self._persist_queue()
-        return bool(self._running or self._queue)
+            with self._work:
+                self._observe_stragglers(run, dt)
+                self._account_drift(run, dt, before)
+                if finished and run in self._running:
+                    self._allocators[run.target].release(run.lease)
+                    self._running.remove(run)
+                    self._finished.append(run)
+                self._settle(run)
+                self._work.notify_all()
+        with self._work:
+            if self.checkpoint_dir is not None:
+                self._persist_queue()
+            self._work.notify_all()
+            return bool(self._running or self._queue)
 
     def drain(self) -> List[JobHandle]:
         """Run scheduling turns until every job reaches a terminal
@@ -976,6 +1148,135 @@ class PimScheduler:
         while self.step():
             pass
         return self.handles
+
+    # -- service mode: background drain loop (DESIGN.md §14.2) ---------------
+
+    @property
+    def serving(self) -> bool:
+        """True while the background drain loop is alive."""
+        thread = self._serve_thread
+        return thread is not None and thread.is_alive()
+
+    @property
+    def idle(self) -> bool:
+        """True when nothing is queued or running (parked PREEMPTED
+        jobs don't count — only ``resume()`` revives those)."""
+        with self._lock:
+            return not (self._queue or self._running)
+
+    def serve(self, poll_interval: float = 0.05) -> None:
+        """Start the background drain loop: a daemon thread that runs
+        scheduling turns whenever work exists and sleeps on the work
+        Condition otherwise (``poll_interval`` bounds the sleep so
+        externally-flipped state — e.g. ``handle.cancel()`` — is seen
+        promptly).  ``submit()``/``sweep()``/``resume()`` return
+        immediately while the loop drains; work submitted mid-flight is
+        admitted at the loop's next turn.  One loop per scheduler —
+        starting twice is an error."""
+        with self._work:
+            if self.serving:
+                raise RuntimeError("scheduler is already serving")
+            self._stop_serving = False
+            self._drain_on_stop = True
+            self._serve_thread = threading.Thread(
+                target=self._serve_loop, args=(float(poll_interval),),
+                name="pim-sched-serve", daemon=True)
+            self._serve_thread.start()
+
+    def _serve_loop(self, poll_interval: float) -> None:
+        while True:
+            with self._work:
+                while (not self._stop_serving
+                       and not (self._queue or self._running)):
+                    self._work.wait(poll_interval)
+                if self._stop_serving and (
+                        not self._drain_on_stop
+                        or not (self._queue or self._running)):
+                    self._work.notify_all()
+                    return
+            try:
+                self.step()
+            except Exception:  # noqa: BLE001 — per-job failures are
+                # already isolated inside step(); this backstop only
+                # catches scheduler-level faults, counted so the loop
+                # never dies silently
+                self.metrics.counter("sched.serve_errors").inc()
+
+    def shutdown(self, wait: bool = True,
+                 timeout: Optional[float] = None) -> None:
+        """Stop the serve loop.  ``wait=True`` (default) first drains
+        every queued/running job to a terminal state — no submitted
+        work is lost; ``wait=False`` stops after the in-flight turn,
+        leaving the queue intact (a later :meth:`serve` or
+        :meth:`drain` picks it up).  No-op when not serving; raises
+        when the loop fails to stop within ``timeout`` seconds."""
+        with self._work:
+            thread = self._serve_thread
+            if thread is None:
+                return
+            self._drain_on_stop = wait
+            self._stop_serving = True
+            self._work.notify_all()
+        thread.join(timeout)
+        if thread.is_alive():
+            raise RuntimeError(
+                f"serve loop did not stop within {timeout}s")
+        with self._work:
+            self._serve_thread = None
+
+    def wait(self, handles: Optional[List[JobHandle]] = None,
+             timeout: Optional[float] = None) -> bool:
+        """Block until every given handle (default: all) settles —
+        terminal, or parked in PREEMPTED (only :meth:`resume` un-parks
+        those; waiting on them would hang forever).  True when settled,
+        False on timeout.  Progress needs a draining thread: serve
+        mode, or another thread calling ``step()``/``drain()``."""
+        deadline = (None if timeout is None
+                    else time.monotonic() + float(timeout))
+        with self._work:
+            while True:
+                targets = (handles if handles is not None
+                           else self.handles)
+                if all(h.done or h.state is JobState.PREEMPTED
+                       for h in targets):
+                    return True
+                remaining = 0.5
+                if deadline is not None:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return False
+                    remaining = min(remaining, 0.5)
+                self._work.wait(remaining)
+
+    def latency_summary(self) -> dict:
+        """Queue/completion latency percentiles over every job that
+        reached the corresponding lifecycle point — the service-level
+        observables of DESIGN.md §14.2 (time.monotonic seconds): queue
+        latency is first admission minus submission, completion latency
+        is the terminal transition minus submission."""
+        with self._lock:
+            queued = [h.started_at - h.submitted_at
+                      for h in self.handles if h.started_at is not None]
+            completed = [h.finished_at - h.submitted_at
+                         for h in self.handles
+                         if h.finished_at is not None]
+            misses = sum(1 for h in self.handles if h.deadline_missed)
+
+        def _pcts(xs: List[float]) -> dict:
+            if not xs:
+                return {"count": 0, "mean": None, "p50": None,
+                        "p99": None, "max": None}
+            xs = sorted(xs)
+
+            def pct(q: float) -> float:
+                return xs[min(len(xs) - 1,
+                              max(0, math.ceil(q * len(xs)) - 1))]
+
+            return {"count": len(xs), "mean": sum(xs) / len(xs),
+                    "p50": pct(0.50), "p99": pct(0.99), "max": xs[-1]}
+
+        return {"queue": _pcts(queued), "completion": _pcts(completed),
+                "deadline_misses": misses}
 
     # -- elastic: preempt / resume / migrate / persist -----------------------
 
@@ -992,37 +1293,42 @@ class PimScheduler:
         them on the parked runnable).  The handle itself is reused; on a
         foreign scheduler it is adopted into ``handles``.
         """
-        if handle.state is not JobState.PREEMPTED:
-            raise ValueError(f"can only resume a PREEMPTED job, "
-                             f"{handle.name!r} is {handle.state.value}")
-        to_target = self._resolve_target(target if target is not None
-                                         else (handle.target
-                                               if handle.target
-                                               in self.systems else None))
-        if handle.snapshot is not None and handle.snapshot_kind is not None:
-            to_kind = getattr(self.systems[to_target], "kind", "pim")
-            check_migration(handle.snapshot_kind, to_kind,
-                            handle.spec.version)
-        if data is None:
-            data = self._find_data(handle)
-        else:
-            data = self._host_arrays(data)
-        handle.target = to_target
-        handle.n_cores = self._sized(handle.n_cores, to_target)
-        handle.state = JobState.QUEUED
-        handle.lease = None
-        handle.iters = snapshot_iters(handle.snapshot)
-        run = _SingleRun([handle], data, handle.priority,
-                         next(self._seq), handle.n_cores, to_target,
-                         resume_state=handle.snapshot)
-        self._queue.append(run)
-        if handle not in self.handles:
-            self.handles.append(handle)
-        self.metrics.counter("sched.resumes").inc()
-        if TRACER.enabled:
-            TRACER.instant("resume", track=f"job:{handle.name}",
-                           cat="elastic", target=to_target,
-                           iters=handle.iters)
+        with self._work:
+            if handle.state is not JobState.PREEMPTED:
+                raise ValueError(f"can only resume a PREEMPTED job, "
+                                 f"{handle.name!r} is "
+                                 f"{handle.state.value}")
+            to_target = self._resolve_target(
+                target if target is not None
+                else (handle.target
+                      if handle.target in self.systems else None))
+            if (handle.snapshot is not None
+                    and handle.snapshot_kind is not None):
+                to_kind = getattr(self.systems[to_target], "kind", "pim")
+                check_migration(handle.snapshot_kind, to_kind,
+                                handle.spec.version)
+            if data is None:
+                data = self._find_data(handle)
+            else:
+                data = self._host_arrays(data)
+            handle.target = to_target
+            handle.n_cores = self._sized(handle.n_cores, to_target)
+            handle.state = JobState.QUEUED
+            handle.lease = None
+            handle.iters = snapshot_iters(handle.snapshot)
+            run = _SingleRun([handle], data, handle.priority,
+                             next(self._seq), handle.n_cores, to_target,
+                             resume_state=handle.snapshot)
+            run.deadline = handle.deadline
+            self._queue.append(run)
+            if handle not in self.handles:
+                self.handles.append(handle)
+            self.metrics.counter("sched.resumes").inc()
+            if TRACER.enabled:
+                TRACER.instant("resume", track=f"job:{handle.name}",
+                               cat="elastic", target=to_target,
+                               iters=handle.iters)
+            self._work.notify_all()
         return handle
 
     def _find_data(self, handle: JobHandle) -> tuple:
@@ -1043,6 +1349,11 @@ class PimScheduler:
         ``fingerprint`` (refuse to resume someone else's weights) and
         its ``system_kind`` is migration-checked against the job's
         target."""
+        with self._lock:
+            self._attach_resume_state(handle, snapshot, envelope)
+
+    def _attach_resume_state(self, handle: JobHandle, snapshot: dict,
+                             envelope: Optional[dict]) -> None:
         if handle.state is not JobState.QUEUED:
             raise ValueError("attach_resume_state needs a QUEUED job, "
                              f"{handle.name!r} is {handle.state.value}")
@@ -1075,13 +1386,15 @@ class PimScheduler:
         ``--resume`` must not re-run it.  The handle lands in DONE with
         ``restored=True`` and no in-memory FitResult (the caller reloads
         artifacts from its own checkpoint if it needs them)."""
-        if handle.state is not JobState.QUEUED:
-            raise ValueError("mark_restored needs a QUEUED job, "
-                             f"{handle.name!r} is {handle.state.value}")
-        handle.state = JobState.DONE
-        handle.restored = True
-        handle.iters = iters
-        handle.steps = steps
+        with self._lock:
+            if handle.state is not JobState.QUEUED:
+                raise ValueError("mark_restored needs a QUEUED job, "
+                                 f"{handle.name!r} is "
+                                 f"{handle.state.value}")
+            handle.state = JobState.DONE
+            handle.restored = True
+            handle.iters = iters
+            handle.steps = steps
 
     def _persist_job(self, job: JobHandle) -> None:
         """Durably checkpoint one job's snapshot (atomic tmp+rename via
@@ -1146,9 +1459,15 @@ class PimScheduler:
         The top-level occupancy keys describe the default target (the
         original single-system surface); ``targets`` breaks occupancy
         out per execution System on a mixed machine."""
+        with self._lock:
+            return self._stats_locked()
+
+    def _stats_locked(self) -> dict:
         frag = self.fragmentation()
         out = {
             "jobs": self.counts(),
+            "policy": self.policy,
+            "serving": self.serving,
             "queued_runnables": len(self._queue),
             "running_runnables": len(self._running),
             "cores_used": frag.used_cores,
@@ -1198,6 +1517,7 @@ class PimScheduler:
                 "mean_chunk_ratio": h.drift.mean,
             }
             for h in self.handles if h.measured_seconds > 0.0}
+        out["latency"] = self.latency_summary()
         return out
 
     def capacity_estimate(self, doc: dict) -> dict:

@@ -15,10 +15,10 @@ first-class API call (``repro.launch.compare``).
 """
 from __future__ import annotations
 
-from .base import (ChunkTick, FabricReduce, HierarchicalReduce, HostReduce,
-                   ReduceStrategy, ReduceVia, StepProgram, System,
-                   TransferStats, chunk_schedule, resolve_reduce_strategy,
-                   run_steps)
+from .base import (ChunkBoundary, ChunkPipeline, ChunkTick, FabricReduce,
+                   HierarchicalReduce, HostReduce, ReduceStrategy, ReduceVia,
+                   StepProgram, System, TransferStats, chunk_schedule,
+                   resolve_reduce_strategy, run_steps)
 from .gpu_model import GpuModelConfig, GpuModelReport, ModeledGpuSystem
 from .host import HostConfig, HostSlice, HostSystem
 from .pim import (DPU_FREQ_HZ, DPU_MRAM_BYTES_PER_CYCLE, DPU_OP_CYCLES,
@@ -56,7 +56,7 @@ def make_system(kind: str = "pim", **config_kwargs) -> System:
 
 
 __all__ = [
-    "ChunkTick",
+    "ChunkBoundary", "ChunkPipeline", "ChunkTick",
     "DPU_DMA_SEGMENT_BYTES", "DPU_DMA_SETUP_CYCLES", "DPU_FREQ_HZ",
     "DPU_MRAM_BYTES", "DPU_MRAM_BYTES_PER_CYCLE", "DPU_OP_CYCLES",
     "DPU_PIPELINE_SATURATION_THREADS", "DPU_WRAM_BYTES", "DpuCostModel",

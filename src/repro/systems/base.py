@@ -37,8 +37,10 @@ it is running on.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import enum
+import threading
 from typing import Any, Callable, Optional, Union
 
 import jax
@@ -118,9 +120,13 @@ class TransferStats:
             setattr(self, field.name, 0)
 
     def snapshot(self) -> "TransferStats":
-        """Point-in-time copy of every counter (a plain TransferStats)."""
-        return TransferStats(**{f.name: getattr(self, f.name)
-                                for f in dataclasses.fields(TransferStats)})
+        """Point-in-time copy of every counter (a plain TransferStats).
+        Taken under the mirroring lock so a caller-thread reading never
+        sees a slice increment half-propagated to its parent."""
+        with _STATS_LOCK:
+            return TransferStats(
+                **{f.name: getattr(self, f.name)
+                   for f in dataclasses.fields(TransferStats)})
 
     def delta(self, snapshot: "TransferStats") -> "TransferStats":
         """Counters accumulated since ``snapshot`` was taken."""
@@ -130,6 +136,13 @@ class TransferStats:
 
 
 _STAT_FIELDS = tuple(f.name for f in dataclasses.fields(TransferStats))
+
+#: Serializes _MirrorStats increment mirroring: the scheduler's serve
+#: thread charges slice counters while caller threads read ``stats()``
+#: snapshots or submit work (DESIGN.md §14.2).  Reentrant because a
+#: mirror's parent can itself be a mirror (slice-of-slice), nesting the
+#: read-modify-write chain under one acquisition.
+_STATS_LOCK = threading.RLock()
 
 
 class _MirrorStats(TransferStats):
@@ -143,10 +156,13 @@ class _MirrorStats(TransferStats):
 
     def __setattr__(self, name, value):
         if name in _STAT_FIELDS:
-            delta = value - getattr(self, name, 0)
-            if delta > 0:
-                setattr(self._parent, name,
-                        getattr(self._parent, name) + delta)
+            with _STATS_LOCK:
+                delta = value - getattr(self, name, 0)
+                if delta > 0:
+                    setattr(self._parent, name,
+                            getattr(self._parent, name) + delta)
+                object.__setattr__(self, name, value)
+            return
         object.__setattr__(self, name, value)
 
 
@@ -839,7 +855,7 @@ class StepProgram:
 
     # -- fused chunk ---------------------------------------------------------
 
-    def _build_chunk(self, k: int, with_xs: bool):
+    def _build_chunk(self, k: int, with_xs: bool, donate: bool = True):
         prepare, update, strat = self.prepare, self.update, self.strategy
         per_core, fn, select = self.system._per_core, self._fn, self.select
 
@@ -852,8 +868,11 @@ class StepProgram:
                 return update(carry, reduced)
             return jax.lax.scan(one_step, carry, xs, length=k)
         # donate the carry: the model state is updated in place on
-        # device, never materialized on the host inside the chunk
-        return jax.jit(chunk, donate_argnums=0)
+        # device, never materialized on the host inside the chunk.
+        # Pipelined callers (ChunkPipeline depth >= 2) must keep the
+        # chunk-N boundary carry readable while chunk N+1 is in flight,
+        # so they compile without donation — same numerics, extra buffer.
+        return jax.jit(chunk, donate_argnums=0 if donate else ())
 
     def _reduced_shape(self, carry, sharded, xs):
         """Abstract per-step ``device_reduce`` output (eval_shape, cached)
@@ -881,7 +900,8 @@ class StepProgram:
             self.system._jit_cache[key] = out
         return out
 
-    def run(self, carry, sharded: tuple, k: int, xs=None):
+    def run(self, carry, sharded: tuple, k: int, xs=None, *,
+            donate: bool = True):
         """Advance ``carry`` by ``k`` fused steps over the resident
         shards; returns ``(carry, outs)`` where ``outs`` stacks the
         per-step emits (None when ``update`` emits nothing).  ``xs`` is
@@ -891,7 +911,13 @@ class StepProgram:
         One kernel launch and one host sync for the whole chunk; the
         analytic byte accounting charges the carry broadcast once, the
         reduce movement k times, and one chunk-boundary PIM->CPU sync of
-        the final carry + emits (DESIGN.md §9.2)."""
+        the final carry + emits (DESIGN.md §9.2).
+
+        ``donate=False`` compiles the chunk without carry donation so
+        the input carry stays readable after dispatch — required when a
+        :class:`ChunkPipeline` overlaps chunk N+1 with the host drain of
+        boundary N (DESIGN.md §14.1).  Donation only affects buffer
+        reuse, never numerics."""
         sharded = tuple(sharded)
         if k <= 0:
             return carry, None
@@ -905,10 +931,10 @@ class StepProgram:
         # backend) and hierarchical rank-partial shapes depend on width
         key = ("step_program", self._kkey, self.name,
                self.strategy.cache_token(), len(sharded), k, with_xs,
-               self.system.config.n_cores)
+               donate, self.system.config.n_cores)
         chunk = self.system._jit_cache.get(key)
         if chunk is None:
-            chunk = self._build_chunk(k, with_xs)
+            chunk = self._build_chunk(k, with_xs, donate)
             self.system._jit_cache[key] = chunk
         stats = self.system.stats
         stats.kernel_launches += 1
@@ -950,3 +976,86 @@ class StepProgram:
         else:
             outs = None
         return carry, outs
+
+
+@dataclasses.dataclass
+class ChunkBoundary:
+    """One dispatched-but-not-yet-drained chunk inside a
+    :class:`ChunkPipeline`: the post-chunk carry/emits (device futures
+    until someone reads them) plus the caller's ``tag`` — the
+    host-side state captured at dispatch time (iteration count, packed
+    rng, ...) that the boundary's record/snapshot work needs."""
+
+    k: int
+    carry: Any
+    outs: Any
+    tag: Any = None
+
+
+class ChunkPipeline:
+    """Double-buffered :class:`StepProgram` driver (DESIGN.md §14.1).
+
+    JAX dispatch is asynchronous: ``StepProgram.run`` returns device
+    futures, and the host only blocks when it *reads* them (``record``
+    eval, convergence flags, ``ChunkTick.snapshot()``).  The serial
+    trainer loop wastes that: it drains boundary N before dispatching
+    chunk N+1, so the device idles for every host-side record.  A
+    ChunkPipeline keeps ``depth`` chunks in flight — ``dispatch()``
+    launches the next chunk immediately and hands back the boundaries
+    that have fallen ``depth`` behind, which the caller drains while
+    the device works.
+
+    Sync discipline: the drained :class:`ChunkBoundary` is the only
+    place reads happen; everything the drain needs that lives on the
+    host (iteration counters, rng state) must be captured eagerly at
+    dispatch time via ``tag`` — by drain time the trainer's live
+    variables have already advanced past this boundary.
+
+    ``depth=1`` degenerates to the serial cadence (dispatch, drain,
+    repeat) and keeps carry donation; ``depth>=2`` disables donation so
+    boundary N stays readable while chunk N+1 executes.  Numerics are
+    untouched either way — pipelining reorders host work only, so a
+    pipelined fit is bit-identical to the serial one (asserted by
+    tests/test_step_fusion.py).
+    """
+
+    def __init__(self, program: StepProgram, depth: int = 2):
+        if depth < 1:
+            raise ValueError(f"pipeline depth must be >= 1, got {depth}")
+        self.program = program
+        self.depth = depth
+        self._pending: collections.deque = collections.deque()
+
+    @property
+    def donate(self) -> bool:
+        """Depth 1 never holds a boundary while the next chunk runs, so
+        the in-place carry update stays safe."""
+        return self.depth == 1
+
+    @property
+    def in_flight(self) -> int:
+        return len(self._pending)
+
+    def dispatch(self, carry, sharded: tuple, k: int, xs=None, tag=None):
+        """Launch the next ``k``-step chunk and return ``(new_carry,
+        drained)`` where ``drained`` lists the boundaries now due for
+        host processing (empty until the pipeline fills).  ``new_carry``
+        is a device future — feed it straight into the next dispatch,
+        never read it directly (read drained boundaries instead)."""
+        carry, outs = self.program.run(carry, sharded, k, xs=xs,
+                                       donate=self.donate)
+        self._pending.append(ChunkBoundary(k, carry, outs, tag))
+        drained = []
+        while len(self._pending) >= self.depth:
+            drained.append(self._pending.popleft())
+        return carry, drained
+
+    def flush(self) -> list:
+        """Hand back every still-in-flight boundary (end of schedule or
+        early stop).  Boundaries dispatched after a stop decision are
+        the caller's to discard — for the convergence-latched trainers
+        an overshot chunk is a frozen no-op, so discarding it is exact
+        (DESIGN.md §14.1)."""
+        drained = list(self._pending)
+        self._pending.clear()
+        return drained

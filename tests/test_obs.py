@@ -159,6 +159,100 @@ def test_counter_standalone_parent():
 
 
 # ---------------------------------------------------------------------------
+# Thread safety: the serve-mode drain thread increments metrics
+# concurrently with caller-thread reads (DESIGN.md §14.2) — mirrored
+# increments must never be lost or double-propagated.
+# ---------------------------------------------------------------------------
+
+def test_concurrent_mirrored_counter_increments_are_exact():
+    import threading
+
+    parent = MetricsRegistry()
+    n_threads, n_incs = 8, 2000
+    children = [MetricsRegistry(parent=parent) for _ in range(n_threads)]
+    # pre-create so every thread races on the SAME counter objects
+    for child in children:
+        child.counter("sched.steps")
+
+    def work(child):
+        c = child.counter("sched.steps")
+        h = child.histogram("sched.step_seconds", bounds=(1.0, 10.0))
+        for i in range(n_incs):
+            c.inc()
+            h.observe(float(i % 3))
+
+    threads = [threading.Thread(target=work, args=(c,))
+               for c in children]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert parent.counter("sched.steps").value == n_threads * n_incs
+    hist = parent.histogram("sched.step_seconds", bounds=(1.0, 10.0))
+    assert hist.count == n_threads * n_incs
+    assert sum(hist.buckets) == hist.count
+    for child in children:
+        assert child.counter("sched.steps").value == n_incs
+
+
+def test_concurrent_registry_lazy_creation_single_instance():
+    import threading
+
+    reg = MetricsRegistry()
+    out = [None] * 16
+    barrier = threading.Barrier(len(out))
+
+    def grab(i):
+        barrier.wait()
+        out[i] = reg.counter("lazy.race")
+
+    threads = [threading.Thread(target=grab, args=(i,))
+               for i in range(len(out))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert all(c is out[0] for c in out)
+
+
+def test_concurrent_mirror_stats_increments_are_exact():
+    import threading
+
+    from repro.systems.base import TransferStats, _MirrorStats
+
+    parent = TransferStats()
+    n_threads, n_incs = 8, 2000
+    mirrors = [_MirrorStats(parent) for _ in range(n_threads)]
+    stop = threading.Event()
+
+    def bump(m):
+        for _ in range(n_incs):
+            m.cpu_to_pim += 3
+            m.host_syncs += 1
+
+    def read():
+        # caller-thread stats() reads must never crash or tear while
+        # the drain thread mirrors increments
+        while not stop.is_set():
+            snap = parent.snapshot()
+            assert snap.cpu_to_pim >= 0
+
+    threads = [threading.Thread(target=bump, args=(m,)) for m in mirrors]
+    reader = threading.Thread(target=read)
+    reader.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    stop.set()
+    reader.join()
+    assert parent.cpu_to_pim == n_threads * n_incs * 3
+    assert parent.host_syncs == n_threads * n_incs
+    for m in mirrors:
+        assert m.cpu_to_pim == n_incs * 3
+
+
+# ---------------------------------------------------------------------------
 # Per-slice attribution: parent totals == sum of per-job deltas in a
 # mixed-target queue (PimSlice / HostSlice / GpuModelSlice).
 # ---------------------------------------------------------------------------

@@ -381,3 +381,149 @@ def test_large_k_long_run_bit_identical(lin_data):
         r1, _ = _lin_pair(X, y, ver, fuse=1, n_iters=500)
         rk, _ = _lin_pair(X, y, ver, fuse=64, n_iters=500)
         assert np.array_equal(r1.w, rk.w) and r1.b == rk.b
+
+
+# ---------------------------------------------------------------------------
+# Chunk pipelining (DESIGN.md §14.1): depth only reorders host work.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("depth", (1, 2, 3))
+@pytest.mark.parametrize("ver", ("int32", "hyb", "bui"))
+def test_lin_pipeline_depth_bit_identical(lin_data, ver, depth):
+    """Any in-flight depth must equal the serial dispatch-drain cadence
+    bit for bit — weights, bias, AND the recorded history (the drain
+    side is where pipelining reorders work)."""
+    X, y = lin_data
+    ref, _ = _lin_pair(X, y, ver, fuse=8, record_every=8,
+                       pipeline_depth=1)
+    r, _ = _lin_pair(X, y, ver, fuse=8, record_every=8,
+                     pipeline_depth=depth)
+    assert np.array_equal(ref.w, r.w)
+    assert ref.b == r.b
+    assert ref.history == r.history
+
+
+def test_lin_pipeline_eval_fn_order(lin_data):
+    """eval_fn fires once per boundary, in chunk order, with the
+    boundary's own dequantized coefficients — regardless of depth."""
+    X, y = lin_data
+    traces = {}
+    for depth in (1, 2):
+        trace = []
+        pim = PimSystem(PimConfig(n_cores=CORES))
+        ds = pim.put(X, y)
+        cfg = linreg.GdConfig(version="int32", n_iters=32, fuse_steps=8,
+                              record_every=8, pipeline_depth=depth)
+        linreg.fit(ds, cfg, eval_fn=lambda w, b, t=trace: (
+            t.append((w.tobytes(), b)), 0.0)[1])
+        traces[depth] = trace
+    assert len(traces[1]) == 4
+    assert traces[1] == traces[2]
+
+
+@pytest.mark.parametrize("ver", ("int32", "int32_lut_mram",
+                                 "int32_lut_wram", "hyb_lut", "bui_lut"))
+def test_log_pipeline_bit_identical(log_data, ver):
+    X, y = log_data
+    results = {}
+    for depth in (1, 2):
+        pim = PimSystem(PimConfig(n_cores=CORES))
+        ds = pim.put(X, y)
+        cfg = logreg.LogRegConfig(version=ver, n_iters=32,
+                                  fuse_steps=8, record_every=8,
+                                  pipeline_depth=depth)
+        results[depth] = logreg.fit(ds, cfg)
+    assert np.array_equal(results[1].w, results[2].w)
+    assert results[1].b == results[2].b
+    assert results[1].history == results[2].history
+
+
+def test_kmeans_pipeline_bit_identical():
+    Xb, _, _ = make_blobs(N, F, centers=4, seed=1)
+    results = {}
+    for depth in (1, 2):
+        pim = PimSystem(PimConfig(n_cores=CORES))
+        ds = pim.put(Xb)
+        # tol=0 runs Lloyd's to max_iters so every chunk executes
+        cfg = kmeans.KMeansConfig(k=4, max_iters=12, tol=0.0, seed=3,
+                                  fuse_steps=4, pipeline_depth=depth)
+        results[depth] = kmeans.fit(ds, cfg, return_labels=False)
+    assert np.array_equal(results[1].centroids, results[2].centroids)
+    assert results[1].inertia == results[2].inertia
+    assert results[1].n_iters == results[2].n_iters
+
+
+def test_kmeans_pipeline_early_convergence():
+    """The done-latch must discard speculative in-flight chunks: a run
+    that converges mid-pipeline stops at the same iteration as the
+    serial cadence."""
+    Xb, _, _ = make_blobs(N, F, centers=4, seed=1)
+    results = {}
+    for depth in (1, 3):
+        pim = PimSystem(PimConfig(n_cores=CORES))
+        ds = pim.put(Xb)
+        cfg = kmeans.KMeansConfig(k=4, max_iters=40, tol=1e-4, seed=3,
+                                  fuse_steps=2, pipeline_depth=depth)
+        results[depth] = kmeans.fit(ds, cfg, return_labels=False)
+    assert results[1].n_iters == results[3].n_iters < 40
+    assert np.array_equal(results[1].centroids, results[3].centroids)
+
+
+def test_minibatch_pipeline_bit_identical(lin_data):
+    """Pipelined dispatch pre-draws each chunk's batch offsets eagerly;
+    the rng stream consumption must still match the serial cadence."""
+    X, y = lin_data
+    ref, _ = _lin_pair(X, y, "int32", fuse=4, n_iters=32, minibatch=32,
+                       record_every=4, pipeline_depth=1)
+    r, _ = _lin_pair(X, y, "int32", fuse=4, n_iters=32, minibatch=32,
+                     record_every=4, pipeline_depth=2)
+    assert np.array_equal(ref.w, r.w)
+    assert ref.b == r.b
+    assert ref.history == r.history
+
+
+def test_scheduler_gang_pipeline_bit_identical(lin_data):
+    """Two fused jobs gang-stepped by the scheduler with depth-2
+    pipelines match their solo depth-1 fits."""
+    X, y = lin_data
+    sched = PimScheduler(PimSystem(PimConfig(n_cores=CORES)), rank_size=4)
+    handles = [sched.submit("linreg", (X, y), version="int32",
+                            n_cores=4, lr=lr, n_iters=24, fuse_steps=8,
+                            pipeline_depth=2)
+               for lr in (0.05, 0.2)]
+    sched.drain()
+    for h, lr in zip(handles, (0.05, 0.2)):
+        assert h.state is JobState.DONE
+        pim = PimSystem(PimConfig(n_cores=4))
+        solo = linreg.fit(pim.put(X, y), linreg.GdConfig(
+            version="int32", lr=lr, n_iters=24, fuse_steps=8,
+            pipeline_depth=1))
+        assert np.array_equal(np.asarray(h.result.model.w), solo.w)
+        assert float(h.result.model.b) == solo.b
+
+
+def test_preempt_resume_mid_pipeline_bit_identical(lin_data):
+    """Preemption at a chunk boundary while chunks are in flight:
+    the snapshot is drain-authoritative, and resuming on a fresh
+    scheduler completes bit-identically to an uninterrupted fit."""
+    X, y = lin_data
+    params = dict(version="int32", n_iters=32, fuse_steps=4,
+                  pipeline_depth=2)
+    pim = PimSystem(PimConfig(n_cores=4))
+    ref = linreg.fit(pim.put(X, y), linreg.GdConfig(**params))
+
+    sched = PimScheduler(PimSystem(PimConfig(n_cores=CORES)), rank_size=4)
+    h = sched.submit("linreg", (X, y), n_cores=4, **params)
+    sched.step(); sched.step()
+    h.preempt()
+    sched.step()
+    assert h.state is JobState.PREEMPTED
+    assert 0 < h.iters < 32
+    assert h.iters % 4 == 0            # snapshot on a chunk boundary
+
+    s2 = PimScheduler(PimSystem(PimConfig(n_cores=CORES)), rank_size=4)
+    s2.resume(h, data=(X, y))
+    s2.drain()
+    assert h.state is JobState.DONE and h.iters == 32
+    assert np.array_equal(np.asarray(h.result.model.w), ref.w)
+    assert float(h.result.model.b) == ref.b

@@ -11,7 +11,7 @@
 PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: check test bench bench-fusion compare placement-bench \
-	serve-bench quickstart jobs elastic-demo
+	serve-bench quickstart jobs elastic-demo emb
 
 check:
 	./scripts/ci.sh
@@ -42,3 +42,8 @@ jobs:
 
 elastic-demo:
 	PYTHONPATH=$(PYTHONPATH) python examples/elastic_jobs.py
+
+# `make emb` runs the EMB deferred-update traffic/quality sweep and
+# records benchmarks/out/emb_bench.json (DESIGN.md §15.6)
+emb:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.emb_bench

@@ -1,0 +1,112 @@
+"""EMB deferred-update benchmark: flush traffic vs update freshness.
+
+Sweeps the LazyDP window D (``flush_every``) on a Zipf-skewed recsys
+stream and records, per D:
+
+  flush_bytes   the sparse update payload (ids + delta rows) shipped
+                across the host<->bank boundary — eager (D=1) pays it
+                every step; a window dedups hot rows and ships each
+                touched row once per D batches;
+  final_loss    training MSE at the end of the run — the freshness
+                cost of deferring (stale in-window gathers);
+  wall_s        measured fit wall-clock in this container;
+  compressed    the same D with ``compress_flush=True`` — int8 rows +
+                per-row scales + sparse error feedback on the wire.
+
+The acceptance claim (DESIGN.md §15.6, asserted here and in the @slow
+tier of tests/test_emb.py): D=8 cuts flush traffic >= 2x vs eager while
+the final loss stays within 1%.  The D=32 row deliberately rides past
+the freshness cliff — at lr=1.0 a 32-batch-stale window destabilizes
+training, which is the point: D trades traffic for freshness, not for
+free.  Results are recorded to
+``benchmarks/out/emb_bench.json`` through the shared run-metadata
+envelope.
+
+  PYTHONPATH=src python -m benchmarks.emb_bench
+  make emb
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import write_json
+from repro.data.synthetic import make_recsys
+from repro.emb import EmbConfig, fit
+from repro.systems import make_system
+
+N_SAMPLES = 8192
+N_USERS, N_ITEMS, DIM = 256, 192, 8
+N_ITERS, BATCH = 192, 256
+CORES = 16
+WINDOWS = (1, 2, 8, 32)
+OUT_PATH = os.path.join(os.path.dirname(__file__), "out",
+                        "emb_bench.json")
+
+
+def _run(X, y, D: int, compress: bool = False) -> dict:
+    cfg = EmbConfig(version="int32", n_iters=N_ITERS, batch=BATCH,
+                    dim=DIM, lr=1.0, frac_bits=12, seed=1,
+                    flush_every=D, compress_flush=compress,
+                    record_every=N_ITERS)
+    system = make_system("pim", n_cores=CORES)
+    ds = system.put(X, y)
+    t0 = time.perf_counter()
+    res = fit(ds, cfg)
+    wall = time.perf_counter() - t0
+    s = system.stats
+    return {"flush_every": D, "compress_flush": compress,
+            "flush_bytes": s.flush_bytes,
+            "compressed_bytes": s.compressed_bytes,
+            "cross_rank_bytes": s.cross_rank_bytes,
+            "final_loss": res.history[-1][1],
+            "n_flushes": res.n_flushes,
+            "wall_s": wall}
+
+
+def main() -> dict:
+    X, y = make_recsys(N_SAMPLES, N_USERS, N_ITEMS, dim=DIM,
+                       zipf_a=1.2, seed=0)
+    rows = [_run(X, y, D) for D in WINDOWS]
+    rows.append(_run(X, y, 8, compress=True))
+
+    eager = rows[0]
+    print(f"EMB deferred-update sweep ({N_SAMPLES} triples, "
+          f"{N_USERS}x{N_ITEMS} vocab, dim={DIM}, {N_ITERS} steps of "
+          f"batch {BATCH}, int32/Q12, {CORES} cores)")
+    print(f"  {'D':>4} {'compress':>8} {'flush KiB':>10} {'saving':>7} "
+          f"{'wire KiB':>9} {'final loss':>11} {'wall s':>7}")
+    for r in rows:
+        saving = eager["flush_bytes"] / max(r["flush_bytes"], 1)
+        wire = (r["compressed_bytes"] if r["compress_flush"]
+                else r["flush_bytes"])
+        print(f"  {r['flush_every']:>4} "
+              f"{str(r['compress_flush']):>8} "
+              f"{r['flush_bytes'] / 1024:>10.1f} {saving:>6.1f}x "
+              f"{wire / 1024:>9.1f} {r['final_loss']:>11.6f} "
+              f"{r['wall_s']:>7.2f}")
+
+    d8 = next(r for r in rows if r["flush_every"] == 8
+              and not r["compress_flush"])
+    ratio = eager["flush_bytes"] / d8["flush_bytes"]
+    drift = abs(d8["final_loss"] - eager["final_loss"]) \
+        / max(eager["final_loss"], 1e-12)
+    print(f"\n  acceptance: D=8 traffic saving {ratio:.1f}x "
+          f"(>= 2x), loss drift {100 * drift:.2f}% (<= 1%)")
+    assert ratio >= 2.0, f"D=8 saved only {ratio:.2f}x flush traffic"
+    assert drift <= 0.01, f"D=8 final loss drifted {100 * drift:.2f}%"
+
+    record = {"meta": {"samples": N_SAMPLES, "n_users": N_USERS,
+                       "n_items": N_ITEMS, "dim": DIM,
+                       "n_iters": N_ITERS, "batch": BATCH,
+                       "cores": CORES},
+              "rows": rows,
+              "acceptance": {"d8_traffic_saving": ratio,
+                             "d8_loss_drift": drift}}
+    record = write_json(OUT_PATH, record)
+    print(f"  recorded -> {OUT_PATH}")
+    return record
+
+
+if __name__ == "__main__":
+    main()

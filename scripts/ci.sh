@@ -16,7 +16,11 @@
 # --trace CLI runs are @slow), the
 # hierarchical topology/cost model + contention-aware placement
 # (calibration ratio checks are fast; the large Fig. 12 sweeps are
-# @slow), and the legacy deprecation surface; large-shape kernel
+# @slow), the EMB embedding family (sparse gather/scatter-add parity,
+# ShardedTable placement, deferred-update bit-identities, compressed
+# flushes, spool priority lane + sidecar replay; the three-system
+# compare run and the bench-scale traffic claim are @slow), and the
+# legacy deprecation surface; large-shape kernel
 # cases, large-K queues, fused-sweep execution, long fused runs, and
 # the full compare driver are marked @slow.
 # The LM-stack breadth (arch smoke matrix, serving, multi-device
@@ -31,6 +35,7 @@ exec python -m pytest -q -m "not slow" \
     tests/test_deprecation.py \
     tests/test_dispatch.py \
     tests/test_elastic.py \
+    tests/test_emb.py \
     tests/test_estimators.py \
     tests/test_fixed_point.py \
     tests/test_kernels.py \

@@ -154,6 +154,29 @@ class PimDataset:
                     self.mask())
         return self._cached(("tree",), build)
 
+    def emb_view(self) -> tuple:
+        """(pairs, targets) for the EMB workload: host-side ``(n, 2)``
+        int32 (user, item) index pairs plus float32 ratings.
+
+        EMB keeps the *dataset* host-side by design — per-step
+        minibatches of index pairs broadcast to the banks, while the
+        sharded state is the embedding TABLE (a :class:`ShardedTable`
+        from ``System.put_table``), inverting the usual data/model
+        placement (DESIGN.md §15.1)."""
+        y = self._require_y("emb_view")
+        if self.n_features != 2:
+            raise ValueError(
+                f"emb_view needs (n, 2) (user, item) index pairs, got "
+                f"{self.n_features} columns")
+        X = np.asarray(self.X)
+        if not np.issubdtype(X.dtype, np.integer):
+            if not np.all(X == np.round(X)):
+                raise ValueError("emb_view indices must be integral")
+        Xi = X.astype(np.int32)
+        if Xi.size and Xi.min() < 0:
+            raise ValueError("emb_view indices must be non-negative")
+        return self._cached(("emb",), lambda: (Xi, y.astype(np.float32)))
+
     def kmeans_view(self, version: str = "int16") -> KMeansView:
         """K-Means data view, cached per precision.
 

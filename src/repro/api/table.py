@@ -1,0 +1,249 @@
+"""Bank-sharded embedding tables (DESIGN.md §15.1).
+
+A :class:`ShardedTable` is the :class:`PimDataset` sibling for model
+state that is too large to broadcast: an embedding table is row-sharded
+across the bank extents ONCE (``System.put_table``), each shard keeping
+its slice of the placement map (the global row ids it owns), and only
+sparse lookups / sparse update rows cross the host<->PIM boundary per
+step — exactly the LazyDP access pattern the EMB workload reproduces.
+
+Placement maps (``placement=``):
+
+``"mod"``   shard ``v % S`` owns global row ``v`` at slot ``v // S`` —
+            the round-robin layout that load-balances Zipf-skewed id
+            traffic across banks (consecutive hot ids land on different
+            shards).
+``"hash"``  a seeded permutation is applied first, then round-robin —
+            breaks any adversarial stride in the id space.
+
+Both pad the vocabulary tail up to ``S x R`` slots; padded slots carry
+the ``ROW_PAD_ID`` sentinel in the id map and can never match a lookup.
+
+The table also carries the LazyDP-style *staging ledger* for deferred
+updates (§15.3): ``stage()`` accumulates per-minibatch sparse update
+rows host-side; ``drain()`` hands back the (optionally deduplicated —
+``np.add.at`` segment-sum) pending rows for one batched scatter-add
+flush.  The ledger is plain host state, so it serializes into elastic
+checkpoints like any other trainer array.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.fixed_point import to_fixed
+from ..kernels.sparse_gather import ROW_PAD_ID
+
+#: table storage precisions (version -> dtype of the device shards)
+TABLE_VERSIONS = ("fp32", "int32")
+
+PLACEMENTS = ("mod", "hash")
+
+
+class ShardedTable:
+    """Handle to an embedding table row-sharded across bank extents."""
+
+    def __init__(self, system, weights, *, placement: str = "mod",
+                 seed: int = 0):
+        if placement not in PLACEMENTS:
+            raise ValueError(f"unknown placement {placement!r}; "
+                             f"known: {PLACEMENTS}")
+        W = np.asarray(weights, np.float32)
+        if W.ndim != 2:
+            raise ValueError(f"table weights must be 2-D (rows, dim), "
+                             f"got shape {W.shape}")
+        self.system = system
+        self.host = W                       # master f32 copy (init values)
+        self.n_rows = int(W.shape[0])
+        self.dim = int(W.shape[1])
+        self.placement = placement
+        self.seed = int(seed)
+
+        S = system.n_shards
+        self.n_shards = S
+        self.rows_per_shard = -(-self.n_rows // S)          # R
+        # flat placement map in shard-major order: slot (s, r) lives at
+        # flat position s*R + r and owns global row ids[s, r]
+        ids = np.full((S, self.rows_per_shard), ROW_PAD_ID, np.int32)
+        order = np.arange(self.n_rows, dtype=np.int32)
+        if placement == "hash":
+            order = np.random.RandomState(self.seed).permutation(
+                self.n_rows).astype(np.int32)
+        # round-robin: flat grid position p = r*S + s  <- order[p]
+        grid = np.full(S * self.rows_per_shard, ROW_PAD_ID, np.int32)
+        grid[:self.n_rows] = order
+        ids[:, :] = grid.reshape(self.rows_per_shard, S).T
+        self._ids = ids                                     # (S, R) int32
+        self._views: Dict[tuple, Any] = {}
+        self._ids_dev: Optional[jnp.ndarray] = None
+        #: per-shard materialization accounting (rows owned is fixed by
+        #: the placement; bytes accrue per materialized view)
+        self.shard_stats: List[dict] = [
+            {"shard": s, "rows": int((ids[s] >= 0).sum()), "bytes": 0}
+            for s in range(S)]
+        # LazyDP staging ledger: per-minibatch sparse update rows
+        self._pending_idx: List[np.ndarray] = []
+        self._pending_upd: List[np.ndarray] = []
+        self.pending_batches = 0
+
+    # -- placement map -------------------------------------------------------
+
+    @property
+    def ids(self) -> np.ndarray:
+        """(S, R) int32 placement map (ROW_PAD_ID marks padding)."""
+        return self._ids
+
+    def lookup_shard(self, v: int) -> tuple:
+        """(shard, slot) owning global row ``v`` — placement diagnostics."""
+        s, r = np.nonzero(self._ids == int(v))
+        if len(s) == 0:
+            raise KeyError(f"row {v} not in table of {self.n_rows} rows")
+        return int(s[0]), int(r[0])
+
+    def ids_device(self) -> jnp.ndarray:
+        """(S, R) int32 placement map resident on the device (cached)."""
+        if self._ids_dev is None:
+            self._ids_dev = self.system.shard_rows(
+                self._ids.reshape(-1), pad_value=ROW_PAD_ID)
+            nb = self._ids.nbytes // self.n_shards
+            for st in self.shard_stats:
+                st["bytes"] += nb
+        return self._ids_dev
+
+    # -- sharded views -------------------------------------------------------
+
+    def view(self, version: str = "fp32", frac_bits: int = 10) -> tuple:
+        """(shards [S, R, D], ids [S, R]) device view, cached per
+        precision.  ``"int32"`` stores Q(frac_bits) fixed point — the
+        PIM version; ``"fp32"`` is the float baseline."""
+        if version not in TABLE_VERSIONS:
+            raise ValueError(f"unknown table version {version!r}; "
+                             f"known: {TABLE_VERSIONS}")
+        key = (version, frac_bits if version == "int32" else None)
+        view = self._views.get(key)
+        if view is None:
+            rows = self._gather_rows(version, frac_bits)
+            shards = self.system.shard_rows(rows.reshape(-1, self.dim))
+            nb = rows.nbytes // self.n_shards
+            for st in self.shard_stats:
+                st["bytes"] += nb
+            view = (shards, self.ids_device())
+            self._views[key] = view
+        return view
+
+    @property
+    def n_views(self) -> int:
+        """Materialized (transferred) table views — diagnostics."""
+        return len(self._views)
+
+    def _gather_rows(self, version: str, frac_bits: int) -> np.ndarray:
+        """Host (S, R, D) grid in placement order, zeros in pad slots."""
+        if version == "int32":
+            W = np.asarray(to_fixed(self.host, frac_bits))
+        else:
+            W = self.host
+        grid = np.zeros((self.n_shards, self.rows_per_shard, self.dim),
+                        W.dtype)
+        owned = self._ids >= 0
+        grid[owned] = W[self._ids[owned]]
+        return grid
+
+    def place_rows(self, rows) -> jnp.ndarray:
+        """Shard raw (V, D) storage rows through this table's placement
+        (uncached — the elastic-restore path: checkpointed tables are
+        size-independent (V, D) host arrays, re-placed on whatever
+        system resumes the job).  Inverse of :meth:`unshard`."""
+        rows = np.asarray(rows)
+        assert rows.shape == (self.n_rows, self.dim), rows.shape
+        grid = np.zeros((self.n_shards, self.rows_per_shard, self.dim),
+                        rows.dtype)
+        owned = self._ids >= 0
+        grid[owned] = rows[self._ids[owned]]
+        shards = self.system.shard_rows(grid.reshape(-1, self.dim))
+        nb = grid.nbytes // self.n_shards
+        for st in self.shard_stats:
+            st["bytes"] += nb
+        return shards
+
+    def unshard(self, shards, version: str = "fp32",
+                frac_bits: int = 10) -> np.ndarray:
+        """Reassemble (V, D) host rows from an (S, R, D) shard grid
+        (e.g. the trainer's updated tables), inverting the placement.
+        Returns the raw storage dtype (int32 Q(frac_bits) or float32).
+        """
+        del version, frac_bits  # dtype rides the shards themselves
+        shards = np.asarray(shards)
+        out = np.zeros((self.n_rows, self.dim), shards.dtype)
+        owned = self._ids >= 0
+        out[self._ids[owned]] = shards[owned]
+        return out
+
+    # -- deferred-update staging ledger (DESIGN.md §15.3) --------------------
+
+    def stage(self, idx, upd) -> None:
+        """Append one minibatch of sparse update rows to the ledger."""
+        idx = np.asarray(idx, np.int32)
+        upd = np.asarray(upd)
+        assert idx.shape[0] == upd.shape[0], (idx.shape, upd.shape)
+        self._pending_idx.append(idx)
+        self._pending_upd.append(upd)
+        self.pending_batches += 1
+
+    @property
+    def pending_rows(self) -> int:
+        return sum(int(v.shape[0]) for v in self._pending_idx)
+
+    def drain(self, dedup: bool = True) -> tuple:
+        """Pop the ledger as one ``(idx, upd)`` flush batch.
+
+        ``dedup=True`` segment-sums duplicate ids host-side
+        (``np.unique`` + ``np.add.at``) so each touched row ships ONCE —
+        the deferred-flush traffic saving.  ``dedup=False`` concatenates
+        verbatim (the D=1 path: a single batch flushes exactly as the
+        eager apply would, which is what makes D=1 bit-identical)."""
+        if not self._pending_idx:
+            return (np.zeros((0,), np.int32),
+                    np.zeros((0, self.dim), np.float32))
+        idx = np.concatenate(self._pending_idx)
+        upd = np.concatenate(self._pending_upd)
+        self.clear_pending()
+        if not dedup:
+            return idx, upd
+        uniq, inv = np.unique(idx, return_inverse=True)
+        if np.issubdtype(upd.dtype, np.integer):
+            acc = np.zeros((uniq.shape[0], upd.shape[1]), np.int64)
+            np.add.at(acc, inv, upd.astype(np.int64))
+            acc = acc.astype(upd.dtype)
+        else:
+            acc = np.zeros((uniq.shape[0], upd.shape[1]), upd.dtype)
+            np.add.at(acc, inv, upd)
+        return uniq.astype(np.int32), acc
+
+    def pending_arrays(self) -> tuple:
+        """Ledger contents for checkpointing (concatenated, not popped)."""
+        if not self._pending_idx:
+            return (np.zeros((0,), np.int32),
+                    np.zeros((0, self.dim), np.float32))
+        return (np.concatenate(self._pending_idx),
+                np.concatenate(self._pending_upd))
+
+    def restore_pending(self, idx, upd, batches: int = 0) -> None:
+        """Restore a checkpointed ledger (inverse of pending_arrays)."""
+        self.clear_pending()
+        idx = np.asarray(idx, np.int32)
+        if idx.size:
+            self._pending_idx.append(idx)
+            self._pending_upd.append(np.asarray(upd))
+        self.pending_batches = int(batches)
+
+    def clear_pending(self) -> None:
+        self._pending_idx = []
+        self._pending_upd = []
+        self.pending_batches = 0
+
+    def __repr__(self) -> str:
+        return (f"ShardedTable({self.n_rows}x{self.dim}, "
+                f"{self.placement!r}, shards={self.n_shards}, "
+                f"views={self.n_views})")

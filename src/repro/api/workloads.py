@@ -209,3 +209,7 @@ register_workload(LinRegWorkload())
 register_workload(LogRegWorkload())
 register_workload(DecisionTreeWorkload())
 register_workload(KMeansWorkload())
+
+# EMB lives in its own subsystem (repro.emb) — importing its adapter
+# here registers it alongside the paper's four (DESIGN.md §15.2)
+from ..emb.workload import EmbWorkload  # noqa: E402,F401  (registers)

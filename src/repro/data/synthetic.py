@@ -81,6 +81,30 @@ def make_blobs(n_samples: int = 100_000, n_features: int = 16,
     return X.astype(np.float32), y.astype(np.int32), C.astype(np.float32)
 
 
+def make_recsys(n_samples: int = 16384, n_users: int = 512,
+                n_items: int = 256, dim: int = 8, zipf_a: float = 1.2,
+                noise: float = 0.02, seed: int = 0):
+    """EMB quality dataset (DESIGN.md §15): (user, item, rating) triples.
+
+    Ids draw from a truncated Zipf-like (Pareto) distribution — the
+    power-law popularity skew real recsys traffic has, and the regime
+    where deferred-update dedup actually saves flush traffic (hot rows
+    are touched many times per window but ship once).  Ratings come
+    from a ground-truth low-rank model so a dot-product embedding can
+    drive the loss down.  Returns (pairs int32 [n, 2], y float32 [n]).
+    """
+    rng = np.random.RandomState(seed)
+    U = (rng.randn(n_users, dim) * (0.5 / np.sqrt(dim))).astype(np.float32)
+    I = (rng.randn(n_items, dim) * (0.5 / np.sqrt(dim))).astype(np.float32)
+    u = np.minimum(rng.pareto(zipf_a, n_samples).astype(np.int64), n_users - 1)
+    i = np.minimum(rng.pareto(zipf_a, n_samples).astype(np.int64), n_items - 1)
+    y = np.sum(U[u] * I[i], axis=1)
+    if noise:
+        y = y + rng.normal(0.0, noise, size=n_samples)
+    pairs = np.stack([u, i], axis=1).astype(np.int32)
+    return pairs, y.astype(np.float32)
+
+
 def make_scaling_dataset(workload: str, n_cores: int, per_core_samples: int,
                          n_features: int = 16, seed: int = 0):
     """Weak/strong-scaling inputs (paper Table 3): synthetic, sized per core."""
@@ -93,4 +117,6 @@ def make_scaling_dataset(workload: str, n_cores: int, per_core_samples: int,
     if workload == "kme":
         X, y, _ = make_blobs(n, n_features, seed=seed)
         return X, y
+    if workload == "emb":
+        return make_recsys(n, seed=seed)
     raise ValueError(workload)

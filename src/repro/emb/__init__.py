@@ -1,0 +1,10 @@
+"""EMB: bank-sharded embedding training with deferred sparse updates.
+
+The repo's first sparse, irregular-access workload family (DESIGN.md
+§15): dot-product embedding regression over (user, item) index pairs —
+the memory-bound recsys pattern LazyDP (ASPLOS'24) accelerates with
+lazily deferred gradient updates, reproduced here on the System
+protocol with the ``sparse_gather`` Pallas kernel family.
+"""
+from .trainer import (EmbConfig, EmbResult, VERSIONS, fit,  # noqa: F401
+                      fit_steps)

@@ -1,0 +1,424 @@
+"""EMB trainer: deferred-update embedding regression (DESIGN.md §15).
+
+Model: rating(u, i) = <U[u], I[i]> — two bank-sharded embedding tables
+(:class:`~repro.api.table.ShardedTable`) trained by minibatch SGD over
+(user, item, rating) triples.  Two precisions, the paper's ladder:
+
+  EMB-FP32   float32 tables and arithmetic (the processor-centric
+             baseline precision).
+  EMB-INT32  Q(frac_bits) fixed-point tables + arithmetic — the PIM
+             version; every reduction is exact in int32, so serial,
+             fused, deferred-D=1 and resumed runs are bit-identical.
+
+Execution per step (the LazyDP flow on the System protocol):
+
+  1. the minibatch's (user, item) ids + targets broadcast to the banks;
+  2. every core answers a shard-local ``emb_gather`` against its
+     placement map (zeros for rows it does not own) — ONE map_reduce
+     whose fabric sum reconstructs the full gathered rows;
+  3. the update math (predict, error, per-row deltas) runs in the
+     shared ``update`` closure — the same jnp ops serve the serial
+     loop and the fused :class:`StepProgram` scan;
+  4. the sparse delta rows either apply immediately (eager,
+     ``flush_every=1``) via ``emb_scatter_add``, or accumulate in the
+     table's host-side staging ledger and flush every D batches as one
+     deduplicated batched scatter-add (deferred — LazyDP).
+
+Deferred semantics: within a window the gathers read the table as of
+the last flush (updates are invisible until they apply — the relaxed
+schedule PIM-Opt studies).  A window of D=1 therefore degenerates to
+eager exactly: the ledger holds one batch, drains without dedup, and
+ships through the SAME scatter kernel the eager path uses — asserted
+bit-identical (tests/test_emb.py).  Fusion composes with windows, not
+across them: a flush is a host-visible table write the next window
+depends on, so chunks are clipped to flush boundaries (and eager mode,
+a read-after-write per step, always runs the serial loop).
+
+``TransferStats.flush_bytes`` counts the sparse update payload (ids +
+delta rows) every apply ships — the counter the deferred-vs-eager
+traffic claim (benchmarks/emb_bench.py) is made on; the payload is
+also charged as cross-rank traffic on PIM targets.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.fixed_point import _shift_round, from_fixed, to_fixed
+from ..elastic.state import pack_rng, unpack_rng
+from ..kernels import dispatch
+from ..kernels.sparse_gather import IDX_PAD
+from ..systems import ChunkTick, System, run_steps
+from ..systems.compress import quantize_rows
+
+VERSIONS = ("fp32", "int32")
+
+
+@dataclasses.dataclass
+class EmbConfig:
+    version: str = "fp32"
+    n_iters: int = 200       # minibatch SGD steps
+    batch: int = 64
+    dim: int = 8             # embedding width
+    lr: float = 0.05
+    frac_bits: int = 10      # Q format of the int32 tables/arithmetic
+    #: D — deferred-update window in batches (LazyDP).  1 = eager
+    #: (apply every step); D > 1 stages D batches in the table ledger
+    #: and flushes once, deduplicated, per window.
+    flush_every: int = 1
+    #: force the staging-ledger path even at flush_every=1 (None = auto:
+    #: deferred iff flush_every > 1).  The D=1 identity is asserted
+    #: against this: staged-and-flushed D=1 == eager, bit for bit.
+    deferred: Optional[bool] = None
+    #: int8 + error-feedback compression of the flush payload
+    #: (systems.compress.quantize_rows; residual rows re-stage into the
+    #: next window — exact on the int32 version, see DESIGN.md §15.4)
+    compress_flush: bool = False
+    placement: str = "mod"   # ShardedTable placement map ("mod"|"hash")
+    n_users: Optional[int] = None   # None = infer from the index pairs
+    n_items: Optional[int] = None
+    record_every: int = 0    # record batch MSE every this many steps
+    seed: int = 0
+    kernel_backend: Optional[str] = None
+    #: step fusion within a deferred window (DESIGN.md §9/§15.3):
+    #: chunks clip to flush boundaries; ignored in eager mode.
+    fuse_steps: int = 1
+    #: accepted for interface parity with the other trainers; deferred
+    #: windows serialize on their flush, so chunks dispatch depth-1.
+    pipeline_depth: int = 2
+
+
+@dataclasses.dataclass
+class EmbResult:
+    user_emb: np.ndarray     # (n_users, dim) float32
+    item_emb: np.ndarray     # (n_items, dim) float32
+    user_raw: np.ndarray     # storage dtype (int32 Q(f) | float32)
+    item_raw: np.ndarray
+    history: list            # [(iter, batch MSE)] if record_every
+    n_iters: int = 0
+    n_flushes: int = 0
+
+    def predict(self, pairs: np.ndarray) -> np.ndarray:
+        p = np.asarray(pairs, np.int64)
+        return np.sum(self.user_emb[p[:, 0]] * self.item_emb[p[:, 1]],
+                      axis=1).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Per-core kernels (dispatch-routed through the sparse_gather family).
+# ---------------------------------------------------------------------------
+
+def build_emb_fwd(backend=None) -> Callable:
+    """Forward leg: both tables' shard-local gathers + the target relay.
+
+    ``lead`` is a sharded (1,)-per-core indicator (1 on shard 0) that
+    lets the replicated targets ride the reduce tree exactly once —
+    the fused scan has no other lane for per-step host values."""
+    be = dispatch.resolve_backend(backend)
+
+    def _fwd(Utab, Uids, Itab, Iids, lead, iu, ii, yb):
+        u = dispatch.launch("emb_gather", Utab, Uids, iu, backend=be)
+        i = dispatch.launch("emb_gather", Itab, Iids, ii, backend=be)
+        return {"u": u, "i": i, "y": yb * lead[0]}
+    return _fwd
+
+
+def build_emb_apply(backend=None) -> Callable:
+    """Update leg: duplicate-safe scatter-add of sparse delta rows into
+    both tables; output stays bank-resident (map_elementwise)."""
+    be = dispatch.resolve_backend(backend)
+
+    def _apply(Utab, Uids, Itab, Iids, iu, du, ii, di):
+        return {"u": dispatch.launch("emb_scatter_add", Utab, Uids,
+                                     iu, du, backend=be),
+                "i": dispatch.launch("emb_scatter_add", Itab, Iids,
+                                     ii, di, backend=be)}
+    return _apply
+
+
+def fwd_kernel_name(cfg: EmbConfig) -> str:
+    return (f"emb.fwd/{cfg.version}/f{cfg.frac_bits}"
+            f"/{dispatch.backend_tag(cfg.kernel_backend)}")
+
+
+def apply_kernel_name(cfg: EmbConfig) -> str:
+    return (f"emb.apply/{cfg.version}"
+            f"/{dispatch.backend_tag(cfg.kernel_backend)}")
+
+
+def make_emb_step_fns(cfg: EmbConfig):
+    """(prepare, update) closures of one EMB step — shared by the
+    serial loop and the fused scan (they cannot drift numerically).
+
+    ``update`` consumes the reduced {"u","i","y"} rows and emits the
+    *signed* per-sample delta rows (lr folded in, rounding applied) plus
+    the batch squared error: ``carry`` is just the step counter, since
+    the model state lives in the sharded tables, not the carry."""
+    f = cfg.frac_bits
+
+    def prepare(carry):
+        del carry  # the minibatch arrives as replicated args / scan xs
+        return ()
+
+    if cfg.version == "int32":
+        lr_q = to_fixed(cfg.lr / cfg.batch, f)          # Q(f) scalar
+
+        def update(carry, red):
+            # host-strategy reduces arrive as promoted numpy int64;
+            # jnp.asarray demotes to int32 (same convention as linreg)
+            u = jnp.asarray(red["u"])
+            i = jnp.asarray(red["i"])
+            y = jnp.asarray(red["y"])
+            pred = jnp.sum(_shift_round(u * i, f), axis=1)  # Q(f)
+            err = pred - y                                  # Q(f)
+            du = -_shift_round(lr_q * _shift_round(err[:, None] * i, f), f)
+            di = -_shift_round(lr_q * _shift_round(err[:, None] * u, f), f)
+            errf = err.astype(jnp.float32) * np.float32(2.0 ** -f)
+            return carry + 1, (du, di, jnp.sum(errf * errf))
+    else:
+        s = jnp.float32(cfg.lr / cfg.batch)
+
+        def update(carry, red):
+            u = jnp.asarray(red["u"], jnp.float32)
+            i = jnp.asarray(red["i"], jnp.float32)
+            y = jnp.asarray(red["y"], jnp.float32)
+            err = jnp.sum(u * i, axis=1) - y
+            du = -(s * err[:, None] * i)
+            di = -(s * err[:, None] * u)
+            return carry + 1, (du, di, jnp.sum(err * err))
+    return prepare, update
+
+
+# ---------------------------------------------------------------------------
+# Host-orchestrated training loop.
+# ---------------------------------------------------------------------------
+
+def fit_steps(dataset, cfg: Optional[EmbConfig] = None, *,
+              state: Optional[dict] = None):
+    """Generator form of EMB training; the EmbResult travels on
+    StopIteration.  Yields one :class:`ChunkTick` per step (serial) or
+    per fused chunk, each carrying a lazy chunk-boundary snapshot —
+    tables serialize as size-independent (V, D) host rows plus the
+    staging ledger, so a preempted fit resumes bit-identically on any
+    slice width (DESIGN.md §11.2/§15.5)."""
+    cfg = cfg or EmbConfig()
+    assert cfg.version in VERSIONS, cfg.version
+    pim = dataset.system
+    pairs, y_f = dataset.emb_view()
+    n = pairs.shape[0]
+    n_users = int(cfg.n_users or pairs[:, 0].max() + 1)
+    n_items = int(cfg.n_items or pairs[:, 1].max() + 1)
+    f = cfg.frac_bits
+    int_ver = cfg.version == "int32"
+    D = max(1, int(cfg.flush_every))
+    deferred = D > 1 if cfg.deferred is None else bool(cfg.deferred)
+    y_host = np.asarray(to_fixed(y_f, f)) if int_ver else y_f
+
+    history: list = []
+    rng = np.random.RandomState(cfg.seed)
+    it_done = 0
+    # table init draws come FIRST on the rng stream; a resumed fit
+    # restores the packed rng (already past them) and overrides the
+    # init values with the checkpointed rows below.
+    scale = np.float32(1.0 / np.sqrt(cfg.dim))
+    Wu = (rng.rand(n_users, cfg.dim).astype(np.float32) - 0.5) * scale
+    Wi = (rng.rand(n_items, cfg.dim).astype(np.float32) - 0.5) * scale
+    utable = pim.put_table(Wu, placement=cfg.placement, seed=cfg.seed)
+    itable = pim.put_table(Wi, placement=cfg.placement, seed=cfg.seed + 1)
+
+    if state is not None:
+        arrays, meta = state["arrays"], state["meta"]
+        it_done = int(meta["iters"])
+        history = [tuple(h) for h in meta.get("history", [])]
+        rng = unpack_rng(arrays, meta) or rng
+        Ut = utable.place_rows(arrays["u_tab"])
+        It = itable.place_rows(arrays["i_tab"])
+        Uids = utable.ids_device()
+        Iids = itable.ids_device()
+        utable.restore_pending(arrays["pend_u_idx"], arrays["pend_u_upd"],
+                               int(meta.get("pend_u_batches", 0)))
+        itable.restore_pending(arrays["pend_i_idx"], arrays["pend_i_upd"],
+                               int(meta.get("pend_i_batches", 0)))
+    else:
+        Ut, Uids = utable.view(cfg.version, f)
+        It, Iids = itable.view(cfg.version, f)
+
+    lead_host = np.zeros(pim.n_shards, np.int32 if int_ver else np.float32)
+    lead_host[0] = 1
+    lead = pim.shard_rows(lead_host)
+
+    prepare, update = make_emb_step_fns(cfg)
+    update_j = jax.jit(update)
+    fwd_k = pim.named_kernel(fwd_kernel_name(cfg),
+                             lambda: build_emb_fwd(cfg.kernel_backend))
+    apply_k = pim.named_kernel(apply_kernel_name(cfg),
+                               lambda: build_emb_apply(cfg.kernel_backend))
+    n_flushes = 0
+
+    def draw():
+        rows = rng.randint(0, n, size=cfg.batch)
+        return (pairs[rows, 0].copy(), pairs[rows, 1].copy(),
+                y_host[rows].copy())
+
+    def record(it, sq):
+        if cfg.record_every and (it % cfg.record_every == 0
+                                 or it == cfg.n_iters):
+            history.append((it, float(sq) / cfg.batch))
+
+    def _pad_flush(idx, upd):
+        """Pad a flush batch up to a multiple of cfg.batch (sentinel
+        ids, zero rows — exact no-ops in the scatter) so the apply
+        kernel sees at most a few distinct shapes per fit."""
+        m = int(idx.shape[0])
+        bucket = max(cfg.batch, -(-m // cfg.batch) * cfg.batch)
+        if bucket == m:
+            return idx, upd
+        pad_i = np.full(bucket - m, IDX_PAD, np.int32)
+        pad_u = np.zeros((bucket - m, upd.shape[1]), upd.dtype)
+        return (np.concatenate([np.asarray(idx), pad_i]),
+                np.concatenate([np.asarray(upd), pad_u]))
+
+    def _apply_rows(iu, du, ii, di):
+        """One batched scatter-add of sparse delta rows into both
+        tables (eager apply AND deferred flush — one code path)."""
+        nonlocal Ut, It, n_flushes
+        payload = int(iu.nbytes + du.nbytes + ii.nbytes + di.nbytes)
+        pim.stats.flush_bytes += payload
+        # the sparse update leg crosses rank boundaries on its way to
+        # the owning banks (no-op charge on host targets)
+        pim._charge_topology(0, payload)
+        iu, du = _pad_flush(iu, du)
+        ii, di = _pad_flush(ii, di)
+        out = pim.map_elementwise(
+            apply_k, (Ut, Uids, It, Iids),
+            (jnp.asarray(iu), jnp.asarray(du),
+             jnp.asarray(ii), jnp.asarray(di)))
+        Ut, It = out["u"], out["i"]
+        n_flushes += 1
+
+    def _compressed(table, idx, upd):
+        """int8 the flush rows; the residual re-stages as sparse error
+        feedback for the next window (exact integer EF on int32)."""
+        q, scales, deq, residual = quantize_rows(np.asarray(upd))
+        pim.stats.compressed_bytes += (q.nbytes + scales.nbytes
+                                       + np.asarray(idx).nbytes)
+        if residual.any():
+            table.stage(idx, residual)
+        return deq
+
+    def _flush_window():
+        """Drain both ledgers into one batched scatter-add.  A single
+        staged batch (the D=1 identity) skips dedup entirely: it ships
+        verbatim through the same kernel call eager would make."""
+        dedup = max(utable.pending_batches, itable.pending_batches) > 1
+        iu, du = utable.drain(dedup=dedup)
+        ii, di = itable.drain(dedup=dedup)
+        if iu.size == 0 and ii.size == 0:
+            return
+        if cfg.compress_flush:
+            du = _compressed(utable, iu, du)
+            di = _compressed(itable, ii, di)
+        _apply_rows(iu, du, ii, di)
+
+    def _snapshot():
+        ra, rm = pack_rng(rng)
+        pu_idx, pu_upd = utable.pending_arrays()
+        pi_idx, pi_upd = itable.pending_arrays()
+        arrays = {"u_tab": utable.unshard(np.asarray(Ut)),
+                  "i_tab": itable.unshard(np.asarray(It)),
+                  "pend_u_idx": pu_idx, "pend_u_upd": pu_upd,
+                  "pend_i_idx": pi_idx, "pend_i_upd": pi_upd}
+        arrays.update(ra)
+        meta = {"iters": int(it_done),
+                "history": [[int(i), None if m is None else float(m)]
+                            for i, m in history],
+                "pend_u_batches": int(utable.pending_batches),
+                "pend_i_batches": int(itable.pending_batches)}
+        meta.update(rm)
+        return {"arrays": arrays, "meta": meta}
+
+    sharded = lambda: (Ut, Uids, It, Iids, lead)  # noqa: E731
+
+    if deferred and cfg.fuse_steps > 1:
+        # fused deferred windows: D steps of gather+update compile into
+        # lax.scan chunks (tables frozen within the window — exactly
+        # the deferred semantics), delta rows ride out as scan emits
+        C = pim.n_shards
+
+        def select(shards, x):
+            iu, ii, yb = x
+            bc = lambda v: jnp.broadcast_to(  # noqa: E731
+                v, (C,) + v.shape)
+            return (*shards, bc(iu), bc(ii), bc(yb))
+
+        program = pim.step_program(
+            fwd_k, prepare, update,
+            name=(f"emb.step/{fwd_kernel_name(cfg)}/lr{cfg.lr}"
+                  f"/b{cfg.batch}/D{D}"),
+            select=select)
+        it = it_done
+        carry = jnp.int32(it_done)
+        while it < cfg.n_iters:
+            window_end = min(cfg.n_iters, it + (D - it % D))
+            k = min(cfg.fuse_steps, window_end - it)
+            if cfg.record_every:
+                nxt = (it // cfg.record_every + 1) * cfg.record_every
+                k = min(k, nxt - it)
+            batches = [draw() for _ in range(k)]
+            xs = tuple(jnp.asarray(np.stack([b[j] for b in batches]))
+                       for j in range(3))
+            if getattr(pim, "kind", None) == "pim":
+                # the per-step minibatch legs cross host->bank exactly
+                # as the serial loop's broadcast does
+                pim.stats.cpu_to_pim += (
+                    sum(int(v.nbytes) for v in xs) * pim.config.n_cores)
+            carry, outs = program.run(carry, sharded(), k, xs=xs)
+            du_k, di_k, sq_k = (np.asarray(o) for o in outs)
+            for j in range(k):
+                utable.stage(batches[j][0], du_k[j])
+                itable.stage(batches[j][1], di_k[j])
+                record(it + j + 1, sq_k[j])
+            it += k
+            it_done = it
+            if it % D == 0 or it == cfg.n_iters:
+                _flush_window()
+            yield ChunkTick(k, _snapshot)
+    else:
+        for it in range(it_done, cfg.n_iters):
+            iu, ii, yb = draw()
+            rep = pim.broadcast((jnp.asarray(iu), jnp.asarray(ii),
+                                 jnp.asarray(yb)))
+            red = pim.map_reduce(fwd_k, sharded(), tuple(rep))
+            _, (du, di, sq) = update_j(jnp.int32(it), red)
+            if deferred:
+                utable.stage(iu, np.asarray(du))
+                itable.stage(ii, np.asarray(di))
+                if (it + 1) % D == 0 or it + 1 == cfg.n_iters:
+                    _flush_window()
+            else:
+                _apply_rows(iu, du, ii, di)
+            it_done = it + 1
+            record(it_done, sq)
+            yield ChunkTick(1, _snapshot)
+
+    u_raw = utable.unshard(np.asarray(Ut))
+    i_raw = itable.unshard(np.asarray(It))
+    if int_ver:
+        u_emb = np.asarray(from_fixed(u_raw, f), np.float32)
+        i_emb = np.asarray(from_fixed(i_raw, f), np.float32)
+    else:
+        u_emb, i_emb = u_raw, i_raw
+    return EmbResult(user_emb=u_emb, item_emb=i_emb, user_raw=u_raw,
+                     item_raw=i_raw, history=history,
+                     n_iters=cfg.n_iters, n_flushes=n_flushes)
+
+
+def fit(dataset, cfg: Optional[EmbConfig] = None) -> EmbResult:
+    """Train EMB over a bank-resident dataset + sharded tables; the
+    table placements are paid once and the per-step traffic is sparse
+    ids/rows only — the LazyDP execution model end to end."""
+    return run_steps(fit_steps(dataset, cfg))

@@ -155,7 +155,7 @@ _OPS: Dict[str, KernelOp] = {}
 #: kernel families auto-imported on first launch()/get_op() call; each
 #: family's ops.py calls register_op at import time.
 _FAMILIES = ("kmeans_assign", "gini_split", "lut_activation",
-             "quant_matmul", "flash_attention")
+             "quant_matmul", "flash_attention", "sparse_gather")
 _registered = False
 
 #: per-op launch counters (diagnostics + the trainer-routing tests)

@@ -1,0 +1,10 @@
+"""Sparse embedding gather / scatter-add kernel family (DESIGN.md §15).
+
+Ops: ``emb_gather`` (row lookup against a shard's placement map) and
+``emb_scatter_add`` (duplicate-index-safe batched row update).  Both are
+formulated as one-hot matmuls so the Pallas kernels and the jnp oracles
+share one reduction order and stay bit-exact — including int32
+fixed-point tables, where the accumulation is exact by construction.
+"""
+from .ops import emb_gather, emb_scatter_add  # noqa: F401
+from .ref import IDX_PAD, ROW_PAD_ID  # noqa: F401

@@ -1,0 +1,105 @@
+"""Pallas kernels: sparse embedding gather and scatter-add.
+
+TPU adaptation of the DPU-side sparse row access the EMB workload needs
+(DESIGN.md §15): the irregular MRAM row lookup becomes a one-hot matmul
+against the shard's placement-map id vector, which the MXU/VPU executes
+as dense math — the same trick the kmeans_assign family uses for argmin.
+The formulation is shared verbatim with ``ref.py`` so both backends
+reduce in the same order (bit-exactness is asserted per dtype by
+tests/test_emb.py, including adversarial duplicate-index patterns).
+
+Grid layout:
+
+* ``emb_gather``: lookups stream through the grid in ``block_b`` rows;
+  the shard's table and id vector stay pinned (every block needs every
+  row — the table IS the working set, exactly the paper's memory-bound
+  regime).
+* ``emb_scatter_add``: table rows stream through the grid in
+  ``block_r`` rows; the batch (idx + update rows) stays pinned and each
+  row block absorbs its whole update mass in ONE dot over the full
+  batch axis — no cross-grid accumulation, so duplicate indices are
+  handled inside a single exact reduction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..pallas_compat import pallas_call, pl
+
+
+def _dot(onehot, rows):
+    return jax.lax.dot_general(
+        onehot, rows, (((1,), (0,)), ((), ())),
+        preferred_element_type=rows.dtype)
+
+
+def _gather_kernel(tab_ref, ids_ref, idx_ref, o_ref):
+    tab = tab_ref[...]                                # (R, D) pinned
+    ids = ids_ref[...]                                # (1, R) pinned
+    idx = idx_ref[...]                                # (bB, 1)
+    onehot = (idx == ids).astype(tab.dtype)           # (bB, R)
+    o_ref[...] = _dot(onehot, tab)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def emb_gather(table: jnp.ndarray, ids: jnp.ndarray, idx: jnp.ndarray,
+               *, block_b: int = 256,
+               interpret: bool = False) -> jnp.ndarray:
+    """[R, D] table + int32 [R] ids, looked up by int32 [B] idx -> [B, D]."""
+    r, d = table.shape
+    (b,) = idx.shape
+    bb = min(block_b, b)
+    assert b % bb == 0, (b, bb)
+    return pallas_call(
+        _gather_kernel,
+        grid=(b // bb,),
+        in_specs=[
+            pl.BlockSpec((r, d), lambda i: (0, 0)),   # table pinned
+            pl.BlockSpec((1, r), lambda i: (0, 0)),   # ids pinned
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bb, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, d), table.dtype),
+        dimension_semantics=("arbitrary",),
+        interpret=interpret,
+    )(table, ids.reshape(1, r), idx.reshape(b, 1))
+
+
+def _scatter_kernel(tab_ref, ids_ref, idx_ref, upd_ref, o_ref):
+    tab = tab_ref[...]                                # (bR, D)
+    ids = ids_ref[...]                                # (bR, 1)
+    idx = idx_ref[...]                                # (1, B) pinned
+    upd = upd_ref[...]                                # (B, D) pinned
+    onehot = (ids == idx).astype(tab.dtype)           # (bR, B)
+    o_ref[...] = tab + _dot(onehot, upd.astype(tab.dtype))
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def emb_scatter_add(table: jnp.ndarray, ids: jnp.ndarray,
+                    idx: jnp.ndarray, upd: jnp.ndarray, *,
+                    block_r: int = 256,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Segment-sum ``upd`` rows [B, D] into [R, D] table slots keyed by
+    global id match; duplicate idx entries accumulate."""
+    r, d = table.shape
+    (b,) = idx.shape
+    assert upd.shape == (b, d), (upd.shape, (b, d))
+    br = min(block_r, r)
+    assert r % br == 0, (r, br)
+    return pallas_call(
+        _scatter_kernel,
+        grid=(r // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda i: (i, 0)),
+            pl.BlockSpec((br, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, b), lambda i: (0, 0)),   # batch ids pinned
+            pl.BlockSpec((b, d), lambda i: (0, 0)),   # updates pinned
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, d), table.dtype),
+        dimension_semantics=("arbitrary",),
+        interpret=interpret,
+    )(table, ids.reshape(r, 1), idx.reshape(1, b), upd)

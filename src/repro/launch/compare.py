@@ -32,7 +32,7 @@ import time
 from repro.api import HierarchicalCostModel, get_workload, make_system
 from repro.obs import Column, render_table, write_json
 from repro.data.synthetic import (make_blobs, make_classification,
-                                  make_linear_dataset)
+                                  make_linear_dataset, make_recsys)
 
 SYSTEMS = ("pim", "host", "gpu-model")
 
@@ -61,6 +61,12 @@ PLAN = [
     {"workload": "kmeans", "versions": {"pim": "int16", "host": "fp32",
                                         "gpu-model": "fp32"},
      "cost": ("kme", "int16")},
+    # the EMB extension (DESIGN.md §15): PIM runs the Q(frac_bits)
+    # fixed-point tables with a deferred-update window, the
+    # processor-centric targets the eager fp32 baseline
+    {"workload": "emb", "versions": {"pim": "int32", "host": "fp32",
+                                     "gpu-model": "fp32"},
+     "cost": ("emb", "int32")},
 ]
 
 
@@ -70,6 +76,10 @@ def _make_data(workload: str, n: int, f: int, seed: int = 0):
         return X, None
     if workload == "dtree":
         return make_classification(n, f, seed=seed, class_sep=1.4)
+    if workload == "emb":
+        # f rides as the embedding dim elsewhere; the pair width is 2
+        return make_recsys(n, n_users=max(64, n // 16),
+                           n_items=max(48, n // 24), dim=f, seed=seed)
     X, y, _ = make_linear_dataset(n, f, seed=seed)
     return X, y
 
@@ -79,11 +89,17 @@ def _shapes(tiny: bool) -> dict:
         return {"linreg": (1024, 8, {"n_iters": 30}),
                 "logreg": (1024, 8, {"n_iters": 30}),
                 "dtree": (2048, 8, {"max_depth": 4}),
-                "kmeans": (1024, 8, {"n_clusters": 4, "max_iter": 15})}
+                "kmeans": (1024, 8, {"n_clusters": 4, "max_iter": 15}),
+                "emb": (1024, 4, {"n_iters": 30, "batch": 32, "dim": 4,
+                                  "lr": 1.0, "frac_bits": 12,
+                                  "flush_every": 4})}
     return {"linreg": (8192, 16, {"n_iters": 300}),
             "logreg": (8192, 16, {"n_iters": 300}),
             "dtree": (60_000, 16, {"max_depth": 10}),
-            "kmeans": (20_000, 16, {"n_clusters": 16, "max_iter": 100})}
+            "kmeans": (20_000, 16, {"n_clusters": 16, "max_iter": 100}),
+            "emb": (16_384, 8, {"n_iters": 300, "batch": 256, "dim": 8,
+                                "lr": 1.0, "frac_bits": 12,
+                                "flush_every": 8})}
 
 
 def _iterations(workload: str, result, params: dict) -> int:
@@ -137,7 +153,9 @@ def run_compare(tiny: bool = False, cores: int = 16,
             if kind == "pim":
                 cost_wl, cost_ver = plan["cost"]
                 model = HierarchicalCostModel(system.topology)
-                kern = params.get("n_clusters", 16)
+                # the model's free k knob: cluster count (KME) or
+                # minibatch size (EMB); inert for the GD workloads
+                kern = params.get("n_clusters", params.get("batch", 16))
                 kernel_s = iters * model.workload_seconds(
                     cost_wl, cost_ver, n, f, cores,
                     system.config.n_threads, k=kern)

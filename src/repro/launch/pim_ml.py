@@ -29,7 +29,7 @@ import time
 from repro.api import (get_workload, list_workloads, make_estimator,
                        make_system)
 from repro.data.synthetic import (make_blobs, make_classification,
-                                  make_linear_dataset)
+                                  make_linear_dataset, make_recsys)
 from repro.obs import Column
 
 #: per-fit table columns (repro.obs.format — the shared formatter the
@@ -58,6 +58,11 @@ def _make_data(workload: str, n: int, f: int, seed: int):
         return X, None
     if workload == "dtree":
         return make_classification(n, f, seed=seed, class_sep=1.4)
+    if workload == "emb":
+        # --features rides as the embedding dim; the pair width is 2
+        return make_recsys(n, n_users=max(64, n // 16),
+                           n_items=max(48, n // 24), dim=max(2, f),
+                           seed=seed)
     X, y, _ = make_linear_dataset(n, f, seed=seed)
     return X, y
 

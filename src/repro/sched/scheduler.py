@@ -84,8 +84,14 @@ class JobState(enum.Enum):
 #: cost-model routing: workload registry name -> (model workload key,
 #: version selector).  Unknown workloads simply skip cycle accounting.
 _COST_KEYS = {"linreg": "lin", "logreg": "log", "dtree": "dtr",
-              "kmeans": "kme"}
+              "kmeans": "kme", "emb": "emb"}
 _COST_VERSIONS = {"dtree": "fp32", "kmeans": "int16"}
+
+
+def _cost_k(params: dict) -> int:
+    """The cost model's free ``k`` knob: cluster count for KME,
+    minibatch size for EMB, inert (16) elsewhere."""
+    return params.get("n_clusters", params.get("batch", 16))
 
 
 class SloViolation(RuntimeError):
@@ -270,7 +276,7 @@ def _modeled_step_seconds(handle: JobHandle, dataset: PimDataset,
     return model.step_seconds(
         wl_key, version, dataset.n, dataset.n_features,
         n_cores=slice_.config.n_cores, n_threads=slice_.config.n_threads,
-        k=handle.spec.params.get("n_clusters", 16))
+        k=_cost_k(handle.spec.params))
 
 
 def _estimate_job_seconds(workload_name: str, spec: TrainerSpec, data,
@@ -298,7 +304,7 @@ def _estimate_job_seconds(workload_name: str, spec: TrainerSpec, data,
             wl_key, version, n, n_features,
             n_iters=int(spec.params.get("n_iters", 100)),
             n_cores=n_cores, n_threads=system.config.n_threads,
-            k=spec.params.get("n_clusters", 16))
+            k=_cost_k(spec.params))
     except (KeyError, ValueError):
         return 0.0
 

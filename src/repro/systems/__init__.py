@@ -19,6 +19,7 @@ from .base import (ChunkBoundary, ChunkPipeline, ChunkTick, FabricReduce,
                    HierarchicalReduce, HostReduce, ReduceStrategy, ReduceVia,
                    StepProgram, System, TransferStats, chunk_schedule,
                    resolve_reduce_strategy, run_steps)
+from .compress import CompressedReduce, ef_quantize, quantize_rows
 from .gpu_model import GpuModelConfig, GpuModelReport, ModeledGpuSystem
 from .host import HostConfig, HostSlice, HostSystem
 from .pim import (DPU_FREQ_HZ, DPU_MRAM_BYTES_PER_CYCLE, DPU_OP_CYCLES,
@@ -56,7 +57,7 @@ def make_system(kind: str = "pim", **config_kwargs) -> System:
 
 
 __all__ = [
-    "ChunkBoundary", "ChunkPipeline", "ChunkTick",
+    "ChunkBoundary", "ChunkPipeline", "ChunkTick", "CompressedReduce",
     "DPU_DMA_SEGMENT_BYTES", "DPU_DMA_SETUP_CYCLES", "DPU_FREQ_HZ",
     "DPU_MRAM_BYTES", "DPU_MRAM_BYTES_PER_CYCLE", "DPU_OP_CYCLES",
     "DPU_PIPELINE_SATURATION_THREADS", "DPU_WRAM_BYTES", "DpuCostModel",
@@ -66,6 +67,7 @@ __all__ = [
     "HostReduce", "HostSlice", "HostSystem", "ModeledGpuSystem",
     "PimConfig", "PimSystem", "PimTopology", "ReduceStrategy", "ReduceVia",
     "SYSTEM_KINDS", "StepProgram", "System", "TransferStats",
+    "ef_quantize", "quantize_rows",
     "WORKLOAD_STORAGE_DTYPE", "chunk_schedule", "default_rank_size",
     "make_system",
     "resolve_reduce_strategy", "run_steps", "workload_element_bytes",

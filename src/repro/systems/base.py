@@ -114,6 +114,15 @@ class TransferStats:
     #: model prices and contention-aware placement tries to localize.
     rank_local_bytes: int = 0
     cross_rank_bytes: int = 0
+    #: EMB deferred-update accounting (DESIGN.md §15): ``flush_bytes``
+    #: is the logical sparse update payload (ids + delta rows) shipped
+    #: to the table shards by eager applies and deferred flushes alike —
+    #: the counter the deferred-vs-eager traffic claim is asserted on.
+    flush_bytes: int = 0
+    #: actual wire bytes moved by int8 error-feedback compression
+    #: (CompressedReduce and compressed EMB flushes) in place of the
+    #: uncompressed payload counted above / in the reduce legs.
+    compressed_bytes: int = 0
 
     def reset(self) -> None:
         for field in dataclasses.fields(TransferStats):
@@ -573,6 +582,15 @@ class System:
         fits / restarts / sweeps reuse one placement per view."""
         from ..api.dataset import PimDataset  # local import: api -> systems
         return PimDataset(self, X, y)
+
+    def put_table(self, weights, *, placement: str = "mod",
+                  seed: int = 0) -> "Any":
+        """Row-shard an embedding table across this system's bank
+        extents ONCE and return a
+        :class:`repro.api.table.ShardedTable` handle (the PimDataset
+        sibling for sharded model state — DESIGN.md §15.1)."""
+        from ..api.table import ShardedTable  # local import: api -> systems
+        return ShardedTable(self, weights, placement=placement, seed=seed)
 
     def shard_rows(self, x: np.ndarray, pad_value=0) -> jnp.ndarray:
         """Partition rows: (n, ...) -> (n_shards, n_per_shard, ...)."""

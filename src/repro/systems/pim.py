@@ -214,6 +214,8 @@ WORKLOAD_STORAGE_DTYPE: dict[tuple[str, str], str] = {
     ("dtr", "fp32"): "fp32",
     ("kme", "int16"): "int16",
     ("kme", "fp32"): "fp32",
+    ("emb", "fp32"): "fp32",     # ShardedTable float shards
+    ("emb", "int32"): "int32",   # ShardedTable Q(frac_bits) shards
 }
 
 

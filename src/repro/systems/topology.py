@@ -277,11 +277,28 @@ def _dtr_leg_bytes(n_features: int, k: int) -> Tuple[float, float]:
     return 64.0, 4.0 * 2 * 32      # command; 32-bin class histograms
 
 
+#: modeled embedding width for EMB leg/leaf pricing — the dataset's
+#: n_features is the (user, item) pair width (2), not the table dim,
+#: so the model prices a representative dim (the trainer default)
+EMB_MODEL_DIM = 8
+
+
+def _emb_leg_bytes(n_features: int, k: int) -> Tuple[float, float]:
+    """EMB per-step legs, ``k`` = minibatch size B (DESIGN.md §15.6):
+    down, the broadcast minibatch (2 id columns + targets, int32/f32);
+    up, the two gathered (B, dim) row blocks plus the relayed targets.
+    The deferred flush payload is charged separately by the trainer
+    (``TransferStats.flush_bytes``) — it amortizes over the window, so
+    it is not part of the per-step launch price."""
+    return 4.0 * 3 * k, 4.0 * k * (2 * EMB_MODEL_DIM + 1)
+
+
 WORKLOAD_LEG_BYTES = {
     "lin": _gd_leg_bytes,
     "log": _gd_leg_bytes,
     "kme": _kme_leg_bytes,
     "dtr": _dtr_leg_bytes,
+    "emb": _emb_leg_bytes,
 }
 
 
@@ -400,6 +417,15 @@ class HierarchicalCostModel:
             instr = self.dtr_split_evaluate_instr(n_pc) * n_features
         elif workload == "kme":
             instr = self.kme_instr(n_pc, n_features, k)
+        elif workload == "emb":
+            # k = minibatch size; each sample is one dot + one axpy per
+            # table over EMB_MODEL_DIM-wide rows — the same op mix as a
+            # LIN step over that many features — plus a shard-local id
+            # probe per lookup.  MRAM traffic is the touched rows, not
+            # the resident shard (sparse access is the point).
+            elem = workload_element_bytes("emb", version)
+            instr = k * 2 * self.lin_instr(version, EMB_MODEL_DIM)
+            bytes_ = k * 2 * EMB_MODEL_DIM * elem + n_pc * 4
         else:
             raise ValueError(workload)
         return instr, bytes_

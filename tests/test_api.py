@@ -43,8 +43,9 @@ def _tiny_fit(name, version, pim):
     return est, X, y
 
 
-def test_registry_lists_all_four_workloads():
-    assert set(list_workloads()) == {"linreg", "logreg", "dtree", "kmeans"}
+def test_registry_lists_all_workloads():
+    assert set(list_workloads()) == {"linreg", "logreg", "dtree", "kmeans",
+                                     "emb"}
 
 
 @pytest.mark.parametrize("name", ["linreg", "logreg", "dtree", "kmeans"])

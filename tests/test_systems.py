@@ -309,13 +309,13 @@ def test_compare_tiny_produces_three_way_table(tmp_path):
     rows = record["rows"]
     seen = {(r["workload"], r["system"]) for r in rows}
     assert seen == {(w, s)
-                    for w in ("linreg", "logreg", "dtree", "kmeans")
+                    for w in ("linreg", "logreg", "dtree", "kmeans", "emb")
                     for s in ("pim", "host", "gpu-model")}
     for r in rows:
         assert r["modeled_s"] > 0 and r["wall_s"] >= 0
     # host and gpu-model rows share numerics -> identical scores
     by_key = {(r["workload"], r["system"]): r for r in rows}
-    for w in ("linreg", "logreg", "dtree", "kmeans"):
+    for w in ("linreg", "logreg", "dtree", "kmeans", "emb"):
         assert by_key[(w, "host")]["score"] == \
             by_key[(w, "gpu-model")]["score"]
 
@@ -413,8 +413,8 @@ def test_compare_rerun_other_cores_and_shape_table(tmp_path):
     shapes themselves run via `make bench` — fig13_17_compare)."""
     from repro.launch.compare import _shapes, run_compare
     record = run_compare(tiny=True, cores=8, seed=1)
-    assert len(record["rows"]) == 12
+    assert len(record["rows"]) == 15
     full = _shapes(tiny=False)
-    assert set(full) == {"linreg", "logreg", "dtree", "kmeans"}
+    assert set(full) == {"linreg", "logreg", "dtree", "kmeans", "emb"}
     for n, f, params in full.values():
         assert n > 0 and f > 0 and params
